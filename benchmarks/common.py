@@ -1,0 +1,299 @@
+"""Shared benchmark harness: builds (and caches) the three models of the
+paper's Table 1 — Pre-trained, Standard FT, SAGE FT — on the procedural
+corpus, plus the text/image towers used for grouping and the CLIP-proxy.
+
+Scale knob: BENCH_FULL=1 env -> longer training / more eval prompts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.config import OptimConfig, SageConfig, get_config
+from repro.core import trainer
+from repro.core.schedule import make_schedule
+from repro.core.shared_sampling import independent_sample, shared_sample
+from repro.data.grouped import build_grouped_dataset
+from repro.data.synthetic import ShapesDataset
+from repro.models import dit, text_encoder as te, vae as vae_lib
+
+FULL = bool(int(os.environ.get("BENCH_FULL", "0")))
+CACHE = pathlib.Path("experiments/bench_cache")
+
+RES = 16                      # image resolution (latent 8x8 via /2 patch...)
+N_DATA = 192 if FULL else 96
+BASE_STEPS = 500 if FULL else 250
+FT_STEPS = 350 if FULL else 150
+TOWER_STEPS = 600 if FULL else 400
+EVAL_PROMPTS = 60 if FULL else 36
+
+SCHED = make_schedule(1000)
+MODEL_CFG = get_config("sage-dit", smoke=True)          # latent 8x8x4
+SAGE = SageConfig(total_steps=30, share_ratio=0.3, guidance_scale=2.0,
+                  tau_min=0.6, tau_max=0.9)
+OPT = OptimConfig(lr=1e-3)
+TEXT_CFG = te.text_cfg(dim=MODEL_CFG.cond_dim, layers=2)
+K_GROUPS, GROUP_N = 4, 3
+
+
+# ---------------------------------------------------------------------------
+# towers + dataset
+# ---------------------------------------------------------------------------
+
+def train_towers(init_only: bool = False):
+    kp = jax.random.PRNGKey(0)
+    tp = te.init_text(kp, TEXT_CFG)
+    ip = te.init_image(jax.random.fold_in(kp, 1), dim=MODEL_CFG.cond_dim,
+                       image=RES, layers=TEXT_CFG.n_layers)
+    if init_only:
+        return {"text": tp, "image": ip}
+    ds = ShapesDataset(res=RES, seed=3)
+    from repro.optim.optimizers import adamw, apply_updates
+    opt = adamw()
+    state = opt.init({"t": tp, "i": ip})
+
+    @jax.jit
+    def step(tp, ip, state, tokens, images):
+        def loss(both):
+            return te.contrastive_loss(both["t"], both["i"], TEXT_CFG,
+                                       tokens, images)
+        l, g = jax.value_and_grad(loss)({"t": tp, "i": ip})
+        upd, state = opt.update(g, state, {"t": tp, "i": ip}, 1e-3)
+        new = apply_updates({"t": tp, "i": ip}, upd)
+        return new["t"], new["i"], state, l
+
+    B = 32
+    for i in range(TOWER_STEPS):
+        imgs, prompts = ds.batch((i * B) % 2048, B)
+        toks = te.tokenize(prompts, max_len=MODEL_CFG.cond_len)
+        tp, ip, state, l = step(tp, ip, state, toks,
+                                jnp.asarray(imgs, jnp.float32))
+    return {"text": tp, "image": ip}
+
+
+@functools.lru_cache(maxsize=1)
+def towers():
+    path = CACHE / "towers"
+    if latest_step(str(path)) is not None:
+        return restore_checkpoint(str(path), 0, train_towers(init_only=True))
+    t = train_towers()
+    save_checkpoint(str(path), 0, t)
+    return t
+
+
+def encode_prompts(prompts):
+    t = towers()
+    toks = te.tokenize(prompts, max_len=MODEL_CFG.cond_len)
+    feats, pooled = te.encode_text(t["text"], TEXT_CFG, toks)
+    return np.asarray(feats), np.asarray(pooled)
+
+
+def quantile_taus(pooled: np.ndarray, qlo: float, qhi: float):
+    """Map the paper's (tau_min, tau_max] similarity RANGE onto this text
+    tower's own similarity distribution: thresholds are corpus quantiles of
+    off-diagonal cosine similarity.  (The paper's absolute 0.6/0.9 values
+    are CLIP-calibrated and do not transfer to a different embedding space —
+    DESIGN.md §2.)"""
+    from repro.core import grouping as gp
+    sim = gp.similarity_matrix(pooled)
+    off = sim[np.triu_indices_from(sim, 1)]
+    lo = float(np.quantile(off, qlo))
+    hi = float(np.quantile(off, qhi)) if qhi < 1.0 else 1.01
+    return lo, max(hi, lo + 1e-4)
+
+
+@functools.lru_cache(maxsize=8)
+def dataset(qlo: float = 0.5, qhi: float = 1.0):
+    """Grouped dataset with quantile-band similarity thresholds."""
+    _, pooled = encode_prompts(tuple(
+        ShapesDataset(res=RES, seed=0).sample(i)[1] for i in range(N_DATA)))
+    lo, hi = quantile_taus(pooled, qlo, qhi)
+    return build_grouped_dataset(
+        lambda p: encode_prompts(p), n_items=N_DATA, res=RES,
+        tau_min=lo, tau_max=hi, group_max=GROUP_N, seed=0)
+
+
+def images_to_latents(images: np.ndarray) -> jnp.ndarray:
+    """RES images -> (RES/2, RES/2, 4) latents via space-to-depth + pad.
+
+    The paper's VAE role at benchmark scale: a fixed, invertible latent map
+    (the conv VAE exists in models/vae.py and is exercised by its example;
+    using a deterministic latent here keeps Table-1 runs minutes-fast and
+    metric differences attributable to sampling scheme, not VAE noise)."""
+    x = jnp.asarray(images, jnp.float32)
+    B, H, W, C = x.shape
+    x = x.reshape(B, H // 2, 2, W // 2, 2, C).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(B, H // 2, W // 2, 12)
+    return x[..., :4] * 1.5
+
+def latents_to_images(lat: jnp.ndarray) -> np.ndarray:
+    """Approximate inverse of images_to_latents (first channel block)."""
+    z = np.asarray(lat, np.float32) / 1.5
+    B, h, w, _ = z.shape
+    full = np.zeros((B, h, w, 12), np.float32)
+    full[..., :4] = z
+    full[..., 4:8] = z
+    full[..., 8:] = z
+    img = full.reshape(B, h, w, 2, 2, 3).transpose(0, 1, 3, 2, 4, 5)
+    return np.clip(img.reshape(B, h * 2, w * 2, 3), -1, 1)
+
+
+# ---------------------------------------------------------------------------
+# the three Table-1 models
+# ---------------------------------------------------------------------------
+
+def _grouped_batches(gd, seed=0):
+    while True:
+        got = False
+        for b in gd.iter_batches(K_GROUPS, GROUP_N, seed=seed):
+            got = True
+            z = images_to_latents(b["images"].reshape(-1, RES, RES, 3))
+            z = z.reshape(K_GROUPS, GROUP_N, RES // 2, RES // 2, 4)
+            yield {"z": z, "cond": jnp.asarray(b["cond"]),
+                   "mask": jnp.asarray(b["mask"])}
+        seed += 1
+        if not got:
+            raise RuntimeError("empty dataset")
+
+
+def train_base(init_only: bool = False):
+    state = trainer.init_state(MODEL_CFG, OPT, jax.random.PRNGKey(1))
+    if init_only:
+        return state["params"]
+    gd = dataset()
+    step = trainer.make_standard_train_step(MODEL_CFG, SCHED, OPT)
+    it = _grouped_batches(gd)
+    for i in range(BASE_STEPS):
+        b = next(it)
+        flat = {"z": b["z"].reshape(-1, *b["z"].shape[2:]),
+                "cond": b["cond"].reshape(-1, *b["cond"].shape[2:])}
+        state, m = step(state, flat, jax.random.PRNGKey(1000 + i))
+    return state["params"]
+
+
+@functools.lru_cache(maxsize=1)
+def model_pretrained():
+    path = CACHE / "base"
+    if latest_step(str(path)) is not None:
+        return restore_checkpoint(str(path), 0, train_base(init_only=True))
+    p = train_base()
+    save_checkpoint(str(path), 0, p)
+    return p
+
+
+def _finetune(kind: str):
+    base = model_pretrained()
+    state = trainer.init_state(MODEL_CFG, OPT, jax.random.PRNGKey(2),
+                               base_params=base)
+    gd = dataset()
+    it = _grouped_batches(gd, seed=7)
+    if kind == "sage":
+        step = trainer.make_sage_train_step(MODEL_CFG, SAGE, SCHED, OPT)
+        for i in range(FT_STEPS):
+            state, m = step(state, next(it), jax.random.PRNGKey(2000 + i))
+    else:
+        step = trainer.make_standard_train_step(MODEL_CFG, SCHED, OPT)
+        for i in range(FT_STEPS):
+            b = next(it)
+            flat = {"z": b["z"].reshape(-1, *b["z"].shape[2:]),
+                    "cond": b["cond"].reshape(-1, *b["cond"].shape[2:])}
+            state, m = step(state, flat, jax.random.PRNGKey(2000 + i))
+    return state["params"]
+
+
+@functools.lru_cache(maxsize=1)
+def model_standard_ft():
+    path = CACHE / "standard_ft"
+    if latest_step(str(path)) is not None:
+        return restore_checkpoint(str(path), 0, train_base(init_only=True))
+    p = _finetune("standard")
+    save_checkpoint(str(path), 0, p)
+    return p
+
+
+@functools.lru_cache(maxsize=1)
+def model_sage_ft():
+    path = CACHE / "sage_ft"
+    if latest_step(str(path)) is not None:
+        return restore_checkpoint(str(path), 0, train_base(init_only=True))
+    p = _finetune("sage")
+    save_checkpoint(str(path), 0, p)
+    return p
+
+
+MODELS = {"pretrained": model_pretrained, "standard_ft": model_standard_ft,
+          "sage_ft": model_sage_ft}
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+def evaluate_scheme(params, beta: float, qlo=0.5, qhi=1.0,
+                    total_steps=30, seed=11, shared_uncond=False,
+                    sampler="ddim"):
+    """Sample EVAL_PROMPTS prompts under the given sharing ratio and compute
+    FD-R / CLIP-proxy / diversity / cost saving."""
+    import dataclasses as dc
+    from repro.core import grouping as gp
+    from repro.core import metrics
+
+    gd = dataset(qlo, qhi)
+    eval_n = min(EVAL_PROMPTS, len(gd.prompts))
+    prompts = gd.prompts[:eval_n]
+    cond, pooled = gd.cond[:eval_n], gd.embeds[:eval_n]
+    tau_min, tau_max = quantile_taus(pooled, qlo, qhi)
+    sim = gp.similarity_matrix(pooled)
+    groups = gp.greedy_clique_groups(sim, tau_min, tau_max,
+                                     group_max=GROUP_N)
+    idx, mask = gp.pad_groups(groups, GROUP_N)
+    K, N = idx.shape
+
+    sage = dc.replace(SAGE, share_ratio=beta, total_steps=total_steps,
+                      shared_uncond_cfg=shared_uncond, sampler=sampler)
+    eps_fn = lambda z, t, c: dit.forward(params, MODEL_CFG, z, t, c)
+    null = jnp.zeros((MODEL_CFG.cond_len, MODEL_CFG.cond_dim))
+    H = MODEL_CFG.latent_size
+    cond_packed = jnp.asarray(cond)[idx.reshape(-1)].reshape(
+        K, N, *cond.shape[1:])
+
+    if beta == 0.0:
+        out = independent_sample(eps_fn, SCHED, sage, jax.random.PRNGKey(seed),
+                                 jnp.asarray(cond), null,
+                                 (H, H, MODEL_CFG.latent_channels))
+        lat = out["latents"]
+        gen = latents_to_images(lat)
+        group_imgs = gen[idx.reshape(-1)].reshape(K, N, RES, RES, 3)
+    else:
+        out = shared_sample(eps_fn, SCHED, sage, jax.random.PRNGKey(seed),
+                            cond_packed, jnp.asarray(mask), null,
+                            (H, H, MODEL_CFG.latent_channels))
+        lat = out["latents"].reshape(K * N, H, H, MODEL_CFG.latent_channels)
+        gen_members = latents_to_images(lat)
+        # scatter back to prompt order
+        gen = np.zeros((eval_n, RES, RES, 3), np.float32)
+        flat_idx = idx.reshape(-1)
+        flat_mask = mask.reshape(-1) > 0
+        gen[flat_idx[flat_mask]] = gen_members[flat_mask]
+        group_imgs = gen_members.reshape(K, N, RES, RES, 3)
+
+    t = towers()
+    img_emb = te.encode_image(t["image"], jnp.asarray(gen),
+                              dim=MODEL_CFG.cond_dim,
+                              layers=TEXT_CFG.n_layers)
+    real = gd.images[:eval_n]
+    fd = metrics.fd_r(jnp.asarray(real), jnp.asarray(gen))
+    clip_p = metrics.clip_proxy(jnp.asarray(pooled), img_emb)
+    div = metrics.group_diversity(jnp.asarray(group_imgs), jnp.asarray(mask))
+    cost = gp.cost_saving(groups, total_steps,
+                          int(round(total_steps * (1 - beta))))
+    return {"fd": fd, "clip": clip_p, "div": div,
+            "cost_saving": cost["saving"], "nfe": float(out["nfe"])}

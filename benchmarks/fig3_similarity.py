@@ -1,0 +1,30 @@
+"""Paper Fig. 3: metrics across prompt-similarity ranges (tau_min, tau_max)
+under the shared sampling scheme (beta fixed at 30%)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+# quantile bands of the corpus similarity distribution (low -> high
+# similarity), the tower-calibrated version of the paper's tau ranges
+RANGES = [(0.05, 0.45), (0.3, 0.7), (0.5, 0.9), (0.6, 1.0)]
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    for model_name in ("pretrained", "sage_ft", "standard_ft"):
+        params = common.MODELS[model_name]()
+        for (lo, hi) in RANGES:
+            t0 = time.time()
+            m = common.evaluate_scheme(params, beta=0.3, qlo=lo, qhi=hi)
+            dt = (time.time() - t0) * 1e6
+            rows.append((f"fig3/{model_name}/q{lo}-{hi}", dt,
+                         f"fd={m['fd']:.2f};clip={m['clip']:.4f};"
+                         f"div={m['div']:.4f}"))
+            print(f"{rows[-1][0]},{dt:.0f},{rows[-1][2]}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Fig. 4: metrics vs number of shared steps (of 30 total), models
+trained at beta=30%.  Includes the beyond-paper shared-uncond CFG variant."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+
+SHARED_STEPS = (3, 6, 9, 12, 15)
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    for model_name in ("standard_ft", "sage_ft"):
+        params = common.MODELS[model_name]()
+        for s in SHARED_STEPS:
+            beta = s / 30.0
+            t0 = time.time()
+            m = common.evaluate_scheme(params, beta=beta)
+            dt = (time.time() - t0) * 1e6
+            rows.append((f"fig4/{model_name}/shared{s}", dt,
+                         f"clip={m['clip']:.4f};div={m['div']:.4f};"
+                         f"save={m['cost_saving']:.3f}"))
+            print(f"{rows[-1][0]},{dt:.0f},{rows[-1][2]}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

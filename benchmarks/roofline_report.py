@@ -1,0 +1,52 @@
+"""Render experiments/dryrun/*.json into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import time
+
+
+def load(outdir="experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(f"{outdir}/*.json")):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def markdown_table(rows, mesh="16x16", variant="baseline"):
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | useful FLOPs | model GF | mem/dev GB |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r.get("variant", "baseline") != variant:
+            continue
+        mem = r.get("memory_analysis", {})
+        dev_gb = (mem.get("argument_size_in_bytes", 0)
+                  + mem.get("temp_size_in_bytes", 0)) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_term_s']:.2e} "
+            f"| {r['memory_term_s']:.2e} | {r['collective_term_s']:.2e} "
+            f"| {r['bottleneck']} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['model_flops_global']/1e9:.0f} | {dev_gb:.1f} |")
+    return "\n".join(out)
+
+
+def main(rows=None):
+    rows_out = rows if rows is not None else []
+    data = load()
+    t0 = time.time()
+    for r in data:
+        if r.get("variant", "baseline") != "baseline":
+            continue
+        rows_out.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            (time.time() - t0) * 1e6,
+            f"bottleneck={r['bottleneck']};compute={r['compute_term_s']:.2e};"
+            f"mem={r['memory_term_s']:.2e};coll={r['collective_term_s']:.2e}"))
+        print(f"{rows_out[-1][0]},0,{rows_out[-1][2]}", flush=True)
+    return rows_out
+
+
+if __name__ == "__main__":
+    print(markdown_table(load()))

@@ -1,0 +1,48 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig3,...]
+
+Prints ``name,us_per_call,derived`` CSV.  Quality benches train/cache the
+three Table-1 models on first run (experiments/bench_cache/)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (beyond_paper, cost_model, fig3_similarity,
+                            fig4_shared_steps, kernel_bench, roofline_report,
+                            table1_quality)
+    suites = {
+        "cost_model": cost_model.main,
+        "kernels": kernel_bench.main,
+        "roofline": roofline_report.main,
+        "table1": table1_quality.main,
+        "fig3": fig3_similarity.main,
+        "fig4": fig4_shared_steps.main,
+        "beyond": beyond_paper.main,
+    }
+    print("name,us_per_call,derived")
+    rows = []
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn(rows)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{e!r}", file=sys.stderr)
+            raise
+        print(f"# suite {name} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

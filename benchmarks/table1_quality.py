@@ -1,0 +1,28 @@
+"""Paper Table 1: Pre-trained / Standard FT / SAGE FT under independent and
+shared sampling at beta in {20, 30, 40}%.  Emits one CSV row per cell."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    schemes = [("independent", 0.0), ("shared_b20", 0.2),
+               ("shared_b30", 0.3), ("shared_b40", 0.4)]
+    for model_name, model_fn in common.MODELS.items():
+        params = model_fn()
+        for scheme, beta in schemes:
+            t0 = time.time()
+            m = common.evaluate_scheme(params, beta)
+            dt = (time.time() - t0) * 1e6
+            rows.append((f"table1/{model_name}/{scheme}", dt,
+                         f"fd={m['fd']:.2f};clip={m['clip']:.4f};"
+                         f"div={m['div']:.4f};save={m['cost_saving']:.3f}"))
+            print(f"{rows[-1][0]},{dt:.0f},{rows[-1][2]}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

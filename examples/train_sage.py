@@ -1,0 +1,102 @@
+"""End-to-end driver: train a ~100M-param DiT with the SAGE objective
+(Alg. 2 / Eq. 3) for a few hundred steps on the grouped procedural corpus.
+
+Defaults run the 100M config (158M params measured) for 200 steps — sized
+for the TPU mesh; on this CPU container one step is ~200 s, so pass
+--smoke for a fast sanity run (the identical code path at test size).
+
+    PYTHONPATH=src python examples/train_sage.py --steps 200 [--smoke]
+    PYTHONPATH=src python examples/train_sage.py --lora 8      # LoRA FT
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.config import OptimConfig, SageConfig, get_config
+from repro.core import trainer
+from repro.core.schedule import make_schedule
+from repro.data.grouped import build_grouped_dataset
+from repro.models import text_encoder as te
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--lora", type=int, default=0)
+    ap.add_argument("--k-groups", type=int, default=4)
+    ap.add_argument("--group-size", type=int, default=3)
+    ap.add_argument("--ckpt", default="experiments/sage_dit_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("sage-dit-100m", smoke=args.smoke)
+    sage = SageConfig(total_steps=30, share_ratio=0.3, tau_min=0.4)
+    sched = make_schedule(1000)
+    opt = OptimConfig(lr=3e-4 if not args.lora else 1e-3)
+    res = cfg.latent_size * cfg.patch  # images decode at latent*patch here
+
+    print(f"model={cfg.name} d={cfg.d_model} L={cfg.n_layers} "
+          f"lora={args.lora}")
+
+    tc = te.text_cfg(dim=cfg.cond_dim, layers=2)
+    tp = te.init_text(jax.random.PRNGKey(0), tc)
+
+    def encode(prompts):
+        toks = te.tokenize(prompts, max_len=cfg.cond_len)
+        return te.encode_text(tp, tc, toks)
+
+    gd = build_grouped_dataset(encode, n_items=128, res=res,
+                               tau_min=sage.tau_min, tau_max=0.95,
+                               group_max=args.group_size)
+    print(f"dataset: {len(gd.prompts)} pairs, {len(gd.groups)} groups, "
+          f"sizes {np.bincount([len(g) for g in gd.groups])[1:]}")
+
+    state = trainer.init_state(cfg, opt, jax.random.PRNGKey(1),
+                               lora_rank=args.lora)
+    step_fn = trainer.make_sage_train_step(cfg, sage, sched, opt,
+                                           lora_rank=args.lora)
+
+    def latents(images):
+        x = jnp.asarray(images, jnp.float32)
+        B, H, W, C = x.shape
+        p = cfg.patch
+        x = x.reshape(B, H // p, p, W // p, p, C)
+        x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, H // p, W // p, -1)
+        return x[..., :cfg.latent_channels]
+
+    it, losses, t0 = None, [], time.time()
+    for i in range(args.steps):
+        if it is None:
+            it = gd.iter_batches(args.k_groups, args.group_size, seed=i)
+        try:
+            b = next(it)
+        except StopIteration:
+            it = None
+            continue
+        z = latents(b["images"].reshape(-1, res, res, 3)).reshape(
+            args.k_groups, args.group_size, cfg.latent_size,
+            cfg.latent_size, cfg.latent_channels)
+        batch = {"z": z, "cond": jnp.asarray(b["cond"]),
+                 "mask": jnp.asarray(b["mask"])}
+        state, m = step_fn(state, batch, jax.random.PRNGKey(100 + i))
+        losses.append(float(m["loss"]))
+        if i % 20 == 0:
+            print(f"step {i:4d} loss={losses[-1]:.4f} "
+                  f"shared={float(m['shared']):.4f} "
+                  f"soft={float(m['soft']):.4f} "
+                  f"branch={float(m['branch']):.4f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+
+    print(f"final loss {np.mean(losses[-10:]):.4f} "
+          f"(first 10: {np.mean(losses[:10]):.4f})")
+    save_checkpoint(args.ckpt, args.steps,
+                    state["lora"] if args.lora else state["params"])
+    print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Dependency-free checkpointing: pytrees -> flat .npz + JSON treedef.
+
+Layout:  <dir>/step_<n>/arrays.npz  +  <dir>/step_<n>/tree.json
+Restores onto host then (optionally) device_put with given shardings —
+adequate for the single-host substrate here; a real deployment would swap
+in tensorstore/orbax behind the same two calls.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, str(treedef)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    path = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    path.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays, dtypes = {}, []
+    for i, x in enumerate(leaves):
+        a = np.asarray(x)
+        dtypes.append(str(a.dtype))
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            a = a.view(np.uint16)         # npz has no bf16; round-trip raw
+        arrays[f"a{i}"] = a
+    np.savez(path / "arrays.npz", **arrays)
+    meta = {"n": len(leaves), "step": step, "dtypes": dtypes}
+    (path / "tree.json").write_text(json.dumps(meta))
+    return str(path)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = pathlib.Path(ckpt_dir)
+    if not p.exists():
+        return None
+    steps = [int(d.name.split("_")[1]) for d in p.iterdir()
+             if d.name.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any,
+                       shardings: Any = None) -> Any:
+    """``like`` supplies the treedef; shardings optionally re-place leaves."""
+    import ml_dtypes
+    path = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    data = np.load(path / "arrays.npz")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    meta = json.loads((path / "tree.json").read_text())
+    n = meta["n"]
+    assert n == len(leaves_like), (n, len(leaves_like))
+    leaves = []
+    for i in range(n):
+        a = data[f"a{i}"]
+        if meta["dtypes"][i] == "bfloat16":
+            a = a.view(ml_dtypes.bfloat16)
+        leaves.append(a)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree

@@ -1,0 +1,30 @@
+"""Architecture registry — one module per assigned architecture.
+
+Importing this package registers every config with ``repro.config``.
+"""
+from repro.configs import (  # noqa: F401
+    qwen1_5_32b,
+    mamba2_780m,
+    phi3_mini_3_8b,
+    granite_20b,
+    seamless_m4t_large_v2,
+    llama_3_2_vision_11b,
+    qwen3_32b,
+    kimi_k2_1t_a32b,
+    recurrentgemma_2b,
+    deepseek_v2_lite_16b,
+    sage_dit,
+)
+
+ASSIGNED = [
+    "qwen1.5-32b",
+    "mamba2-780m",
+    "phi3-mini-3.8b",
+    "granite-20b",
+    "seamless-m4t-large-v2",
+    "llama-3.2-vision-11b",
+    "qwen3-32b",
+    "kimi-k2-1t-a32b",
+    "recurrentgemma-2b",
+    "deepseek-v2-lite-16b",
+]

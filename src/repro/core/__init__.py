@@ -1,0 +1,2 @@
+"""SAGE core — the paper's contribution (Alg. 1 shared sampling, Alg. 2
+training, Eq. 3 loss), plus grouping, guidance, LoRA, metrics."""

@@ -1,0 +1,116 @@
+"""Semantic grouping of prompts (paper §2.2 + §3.1 dataset construction).
+
+Prompts are nodes; edges connect pairs whose embedding cosine similarity
+falls in (tau_min, tau_max].  Sampling-time grouping uses a greedy clique
+cover (every pair inside a group must be an edge — exactly the paper's
+constraint; exact max-clique enumeration is NP-hard, greedy is the
+deployable choice and is what we benchmark).  Group sizes are clamped to
+[group_min, group_max]; leftovers become singleton groups (independent
+sampling).
+
+Host-side numpy — grouping is control-flow-heavy graph work that belongs on
+the scheduler CPU, not the TPU (DESIGN.md §2).  The device-side math
+(masked group means) lives in kernels/group_mean.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def similarity_matrix(embeds: np.ndarray) -> np.ndarray:
+    """embeds (M, d), L2-normalised -> (M, M) cosine similarity."""
+    e = np.asarray(embeds, np.float32)
+    e = e / np.maximum(np.linalg.norm(e, axis=-1, keepdims=True), 1e-8)
+    return e @ e.T
+
+
+def greedy_clique_groups(sim: np.ndarray, tau_min: float,
+                         tau_max: float = 1.01, group_max: int = 5
+                         ) -> List[List[int]]:
+    """Greedy clique cover of the threshold graph.
+
+    Nodes are visited in decreasing degree order; each seed greedily absorbs
+    the most-similar compatible candidates (compatible = edge to EVERY
+    current member, the paper's pairwise constraint).
+    """
+    M = sim.shape[0]
+    adj = (sim > tau_min) & (sim <= tau_max)
+    np.fill_diagonal(adj, False)
+    degree = adj.sum(1)
+    unassigned = np.ones(M, bool)
+    groups: List[List[int]] = []
+    for seed in np.argsort(-degree):
+        if not unassigned[seed]:
+            continue
+        members = [int(seed)]
+        unassigned[seed] = False
+        cand_mask = adj[seed] & unassigned
+        # highest-similarity-first absorption
+        for cand in np.argsort(-sim[seed]):
+            if len(members) >= group_max:
+                break
+            if not cand_mask[cand]:
+                continue
+            if all(adj[cand, m] for m in members):
+                members.append(int(cand))
+                unassigned[cand] = False
+        groups.append(members)
+    return groups
+
+
+def pad_groups(groups: Sequence[Sequence[int]], group_size: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Static-shape packing: (K, N) member indices + (K, N) validity mask.
+
+    Groups larger than N are split; padding repeats the first member (its
+    compute is masked out of all reductions).
+    """
+    flat: List[List[int]] = []
+    for g in groups:
+        for i in range(0, len(g), group_size):
+            flat.append(list(g[i:i + group_size]))
+    K = len(flat)
+    idx = np.zeros((K, group_size), np.int32)
+    mask = np.zeros((K, group_size), np.float32)
+    for k, g in enumerate(flat):
+        idx[k, :len(g)] = g
+        idx[k, len(g):] = g[0]
+        mask[k, :len(g)] = 1.0
+    return idx, mask
+
+
+def cost_saving(groups: Sequence[Sequence[int]], total_steps: int,
+                branch_point: int, cfg_evals: int = 2,
+                shared_uncond: bool = False) -> dict:
+    """Paper's cost-saving ratio: reduction in total sampler NFE relative to
+    independent sampling of the same M prompts.
+
+    independent:   M * T * cfg_evals
+    shared (ours): K * (T - T*) * cfg_evals    (shared phase)
+                 + sum_k N_k * T* * e_b        (branch phase)
+    where e_b = cfg_evals, or 1 + 1/N_k with the beyond-paper shared-uncond
+    CFG (the unconditional eval is group-level, amortised over members).
+    """
+    M = sum(len(g) for g in groups)
+    K = len(groups)
+    T, Ts = total_steps, branch_point
+    indep = M * T * cfg_evals
+    shared_phase = K * (T - Ts) * cfg_evals
+    if shared_uncond:
+        branch_phase = sum((len(g) + 1) * Ts for g in groups)
+    else:
+        branch_phase = sum(len(g) * Ts * cfg_evals for g in groups)
+    ours = shared_phase + branch_phase
+    return {"M": M, "K": K, "nfe_independent": indep, "nfe_shared": ours,
+            "saving": 1.0 - ours / indep}
+
+
+def adaptive_branch_point(sim_min: float, total_steps: int,
+                          beta_max: float = 0.5) -> int:
+    """Beyond-fixed-T* option the paper mentions (§2.2): share more steps
+    when the group is tighter.  Linear map sim in [0,1] -> beta in
+    [0, beta_max]; returns T* (steps remaining for the branch phase)."""
+    beta = float(np.clip(sim_min, 0.0, 1.0)) * beta_max
+    return int(round(total_steps * (1.0 - beta)))

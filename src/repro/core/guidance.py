@@ -1,0 +1,10 @@
+"""Classifier-free guidance utilities."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cfg_combine(eps_uncond: jnp.ndarray, eps_cond: jnp.ndarray,
+                scale: float) -> jnp.ndarray:
+    """eps = eps_u + w * (eps_c - eps_u).  (paper: w = 7.5, DDIM.)"""
+    return eps_uncond + scale * (eps_cond - eps_uncond)

@@ -1,0 +1,65 @@
+"""LoRA adapters (paper §3.1: SD v1.5 fine-tuned with LoRA).
+
+Functional formulation: a LoRA pytree mirrors the base params on selected
+2-D weights; ``merge(base, lora)`` produces effective params
+W + (alpha/r) * A @ B for the forward pass.  Training optimises ONLY the
+LoRA pytree (gradients flow through merge), so optimizer state is r-rank
+sized — same memory story as the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def default_filter(path: Tuple, leaf) -> bool:
+    """Adapt matmul weights — 2-D, or 3-D with a leading stack dim (scanned
+    layer blocks).  Skips norms/embeddings/positions/adaLN tables."""
+    names = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+    if leaf.ndim not in (2, 3):
+        return False
+    if min(leaf.shape[-2:]) < 8:
+        return False
+    skip = ("embed", "pos", "adaln", "norm", "ln", "conv", "lam", "router")
+    return not any(s in names for s in skip)
+
+
+def init_lora(params: Params, rank: int, key,
+              filt: Callable = default_filter) -> Params:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    lora_flat = {}
+    for i, (path, leaf) in enumerate(flat):
+        if filt(path, leaf):
+            k = jax.random.fold_in(key, i)
+            lead = leaf.shape[:-2]
+            a = (jax.random.normal(k, lead + (leaf.shape[-2], rank),
+                                   leaf.dtype)
+                 / jnp.sqrt(leaf.shape[-2]))
+            b = jnp.zeros(lead + (rank, leaf.shape[-1]), leaf.dtype)
+            lora_flat[jax.tree_util.keystr(path)] = {"a": a, "b": b}
+    return lora_flat
+
+
+def merge(params: Params, lora: Params, alpha: float = 1.0) -> Params:
+    """Effective params: W + (alpha/r) A@B on adapted leaves (batched matmul
+    over any leading stack dims)."""
+
+    def fix(path, leaf):
+        key = jax.tree_util.keystr(path)
+        if key in lora:
+            ab = lora[key]
+            r = ab["a"].shape[-1]
+            delta = jnp.einsum("...ir,...ro->...io", ab["a"], ab["b"])
+            return leaf + (alpha / r) * delta.astype(leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def n_params(lora: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(lora))

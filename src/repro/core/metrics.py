@@ -1,0 +1,101 @@
+"""Evaluation metrics (paper §3.1): FID, CLIP score, inter-group diversity.
+
+Offline substitutes (DESIGN.md §2): no pretrained Inception/CLIP/AlexNet is
+available, so each metric keeps the paper's *functional form* with a
+deterministic feature extractor:
+
+* FD-R   — Fréchet distance over fixed-seed random-conv features (relative
+           comparator across sampling schemes, like FID);
+* CLIP-P — cosine(text, image) through our contrastively-trained two-tower
+           (models.text_encoder);
+* DIV    — mean pairwise feature distance among images generated for the
+           *same group* (the paper's inter-group LPIPS role): higher means
+           branch phases actually diversified from the shared trunk.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# fixed random-conv feature extractor (FD-R / DIV backbone)
+# ---------------------------------------------------------------------------
+
+def _rf_params(seed: int = 7, chans=(16, 32, 64)):
+    key = jax.random.PRNGKey(seed)
+    ws = []
+    cin = 3
+    for i, c in enumerate(chans):
+        k = jax.random.fold_in(key, i)
+        ws.append(jax.random.normal(k, (3, 3, cin, c)) / np.sqrt(9 * cin))
+        cin = c
+    return ws
+
+
+_RF = None
+
+
+def random_features(images: jnp.ndarray) -> jnp.ndarray:
+    """images (B,H,W,3) in [-1,1] -> (B, F) multi-scale features."""
+    global _RF
+    if _RF is None:
+        _RF = _rf_params()
+    feats = []
+    h = images
+    for w in _RF:
+        h = jax.lax.conv_general_dilated(
+            h, w.astype(h.dtype), (2, 2), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jnp.tanh(h)
+        feats.append(jnp.mean(h, axis=(1, 2)))
+    return jnp.concatenate(feats, axis=-1)
+
+
+def frechet_distance(feat_a: np.ndarray, feat_b: np.ndarray) -> float:
+    """FD between Gaussian fits; tr sqrt(C1 C2) via eigenvalues."""
+    a, b = np.asarray(feat_a, np.float64), np.asarray(feat_b, np.float64)
+    mu1, mu2 = a.mean(0), b.mean(0)
+    c1 = np.cov(a, rowvar=False) + 1e-6 * np.eye(a.shape[1])
+    c2 = np.cov(b, rowvar=False) + 1e-6 * np.eye(b.shape[1])
+    ev = np.linalg.eigvals(c1 @ c2)
+    tr_sqrt = np.sum(np.sqrt(np.maximum(ev.real, 0.0)))
+    return float(((mu1 - mu2) ** 2).sum() + np.trace(c1) + np.trace(c2)
+                 - 2.0 * tr_sqrt)
+
+
+def fd_r(real_images: jnp.ndarray, gen_images: jnp.ndarray) -> float:
+    fa = np.asarray(random_features(real_images), np.float64)
+    fb = np.asarray(random_features(gen_images), np.float64)
+    return frechet_distance(fa, fb)
+
+
+# ---------------------------------------------------------------------------
+# CLIP-proxy
+# ---------------------------------------------------------------------------
+
+def clip_proxy(text_embeds: jnp.ndarray, image_embeds: jnp.ndarray) -> float:
+    """Both L2-normalised (B,d); mean pairwise-matched cosine."""
+    return float(jnp.mean(jnp.sum(text_embeds * image_embeds, axis=-1)))
+
+
+# ---------------------------------------------------------------------------
+# intra-group diversity (paper's inter-group LPIPS role)
+# ---------------------------------------------------------------------------
+
+def group_diversity(images: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+                    ) -> float:
+    """images (K,N,H,W,3); mean pairwise feature L2 within each group."""
+    K, N = images.shape[:2]
+    feats = random_features(images.reshape(K * N, *images.shape[2:]))
+    feats = feats.reshape(K, N, -1)
+    d = jnp.linalg.norm(feats[:, :, None] - feats[:, None, :], axis=-1)
+    if mask is None:
+        pair = jnp.ones((K, N, N))
+    else:
+        pair = mask[:, :, None] * mask[:, None, :]
+    pair = pair * (1.0 - jnp.eye(N)[None])
+    return float(jnp.sum(d * pair) / jnp.maximum(jnp.sum(pair), 1e-6))

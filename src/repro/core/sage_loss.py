@@ -1,0 +1,107 @@
+"""Equation 3 — the SAGE training objective.
+
+L_SAGE = E[ lambda1 * w_ts ||eps_th(a_ts z̄ + s_ts e, c̄) - e||^2          (i)
+           + lambda2 * ||eps_th(a_ts z̄ + s_ts e, c̄) - soft_target||^2    (ii)
+           + (1/N) sum_n w_tb ||eps_th(a_tb z^n + s_tb e, c^n) - e||^2 ]  (iii)
+
+soft_target = (1/N) sum_n eps_th(a_ts z^n + s_ts e, c^n)   (stop-grad by
+default — distillation semantics; configurable).
+
+(i)+(ii) supervise the *shared phase* (t_s ~ U{T*..T}); (iii) is the
+*branch phase* loss (t_b ~ U{1..T*}).  One shared noise e per group
+(Alg. 2 line 7).  All member evals are batched into a single eps_fn call
+so the loss costs (2N + 1) model evals per group, fused.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SageConfig
+from repro.core.schedule import Schedule
+from repro.core.shared_sampling import group_mean
+
+EpsFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def sample_group_timesteps(key, sage: SageConfig, sched: Schedule, n: int
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """t_s ~ U{T*..T}, t_b ~ U{1..T*} on the continuous training grid
+    (branch point mapped from the sampler grid to [0, sched.T])."""
+    ks, kb = jax.random.split(key)
+    ts_lo = int(sched.T * (1.0 - sage.share_ratio))
+    t_s = jax.random.randint(ks, (n,), ts_lo, sched.T + 1)
+    t_b = jax.random.randint(kb, (n,), 1, max(ts_lo, 2))
+    return t_s, t_b
+
+
+def sage_loss(eps_fn: EpsFn, sched: Schedule, sage: SageConfig, key,
+              z: jnp.ndarray, cond: jnp.ndarray, mask: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """z (K,N,H,W,C) clean member latents; cond (K,N,Lc,dc); mask (K,N)."""
+    K, N, H, W, C = z.shape
+    kt, ke = jax.random.split(key)
+    t_s, t_b = sample_group_timesteps(kt, sage, sched, K)
+    eps = jax.random.normal(ke, (K, H, W, C))              # shared per group
+
+    zbar = group_mean(z, mask)                             # (K,H,W,C)
+    cbar = group_mean(cond, mask)                          # (K,Lc,dc)
+
+    def noise(z_, t_):
+        a = sched.alpha(t_).reshape(-1, 1, 1, 1)
+        s = sched.sigma(t_).reshape(-1, 1, 1, 1)
+        return a * z_ + s * jnp.repeat(eps, z_.shape[0] // K, axis=0)
+
+    # one fused eps_fn call: [shared(K) | members@ts(K*N) | members@tb(K*N)]
+    zm = z.reshape(K * N, H, W, C)
+    cm = cond.reshape(K * N, *cond.shape[2:])
+    t_s_m = jnp.repeat(t_s, N)
+    t_b_m = jnp.repeat(t_b, N)
+    z_in = jnp.concatenate([noise(zbar, t_s), noise(zm, t_s_m),
+                            noise(zm, t_b_m)], 0)
+    t_in = jnp.concatenate([t_s, t_s_m, t_b_m], 0)
+    c_in = jnp.concatenate([cbar, cm, cm], 0)
+    pred = eps_fn(z_in, t_in, c_in)
+
+    pred_shared = pred[:K]
+    pred_m_ts = pred[K:K + K * N].reshape(K, N, H, W, C)
+    pred_m_tb = pred[K + K * N:].reshape(K, N, H, W, C)
+
+    def mse(a, b, axis):
+        return jnp.mean((a - b) ** 2, axis=axis)
+
+    w_ts = sched.snr_weight(t_s)
+    w_tb = sched.snr_weight(t_b)
+
+    # (i) shared-phase denoising faithfulness
+    l1 = jnp.mean(w_ts * mse(pred_shared, eps, axis=(1, 2, 3)))
+
+    # (ii) soft-target alignment
+    soft = group_mean(pred_m_ts, mask)
+    if sage.soft_target_stopgrad:
+        soft = jax.lax.stop_gradient(soft)
+    l2 = jnp.mean(mse(pred_shared, soft, axis=(1, 2, 3)))
+
+    # (iii) branch-phase per-member fidelity
+    per_m = mse(pred_m_tb, eps[:, None], axis=(2, 3, 4))    # (K,N)
+    l3 = jnp.mean(w_tb * jnp.sum(per_m * mask, 1)
+                  / jnp.maximum(jnp.sum(mask, 1), 1e-6))
+
+    loss = sage.lambda1 * l1 + sage.lambda2 * l2 + l3
+    return loss, {"shared": l1, "soft": l2, "branch": l3}
+
+
+def ldm_loss(eps_fn: EpsFn, sched: Schedule, key, z: jnp.ndarray,
+             cond: jnp.ndarray) -> jnp.ndarray:
+    """Standard LDM objective (paper Eq. 2) — the Standard-FT baseline."""
+    B = z.shape[0]
+    kt, ke = jax.random.split(key)
+    t = jax.random.randint(kt, (B,), 1, sched.T + 1)
+    eps = jax.random.normal(ke, z.shape)
+    a = sched.alpha(t).reshape(-1, 1, 1, 1)
+    s = sched.sigma(t).reshape(-1, 1, 1, 1)
+    pred = eps_fn(a * z + s * eps, t, cond)
+    w = sched.snr_weight(t)
+    return jnp.mean(w * jnp.mean((pred - eps) ** 2, axis=(1, 2, 3)))

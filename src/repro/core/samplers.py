@@ -1,0 +1,66 @@
+"""ODE samplers over the VP schedule: DDIM (paper's sampler) and
+DPM-Solver++(2M) as a faster alternative.
+
+Both expose a per-step ``step(z, t_cur, t_next, eps)`` so the shared/branch
+driver (core.shared_sampling) controls conditioning and step sharing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.schedule import Schedule
+
+
+def ddim_step(sched: Schedule, z: jnp.ndarray, t: jnp.ndarray,
+              t_next: jnp.ndarray, eps: jnp.ndarray,
+              eta: float = 0.0, clip_x0: float = 0.0) -> jnp.ndarray:
+    """Deterministic DDIM update (eta=0):   [Song et al., 2020]
+
+        z0_hat = (z - sigma_t eps) / alpha_t
+        z'     = alpha_{t'} z0_hat + sigma_{t'} eps
+
+    clip_x0 > 0 enables static x0-thresholding (SD's clip_sample): near
+    t = T alpha_t -> 0 and the 1/alpha blow-up otherwise dominates the
+    trajectory, drowning per-member differences in the branch phase.
+    """
+    a_t, s_t = sched.alpha(t), sched.sigma(t)
+    a_n, s_n = sched.alpha(t_next), sched.sigma(t_next)
+    z0 = (z - s_t * eps) / jnp.maximum(a_t, 1e-6)
+    if clip_x0:
+        z0 = jnp.clip(z0, -clip_x0, clip_x0)
+    return a_n * z0 + s_n * eps
+
+
+def dpmpp_2m_step(sched: Schedule, z: jnp.ndarray, t: jnp.ndarray,
+                  t_next: jnp.ndarray, eps: jnp.ndarray,
+                  eps_prev: Optional[jnp.ndarray] = None,
+                  t_prev: Optional[jnp.ndarray] = None,
+                  clip_x0: float = 0.0) -> jnp.ndarray:
+    """DPM-Solver++(2M) in eps-parameterisation (data-pred internally).
+
+    ``eps_prev is None`` (or == eps) reduces to the 1st-order update (the
+    exponential-integrator form of DDIM).  [Lu et al., 2022]
+    """
+    a_t, s_t = sched.alpha(t), sched.sigma(t)
+    a_n, s_n = sched.alpha(t_next), sched.sigma(t_next)
+    lam = jnp.log(jnp.maximum(a_t, 1e-6) / jnp.maximum(s_t, 1e-8))
+    lam_n = jnp.log(jnp.maximum(a_n, 1e-6) / jnp.maximum(s_n, 1e-8))
+    h = lam_n - lam
+
+    def pred_x0(e):
+        x0 = (z - s_t * e) / jnp.maximum(a_t, 1e-6)
+        return jnp.clip(x0, -clip_x0, clip_x0) if clip_x0 else x0
+
+    x0 = pred_x0(eps)
+    if eps_prev is None:
+        d = x0
+    else:
+        a_p, s_p = sched.alpha(t_prev), sched.sigma(t_prev)
+        lam_p = jnp.log(jnp.maximum(a_p, 1e-6) / jnp.maximum(s_p, 1e-8))
+        # 2M: linear extrapolation of the data prediction in lambda space
+        r = (lam - lam_p) / jnp.where(jnp.abs(h) > 1e-8, h, 1e-8)
+        x0_prev = pred_x0(eps_prev)
+        d = x0 + (x0 - x0_prev) / (2.0 * jnp.maximum(r, 1e-8))
+    return (s_n / jnp.maximum(s_t, 1e-8)) * z - a_n * jnp.expm1(-h) * d

@@ -1,0 +1,166 @@
+"""Algorithm 1 — Shared Diffusion Sampling (the paper's inference scheme).
+
+Static-shape, device-side implementation:
+
+* groups are packed to (K, N) member indices + mask by ``core.grouping``;
+* shared phase: K latents, conditioned on the masked mean text features c̄,
+  for t = T .. T* (``n_shared`` sampler steps);
+* branch phase: latents broadcast K -> (K, N), each member continues with
+  its own cⁿ for t = T* .. 0;
+* CFG with a null-condition pass; the beyond-paper ``shared_uncond`` option
+  computes the unconditional branch once per *group* during branching (it is
+  prompt-independent along a shared trajectory) — NFE drops from 2N to N+1
+  per step with no change in output for identical uncond inputs.
+
+Timestep loops are ``lax.scan`` over the DDIM grid (static trip counts;
+branch point is a static Python int — adaptive T* selects among a small set
+of compiled variants, see ``serve.py``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, SageConfig
+from repro.core import samplers
+from repro.core.guidance import cfg_combine
+from repro.core.schedule import Schedule, ddim_timesteps
+
+# eps_fn(z, t, cond) -> eps ; z (B,H,W,C), t (B,), cond (B,Lc,dc)
+EpsFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def group_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked mean over the member axis.  x (K,N,...), mask (K,N)."""
+    m = mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+    return jnp.sum(x * m, axis=1) / jnp.maximum(
+        jnp.sum(m, axis=1), 1e-6)
+
+
+def _cfg_eval(eps_fn: EpsFn, z, t, cond, null_cond, scale: float):
+    B = z.shape[0]
+    zz = jnp.concatenate([z, z], 0)
+    tt = jnp.concatenate([t, t], 0)
+    cc = jnp.concatenate([jnp.broadcast_to(null_cond, cond.shape), cond], 0)
+    eps = eps_fn(zz, tt, cc)
+    return cfg_combine(eps[:B], eps[B:], scale)
+
+
+def _sampler_update(sched: Schedule, sage: SageConfig, z, t, t_next, eps,
+                    eps_prev, t_prev, is_first):
+    """Dispatch DDIM / DPM-Solver++(2M); history handled via jnp.where so
+    the whole thing stays scannable (first step falls back to 1st order
+    by aliasing eps_prev = eps)."""
+    if sage.sampler == "dpmpp":
+        ep = jnp.where(is_first, eps, eps_prev)
+        return samplers.dpmpp_2m_step(sched, z, t, t_next, eps, ep, t_prev,
+                                      clip_x0=sage.clip_x0)
+    return samplers.ddim_step(sched, z, t, t_next, eps,
+                              clip_x0=sage.clip_x0)
+
+
+def shared_sample(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
+                  key: jax.Array, cond_tokens: jnp.ndarray,
+                  mask: jnp.ndarray, null_cond: jnp.ndarray,
+                  latent_shape: Tuple[int, int, int],
+                  branch_point: Optional[int] = None
+                  ) -> Dict[str, jnp.ndarray]:
+    """Run Alg. 1 for packed groups.
+
+    cond_tokens (K, N, Lc, dc); mask (K, N); null_cond (Lc, dc).
+    Returns {"latents": (K, N, H, W, C), "nfe": scalar}.
+    """
+    K, N = mask.shape
+    T = sage.total_steps
+    Ts = sage.branch_point if branch_point is None else branch_point
+    n_shared = T - Ts
+    grid = jnp.asarray(ddim_timesteps(sched.T, T))          # (T+1,) desc
+    H, W, C = latent_shape
+
+    cbar = group_mean(cond_tokens, mask)                    # (K, Lc, dc)
+    z = jax.random.normal(key, (K, H, W, C), jnp.float32)   # shared init noise
+
+    # ---- shared phase: t index 0 .. n_shared-1 -------------------------
+    def shared_step(carry, i):
+        z, eps_prev = carry
+        t, t_next = grid[i], grid[i + 1]
+        tb = jnp.full((K,), t)
+        eps = _cfg_eval(eps_fn, z, tb, cbar, null_cond, sage.guidance_scale)
+        z = _sampler_update(sched, sage, z, t, t_next, eps, eps_prev,
+                            grid[jnp.maximum(i - 1, 0)], i == 0)
+        return (z, eps), None
+
+    if n_shared > 0:
+        (z, _), _ = jax.lax.scan(shared_step, (z, jnp.zeros_like(z)),
+                                 jnp.arange(n_shared))
+
+    # ---- branch: broadcast to members ----------------------------------
+    zb = jnp.broadcast_to(z[:, None], (K, N, H, W, C)).reshape(K * N, H, W, C)
+    cm = cond_tokens.reshape(K * N, *cond_tokens.shape[2:])
+
+    def branch_step(carry, i):
+        z, eps_prev = carry
+        t, t_next = grid[i], grid[i + 1]
+        if sage.shared_uncond_cfg:
+            # uncond eval once per group on the group-mean trajectory proxy:
+            # members share z only at the branch point, so per-member uncond
+            # is approximated by the group-mean latent's uncond — exact at
+            # i == n_shared, approximate after.  Quality impact measured in
+            # benchmarks/fig4_shared_steps.py.
+            zg = group_mean(z.reshape(K, N, H, W, C), mask)
+            tg = jnp.full((K,), t)
+            eps_u = eps_fn(zg, tg, jnp.broadcast_to(null_cond, cbar.shape))
+            eps_u = jnp.broadcast_to(eps_u[:, None], (K, N, H, W, C)
+                                     ).reshape(K * N, H, W, C)
+            tb = jnp.full((K * N,), t)
+            eps_c = eps_fn(z, tb, cm)
+            eps = cfg_combine(eps_u, eps_c, sage.guidance_scale)
+        else:
+            tb = jnp.full((K * N,), t)
+            eps = _cfg_eval(eps_fn, z, tb, cm, null_cond,
+                            sage.guidance_scale)
+        z = _sampler_update(sched, sage, z, t, t_next, eps, eps_prev,
+                            grid[jnp.maximum(i - 1, 0)],
+                            i == n_shared)   # history restarts at the fork
+        return (z, eps), None
+
+    (zb, _), _ = jax.lax.scan(branch_step, (zb, jnp.zeros_like(zb)),
+                              jnp.arange(n_shared, T))
+
+    n_members = jnp.sum(mask)
+    if sage.shared_uncond_cfg:
+        branch_nfe = (n_members + K) * Ts
+    else:
+        branch_nfe = 2 * n_members * Ts
+    nfe = 2 * K * n_shared + branch_nfe
+    return {"latents": zb.reshape(K, N, H, W, C), "nfe": nfe}
+
+
+def independent_sample(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
+                       key: jax.Array, cond_tokens: jnp.ndarray,
+                       null_cond: jnp.ndarray,
+                       latent_shape: Tuple[int, int, int]
+                       ) -> Dict[str, jnp.ndarray]:
+    """Baseline: conventional independent sampling (Fig. 1a)."""
+    M = cond_tokens.shape[0]
+    H, W, C = latent_shape
+    grid = jnp.asarray(ddim_timesteps(sched.T, sage.total_steps))
+    z = jax.random.normal(key, (M, H, W, C), jnp.float32)
+
+    def step(carry, i):
+        z, eps_prev = carry
+        t, t_next = grid[i], grid[i + 1]
+        tb = jnp.full((M,), t)
+        eps = _cfg_eval(eps_fn, z, tb, cond_tokens, null_cond,
+                        sage.guidance_scale)
+        z = _sampler_update(sched, sage, z, t, t_next, eps, eps_prev,
+                            grid[jnp.maximum(i - 1, 0)], i == 0)
+        return (z, eps), None
+
+    (z, _), _ = jax.lax.scan(step, (z, jnp.zeros_like(z)),
+                             jnp.arange(sage.total_steps))
+    return {"latents": z, "nfe": 2 * M * sage.total_steps}

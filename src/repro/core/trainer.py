@@ -1,0 +1,135 @@
+"""Algorithm 2 — Shared Diffusion Training, plus the Standard-FT baseline.
+
+Functional train-step factories; state = {"params", "lora", "opt", "step"}.
+When ``lora_rank > 0`` only the LoRA pytree is optimised (paper §3.1);
+otherwise full fine-tune.  10% condition dropout trains the null branch for
+CFG (standard LDM practice; the null condition is the zero tensor).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, OptimConfig, SageConfig
+from repro.core import lora as lora_lib
+from repro.core import sage_loss as losses
+from repro.core.schedule import Schedule
+from repro.models import dit
+from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
+                                    make_optimizer)
+
+Params = Dict[str, Any]
+
+COND_DROP = 0.1
+
+
+def init_state(model_cfg: ModelConfig, opt_cfg: OptimConfig, key,
+               lora_rank: int = 0, base_params: Optional[Params] = None
+               ) -> Dict[str, Any]:
+    kp, kl = jax.random.split(key)
+    params = base_params if base_params is not None else dit.init_params(
+        model_cfg, kp)
+    opt = make_optimizer(opt_cfg)
+    if lora_rank:
+        lo = lora_lib.init_lora(params, lora_rank, kl)
+        opt_state = opt.init(lo)
+    else:
+        lo = None
+        opt_state = opt.init(params)
+    return {"params": params, "lora": lo, "opt": opt_state,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _eps_fn(model_cfg: ModelConfig, params: Params, lo: Optional[Params],
+            remat: bool = False):
+    eff = lora_lib.merge(params, lo) if lo is not None else params
+
+    def eps_fn(z, t, c):
+        return dit.forward(eff, model_cfg, z, t, c, remat=remat)
+
+    return eps_fn
+
+
+def _drop_cond(key, cond: jnp.ndarray, batch_dims: int) -> jnp.ndarray:
+    shape = cond.shape[:batch_dims]
+    keep = (jax.random.uniform(key, shape) > COND_DROP)
+    return cond * keep.reshape(shape + (1,) * (cond.ndim - batch_dims)
+                               ).astype(cond.dtype)
+
+
+def make_sage_train_step(model_cfg: ModelConfig, sage: SageConfig,
+                         sched: Schedule, opt_cfg: OptimConfig,
+                         lora_rank: int = 0, remat: bool = False):
+    """batch = {"z": (K,N,H,W,C), "cond": (K,N,Lc,dc), "mask": (K,N)}."""
+    opt = make_optimizer(opt_cfg)
+
+    def loss_fn(trainable, frozen, batch, key):
+        params, lo = ((frozen, trainable) if lora_rank
+                      else (trainable, None))
+        kd, kl = jax.random.split(key)
+        cond = _drop_cond(kd, batch["cond"], 2)
+        eps_fn = _eps_fn(model_cfg, params, lo, remat)
+        return losses.sage_loss(eps_fn, sched, sage, kl, batch["z"], cond,
+                                batch["mask"])
+
+    @jax.jit
+    def step(state, batch, key):
+        trainable = state["lora"] if lora_rank else state["params"]
+        frozen = state["params"] if lora_rank else None
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            trainable, frozen, batch, key)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        updates, opt_state = opt.update(grads, state["opt"], trainable,
+                                        opt_cfg.lr)
+        new_trainable = apply_updates(trainable, updates)
+        new_state = dict(state)
+        new_state["opt"] = opt_state
+        new_state["step"] = state["step"] + 1
+        if lora_rank:
+            new_state["lora"] = new_trainable
+        else:
+            new_state["params"] = new_trainable
+        metrics = {"loss": loss, "gnorm": gnorm, **parts}
+        return new_state, metrics
+
+    return step
+
+
+def make_standard_train_step(model_cfg: ModelConfig, sched: Schedule,
+                             opt_cfg: OptimConfig, lora_rank: int = 0,
+                             remat: bool = False):
+    """Standard-FT baseline: plain LDM loss on individual (z, c) pairs.
+    batch = {"z": (B,H,W,C), "cond": (B,Lc,dc)}."""
+    opt = make_optimizer(opt_cfg)
+
+    def loss_fn(trainable, frozen, batch, key):
+        params, lo = ((frozen, trainable) if lora_rank
+                      else (trainable, None))
+        kd, kl = jax.random.split(key)
+        cond = _drop_cond(kd, batch["cond"], 1)
+        eps_fn = _eps_fn(model_cfg, params, lo, remat)
+        return losses.ldm_loss(eps_fn, sched, kl, batch["z"], cond)
+
+    @jax.jit
+    def step(state, batch, key):
+        trainable = state["lora"] if lora_rank else state["params"]
+        frozen = state["params"] if lora_rank else None
+        loss, grads = jax.value_and_grad(loss_fn)(trainable, frozen, batch,
+                                                  key)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        updates, opt_state = opt.update(grads, state["opt"], trainable,
+                                        opt_cfg.lr)
+        new_trainable = apply_updates(trainable, updates)
+        new_state = dict(state)
+        new_state["opt"] = opt_state
+        new_state["step"] = state["step"] + 1
+        if lora_rank:
+            new_state["lora"] = new_trainable
+        else:
+            new_state["params"] = new_trainable
+        return new_state, {"loss": loss, "gnorm": gnorm}
+
+    return step

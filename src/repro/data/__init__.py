@@ -1,0 +1,2 @@
+from repro.data.synthetic import ShapesDataset
+from repro.data.grouped import GroupedDataset, build_grouped_dataset

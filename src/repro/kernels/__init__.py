@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package ships <name>.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper with shape/dtype handling) and ref.py (pure-jnp
+oracle used by the allclose test sweeps).  Kernels target TPU VMEM tiling
+and are validated on CPU with interpret=True.
+
+* ddim_step       -- fused CFG combine + DDIM latent update (the per-step
+                     elementwise tail of Alg. 1; fusing avoids repeated HBM
+                     round trips per sampler step)
+* group_mean      -- masked segment mean over group members (the c-bar /
+                     z-bar of Alg. 1/2) incl. the branch-point broadcast
+* flash_attention -- blocked online-softmax attention (the DiT/transformer
+                     hot loop; VMEM-tiled, MXU-aligned)
+* ssd_scan        -- Mamba2 SSD intra-chunk tile (decay matrix stays in
+                     VMEM; MXU-shaped Q=N=128 matmuls)
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.ddim_step.ops import fused_cfg_ddim_step

@@ -1,0 +1,28 @@
+"""Public wrapper: arbitrary latent shapes -> padded 2-D tiles -> kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ddim_step.ddim_step import (BLOCK_C, BLOCK_R, ddim_step_2d)
+
+
+def fused_cfg_ddim_step(z, eps_u, eps_c, guidance, a_t, s_t, a_n, s_n,
+                        interpret: bool = True):
+    """Fused CFG + DDIM update for latents of any shape (B, ...)."""
+    assert z.shape == eps_u.shape == eps_c.shape
+    orig_shape, n = z.shape, z.size
+    C = BLOCK_C
+    rows = -(-n // C)
+    rows_p = -(-rows // BLOCK_R) * BLOCK_R
+    pad = rows_p * C - n
+
+    def to2d(x):
+        return jnp.pad(x.reshape(-1), (0, pad)).reshape(rows_p, C)
+
+    scal = jnp.zeros((1, 8), jnp.float32)
+    scal = scal.at[0, :5].set(
+        jnp.asarray([guidance, a_t, s_t, a_n, s_n], jnp.float32))
+    out = ddim_step_2d(scal, to2d(z), to2d(eps_u), to2d(eps_c),
+                       interpret=interpret)
+    return out.reshape(-1)[:n].reshape(orig_shape)

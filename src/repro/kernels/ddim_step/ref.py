@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused CFG+DDIM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_cfg_ddim_step_ref(z, eps_u, eps_c, guidance: float,
+                            a_t: float, s_t: float, a_n: float, s_n: float):
+    zf = z.astype(jnp.float32)
+    eps = (eps_u + guidance * (eps_c - eps_u)).astype(jnp.float32)
+    z0 = (zf - s_t * eps) / a_t
+    return (a_n * z0 + s_n * eps).astype(z.dtype)

@@ -1,0 +1,102 @@
+"""Blocked online-softmax attention (FlashAttention-style) for TPU.
+
+The DiT denoiser evaluates full self-attention over 1024-4096 latent tokens
+every sampler step — the single hottest matmul loop in SAGE sampling — and
+the transformer substrate uses the same pattern.  TPU adaptation (not a CUDA
+port): tiles are MXU-aligned (128 x head_dim), the K/V loop is the innermost
+*grid* dimension so K/V blocks stream HBM -> VMEM while running max /
+denominator accumulators live in VMEM scratch across grid steps (TPU grids
+execute sequentially per core — the standard Pallas-TPU reduction idiom —
+rather than CUDA's one-CTA-per-tile + atomics).
+
+Shapes: q (B, H, S, D), kv (B, H, Skv, D); D <= 128 padded to lane width.
+VMEM: q/k/v/o blocks + (BQ, BK) scores ~ 128*128*4B * 5 ~ 0.4 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, block_q: int, block_k: int,
+            seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                    # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)                    # (BK, D)
+    v = v_ref[0].astype(jnp.float32)                    # (BK, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = cols < seq_k                     # mask zero-padded key rows
+    if causal:
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                       s.shape, 0)
+        valid &= cols <= rows
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                                 # (BQ, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                              # (BQ, BK)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "interpret", "seq_k"))
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         scale: float = 1.0, interpret: bool = True,
+                         seq_k: int = 0):
+    """q (BH, Sq, D), k/v (BH, Sk, D) -> (BH, Sq, D).  Sq % BLOCK_Q == 0,
+    Sk % BLOCK_K == 0, D <= 128 (pad lanes upstream).  seq_k = true
+    (pre-padding) key length for masking; 0 -> Sk."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    grid = (BH, Sq // BLOCK_Q, Sk // BLOCK_K)
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               block_q=BLOCK_Q, block_k=BLOCK_K,
+                               seq_k=seq_k or Sk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_Q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

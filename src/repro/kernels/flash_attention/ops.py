@@ -1,0 +1,35 @@
+"""Public wrapper: (B, S, H, D) GQA layout -> padded (BH, S, Dp) kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    BLOCK_K, BLOCK_Q, flash_attention_bhsd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, interpret: bool = True):
+    """q (B, Sq, H, D); k/v (B, Sk, Hkv, D), H % Hkv == 0 -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    g = H // Hkv
+    if g > 1:                       # materialise GQA repeat for the kernel
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+
+    def to_bhsd(x, S):
+        x = x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+        pad_s = (-S) % (BLOCK_Q if S == Sq else BLOCK_K)
+        pad_d = (-D) % 128
+        return jnp.pad(x, ((0, 0), (0, pad_s), (0, pad_d))), pad_s
+
+    qp, _ = to_bhsd(q, Sq)
+    kp, _ = to_bhsd(k, Sk)
+    vp, _ = to_bhsd(v, Sk)
+    # zero-padded key rows are masked inside the kernel via seq_k
+    out = flash_attention_bhsd(qp, kp, vp, causal=causal, scale=scale,
+                               interpret=interpret, seq_k=Sk)
+    out = out[:, :Sq, :D].reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,1 @@
+from repro.kernels.group_mean.ops import masked_group_mean

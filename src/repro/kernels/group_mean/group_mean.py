@@ -1,0 +1,42 @@
+"""Masked group-mean Pallas kernel.
+
+Computes c̄_k = sum_n mask[k,n] x[k,n,:] / sum_n mask[k,n] — the shared
+condition / shared latent of Alg. 1/2.  One grid step per (group, feature
+block): the member axis N stays resident in VMEM (N <= 8 by construction,
+paper groups are 2-5 members), so the reduction is a single pass.
+
+Block: (1, N, BLOCK_F) x f32 = 8 * 512 * 4B = 16 KB  << VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_F = 512
+
+
+def _kernel(x_ref, m_ref, out_ref):
+    x = x_ref[0].astype(jnp.float32)            # (N, F)
+    m = m_ref[0].astype(jnp.float32)            # (N, 1)  broadcast-ready
+    s = jnp.sum(x * m, axis=0, keepdims=True)   # (1, F)
+    cnt = jnp.maximum(jnp.sum(m), 1e-6)
+    out_ref[0] = (s / cnt).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def group_mean_knf(x, mask, interpret: bool = True):
+    """x (K, N, F) with F % BLOCK_F == 0; mask (K, N, 1) -> (K, 1, F)."""
+    K, N, F = x.shape
+    grid = (K, F // BLOCK_F)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, N, BLOCK_F), lambda k, f: (k, 0, f)),
+                  pl.BlockSpec((1, N, 1), lambda k, f: (k, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, BLOCK_F), lambda k, f: (k, 0, f)),
+        out_shape=jax.ShapeDtypeStruct((K, 1, F), x.dtype),
+        interpret=interpret,
+    )(x, mask)

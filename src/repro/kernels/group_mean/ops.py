@@ -1,0 +1,22 @@
+"""Public wrapper: (K, N, ...) feature pytrees -> padded (K,N,F) kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.group_mean.group_mean import BLOCK_F, group_mean_knf
+
+
+def masked_group_mean(x, mask, interpret: bool = True):
+    """x (K, N, ...); mask (K, N) f32 -> masked mean over N: (K, ...)."""
+    K, N = x.shape[:2]
+    feat_shape = x.shape[2:]
+    F = 1
+    for d in feat_shape:
+        F *= d
+    pad = (-F) % BLOCK_F
+    x2 = x.reshape(K, N, F)
+    if pad:
+        x2 = jnp.pad(x2, ((0, 0), (0, 0), (0, pad)))
+    out = group_mean_knf(x2, mask.reshape(K, N, 1).astype(jnp.float32),
+                         interpret=interpret)
+    return out.reshape(K, -1)[:, :F].reshape((K,) + feat_shape)

@@ -1,0 +1,11 @@
+"""Oracle for the masked group mean (same math as core.shared_sampling)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_group_mean_ref(x, mask):
+    """x (K, N, ...); mask (K, N) -> (K, ...)."""
+    m = mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+    return (jnp.sum(x.astype(jnp.float32) * m, axis=1)
+            / jnp.maximum(jnp.sum(m, axis=1), 1e-6)).astype(x.dtype)

@@ -1,0 +1,54 @@
+"""Full SSD assembled around the Pallas intra-chunk kernel: kernel computes
+Y_diag + per-chunk states; the (cheap, sequential) inter-chunk recurrence
+and off-diagonal correction stay in jnp."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_intra_chunk
+
+
+def ssd_chunked_kernel(x, dA, B_, C_, chunk: int, interpret: bool = True):
+    """Same contract as models.ssm.ssd_chunked (g=1 groups):
+    x (b,l,h,p) pre-multiplied by dt; dA (b,l,h); B_/C_ (b,l,n)."""
+    b, l, h, p = x.shape
+    n = B_.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    c, Q = l // chunk, chunk
+
+    xf = x.astype(jnp.float32).reshape(b, c, Q, h, p)
+    dAc = dA.astype(jnp.float32).reshape(b, c, Q, h)
+    Bf = B_.astype(jnp.float32).reshape(b, c, Q, n)
+    Cf = C_.astype(jnp.float32).reshape(b, c, Q, n)
+
+    # flatten (b, c, h) -> grid; broadcast B/C over heads
+    xg = xf.transpose(0, 1, 3, 2, 4).reshape(b * c * h, Q, p)
+    dg = dAc.transpose(0, 1, 3, 2).reshape(b * c * h, Q)
+    Bg = jnp.broadcast_to(Bf[:, :, None], (b, c, h, Q, n)).reshape(
+        b * c * h, Q, n)
+    Cg = jnp.broadcast_to(Cf[:, :, None], (b, c, h, Q, n)).reshape(
+        b * c * h, Q, n)
+
+    y_diag, states = ssd_intra_chunk(dg, xg, Bg, Cg, interpret=interpret)
+    y_diag = y_diag.reshape(b, c, h, Q, p).transpose(0, 1, 3, 2, 4)
+    states = states.reshape(b, c, h, p, n)
+
+    # inter-chunk recurrence (jnp: O(c) sequential, bandwidth-trivial)
+    cum = jnp.cumsum(dAc, axis=2)                       # (b,c,Q,h)
+    chunk_decay = jnp.exp(cum[:, :, -1]).transpose(0, 2, 1)  # (b,h,c)
+
+    def step(s, inp):
+        st, dec = inp
+        return s * dec[..., None, None] + st, s
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(2, 0, 1)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                # (b,c,h,p,n)
+
+    out_decay = jnp.exp(cum)                            # (b,c,Q,h)
+    y_off = jnp.einsum("bzqn,bzhpn,bzqh->bzqhp", Cf, prev, out_decay)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y.astype(x.dtype), final

@@ -1,0 +1,12 @@
+"""Oracle: the pure-jnp SSD (models/ssm.ssd_chunked is the production twin)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dA, B_, C_, chunk):
+    """x (b,l,h,p); dA (b,l,h); B_/C_ (b,l,n) -> (y, final_state)."""
+    return ssd_chunked(x, dA, B_, C_, chunk)

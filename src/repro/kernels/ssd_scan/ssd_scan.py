@@ -1,0 +1,82 @@
+"""Mamba2 SSD intra-chunk Pallas kernel.
+
+TPU adaptation of the SSD "state-space duality" chunk computation
+[arXiv:2405.21060]: one grid cell = one (batch*head, chunk) tile held
+entirely in VMEM —
+
+    L      = exp(segsum(dA))        (Q, Q)  causal decay mask
+    Y_diag = ((C B^T) ∘ L) x        (Q, P)  MXU matmuls
+    state  = (x * decay)^T B        (P, N)  chunk's contribution to the
+                                            inter-chunk recurrence
+
+Q = N = 128 keeps every matmul MXU-shaped; the O(Q^2) decay matrix lives
+in VMEM (64 KB fp32) and never touches HBM — that is the point of the
+kernel (the jnp path materialises it per chunk).  The sequential
+inter-chunk recurrence (c ~ 32-4096 steps) stays a lax.scan outside: it is
+O(c·P·N) — bandwidth-trivial — and TPU grids execute sequentially anyway.
+
+VMEM/grid cell: x,y (Q,P) + B,C (Q,N) + L,S (Q,Q) fp32 ≈ 0.4 MB << 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(dA_ref, x_ref, b_ref, c_ref, y_ref, state_ref):
+    dA = dA_ref[0].astype(jnp.float32)                    # (Q,)
+    x = x_ref[0].astype(jnp.float32)                      # (Q, P)
+    B = b_ref[0].astype(jnp.float32)                      # (Q, N)
+    C = c_ref[0].astype(jnp.float32)                      # (Q, N)
+    Q = dA.shape[0]
+
+    cum = jnp.cumsum(dA)                                  # (Q,)
+    seg = cum[:, None] - cum[None, :]                     # (Q, Q)
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    L = jnp.where(tril, jnp.exp(seg), 0.0)
+
+    S = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * L
+    y_ref[0] = jax.lax.dot(S, x,
+                           preferred_element_type=jnp.float32
+                           ).astype(y_ref.dtype)
+
+    decay = jnp.exp(cum[-1] - cum)                        # (Q,)
+    xw = x * decay[:, None]
+    state_ref[0] = jax.lax.dot_general(
+        xw, B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(state_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(dA, x, B, C, interpret: bool = True):
+    """dA (G, Q); x (G, Q, P); B/C (G, Q, N) with G = batch*heads*chunks
+    -> (y_diag (G, Q, P), chunk_states (G, P, N))."""
+    G, Q, P = x.shape
+    N = B.shape[-1]
+    grid = (G,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q), lambda g: (g, 0)),
+            pl.BlockSpec((1, Q, P), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, P, N), lambda g: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((G, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dA, x, B, C)

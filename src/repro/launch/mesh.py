@@ -1,0 +1,19 @@
+"""Production mesh construction.
+
+Functions (not module-level constants) so importing never touches jax
+device state.  Target: TPU v5e, 16x16 = 256 chips/pod, 2 pods = 512.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 4):
+    """Small mesh for CPU tests (requires >= data*model host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

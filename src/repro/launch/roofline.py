@@ -1,0 +1,42 @@
+"""Roofline report CLI: renders experiments/dryrun/*.json as markdown.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh 16x16]
+    PYTHONPATH=src python -m repro.launch.roofline --variants  # §Perf view
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--variants", action="store_true",
+                    help="show §Perf variants next to their baselines")
+    args = ap.parse_args()
+
+    rows = [json.load(open(f)) for f in sorted(glob.glob(f"{args.dir}/*.json"))]
+    if args.variants:
+        keys = {(r["arch"], r["shape"]) for r in rows
+                if r.get("variant", "baseline") != "baseline"}
+        print("| arch | shape | variant | compute s | memory s | "
+              "collective s | bottleneck |")
+        print("|---|---|---|---|---|---|---|")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                             r.get("variant", ""))):
+            if (r["arch"], r["shape"]) not in keys or r["mesh"] != args.mesh:
+                continue
+            print(f"| {r['arch']} | {r['shape']} | "
+                  f"{r.get('variant','baseline')} "
+                  f"| {r['compute_term_s']:.2e} | {r['memory_term_s']:.2e} "
+                  f"| {r['collective_term_s']:.2e} | {r['bottleneck']} |")
+        return
+    from benchmarks.roofline_report import markdown_table
+    print(markdown_table(rows, mesh=args.mesh))
+
+
+if __name__ == "__main__":
+    main()

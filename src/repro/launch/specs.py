@@ -1,0 +1,245 @@
+"""Dry-run builders: step function + fully-sharded ShapeDtypeStruct inputs
+for every (architecture x input-shape) pair on a given mesh.
+
+Everything is AOT: ``jax.eval_shape`` produces the param/opt/cache trees, the
+partitioner attaches NamedShardings, and the caller lowers with
+``jax.jit(fn).lower(*args)`` — no arrays are ever allocated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (ModelConfig, OptimConfig, SHAPES, ShapeConfig,
+                          get_config)
+from repro.models import transformer as tfm
+from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
+                                    make_optimizer)
+from repro.sharding import partition
+
+# dense/MoE/VLM/enc-dec archs serve long_500k through a sliding-window cache
+# of this size (sub-quadratic requirement; DESIGN.md §4)
+SERVE_WINDOW = 4096
+# audio frontend downsampling: encoder frames per decoder token ratio
+ENC_FRAMES_DIV = 4
+
+
+class DryrunCase(NamedTuple):
+    name: str
+    fn: Any
+    args: Tuple
+    static: Dict[str, Any]
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _extras_specs(cfg: ModelConfig, batch: int, seq: int, mesh, ba):
+    if cfg.family == "vlm":
+        return {"image_embeds": _sds((batch, cfg.n_image_tokens,
+                                      cfg.vision_dim), jnp.bfloat16, mesh,
+                                     P(ba, None, None))}
+    if cfg.family == "encdec":
+        return {"frames": _sds((batch, max(seq // ENC_FRAMES_DIV, 16),
+                                cfg.enc_input_dim), jnp.bfloat16, mesh,
+                               P(ba, None, None))}
+    return {}
+
+
+def _param_structs(cfg: ModelConfig, mesh, fsdp: bool, dtype=None):
+    shapes = jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+    if dtype is not None:  # serving runs bf16 weights
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dtype if s.dtype == jnp.float32 else s.dtype),
+            shapes)
+    specs = partition.param_specs(cfg, shapes, mesh, fsdp=fsdp)
+    return partition.shard_tree(shapes, specs, mesh), specs
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                optim: str = "adamw", fsdp: bool = True,
+                remat: bool = True, unroll: bool = False) -> DryrunCase:
+    B, S = shape.global_batch, shape.seq_len
+    ba = partition.batch_axes(mesh, B)
+    params_sds, pspecs = _param_structs(cfg, mesh, fsdp)
+    opt = make_optimizer(OptimConfig(kind=optim))
+    opt_shapes = jax.eval_shape(opt.init, params_sds)
+    ospecs = partition.opt_specs(pspecs, opt_shapes)
+    opt_sds = partition.shard_tree(opt_shapes, ospecs, mesh)
+    batch = {
+        "tokens": _sds((B, S), jnp.int32, mesh, P(ba, None)),
+        "labels": _sds((B, S), jnp.int32, mesh, P(ba, None)),
+        **_extras_specs(cfg, B, S, mesh, ba),
+    }
+    oc = OptimConfig(kind=optim)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: tfm.lm_loss(p, cfg, batch, remat=remat,
+                                  unroll=unroll))(params)
+        grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, params, oc.lr)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    return DryrunCase(f"{cfg.name}:{shape.name}", train_step,
+                      (params_sds, opt_sds, batch),
+                      {"batch": B, "seq": S, "kind": "train",
+                       "donate": (0, 1)})
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  fsdp: bool = False, unroll: bool = False) -> DryrunCase:
+    B, S = shape.global_batch, shape.seq_len
+    ba = partition.batch_axes(mesh, B)
+    params_sds, _ = _param_structs(cfg, mesh, fsdp, dtype=jnp.bfloat16)
+    tokens = _sds((B, S), jnp.int32, mesh, P(ba, None))
+    extras = _extras_specs(cfg, B, S, mesh, ba)
+
+    def prefill_step(params, tokens, extras):
+        return tfm.prefill(params, cfg, tokens, extras=extras, max_len=S,
+                           unroll=unroll)
+
+    return DryrunCase(f"{cfg.name}:{shape.name}", prefill_step,
+                      (params_sds, tokens, extras),
+                      {"batch": B, "seq": S, "kind": "prefill"})
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 fsdp: bool = False, unroll: bool = False,
+                 cache_seq_shard: bool = False) -> DryrunCase:
+    B, S = shape.global_batch, shape.seq_len
+    ba = partition.batch_axes(mesh, B)
+    params_sds, _ = _param_structs(cfg, mesh, fsdp, dtype=jnp.bfloat16)
+    # sub-quadratic long-context serving: ring window cache for attention
+    window = SERVE_WINDOW if (S > 65536 and cfg.family != "ssm") else 0
+    cache_shapes = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, B, S, window=window))
+    cspecs = partition.cache_specs(cfg, cache_shapes, mesh, B,
+                                   seq_shard=cache_seq_shard)
+    cache_sds = partition.shard_tree(cache_shapes, cspecs, mesh)
+    token = _sds((B, 1), jnp.int32, mesh, P(ba, None))
+    ring = bool(window)
+
+    def serve_step(params, cache, token, pos):
+        return tfm.decode_step(params, cfg, cache, token, pos, ring=ring,
+                               unroll=unroll)
+
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return DryrunCase(f"{cfg.name}:{shape.name}", serve_step,
+                      (params_sds, cache_sds, token, pos),
+                      {"batch": B, "seq": S, "kind": "decode",
+                       "window": window, "donate": (1,)})
+
+
+def scale_config(cfg: ModelConfig, n_blocks: int) -> ModelConfig:
+    """Variant of cfg with ``n_blocks`` scanned super-blocks (prefix and
+    remainder layers preserved) — used by the 2-point roofline
+    extrapolation: cost(k) = base + k * per_block exactly, because scanned
+    blocks are identical."""
+    import dataclasses
+    per = len(cfg.pattern) if cfg.pattern else 1
+    prefix = cfg.moe.first_moe_layer if cfg.family == "moe" else 0
+    rem = len(cfg.remainder)
+    n_layers = prefix + per * n_blocks + rem
+    kw = {"n_layers": n_layers}
+    if cfg.family == "encdec":
+        kw["enc_layers"] = n_blocks
+    return dataclasses.replace(cfg, **kw)
+
+
+def build_sage_serve(cfg: ModelConfig, mesh, k_groups: int = 64,
+                     group_n: int = 4, unroll: bool = False,
+                     no_tp: bool = False) -> DryrunCase:
+    """The paper's own serving step on the production mesh: ONE shared-phase
+    DDIM step (CFG over K group latents) + ONE branch-phase step (K*N member
+    latents) of Alg. 1 — the two computations whose ratio sets SAGE's cost
+    saving.  Latents shard over (pod, data); the DiT shards over model."""
+    from repro.config import SageConfig
+    from repro.core import samplers
+    from repro.core.guidance import cfg_combine
+    from repro.core.schedule import make_schedule
+    from repro.models import dit as dit_lib
+
+    sched = make_schedule(1000)
+    ba = partition.batch_axes(mesh, k_groups)
+    shapes = jax.eval_shape(
+        lambda: dit_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    if no_tp:   # pure data parallel: the 0.45B DiT fits replicated in bf16
+        specs = jax.tree.map(lambda s: P(*([None] * len(s.shape))), shapes)
+    else:
+        specs = partition.param_specs(cfg, shapes, mesh, fsdp=False)
+    params_sds = partition.shard_tree(shapes, specs, mesh)
+    H = cfg.latent_size
+    z_shared = _sds((k_groups, H, H, cfg.latent_channels), jnp.float32,
+                    mesh, P(ba, None, None, None))
+    z_branch = _sds((k_groups * group_n, H, H, cfg.latent_channels),
+                    jnp.float32, mesh, P(ba, None, None, None))
+    cbar = _sds((k_groups, cfg.cond_len, cfg.cond_dim), jnp.bfloat16, mesh,
+                P(ba, None, None))
+    cm = _sds((k_groups * group_n, cfg.cond_len, cfg.cond_dim), jnp.bfloat16,
+              mesh, P(ba, None, None))
+
+    def sage_step(params, z_s, z_b, cbar, cm):
+        def eps(z, t, c):
+            return dit_lib.forward(params, cfg, z, t, c, remat=False)
+
+        def cfg_eval(z, c, t):
+            B = z.shape[0]
+            zz = jnp.concatenate([z, z], 0)
+            cc = jnp.concatenate([jnp.zeros_like(c), c], 0)
+            tt = jnp.full((2 * B,), t)
+            e = eps(zz, tt, cc)
+            return cfg_combine(e[:B], e[B:], 7.5)
+
+        t, tn = jnp.int32(800), jnp.int32(766)
+        e_s = cfg_eval(z_s, cbar, t)
+        z_s2 = samplers.ddim_step(sched, z_s, t, tn, e_s)
+        e_b = cfg_eval(z_b, cm, t)
+        z_b2 = samplers.ddim_step(sched, z_b, t, tn, e_b)
+        return z_s2, z_b2
+
+    return DryrunCase(f"{cfg.name}:sage_serve", sage_step,
+                      (params_sds, z_shared, z_branch, cbar, cm),
+                      {"batch": k_groups, "seq": group_n, "kind": "sage"})
+
+
+_ALLOWED_KW = {
+    "train": ("optim", "fsdp", "remat", "unroll"),
+    "prefill": ("fsdp", "unroll"),
+    "decode": ("fsdp", "unroll", "cache_seq_shard"),
+    "sage": ("unroll", "no_tp"),
+}
+
+
+def build_case(arch: str, shape_name: str, mesh, smoke: bool = False,
+               n_blocks: Optional[int] = None,
+               attn_impl: Optional[str] = None,
+               attn_block: int = 0, **kw) -> DryrunCase:
+    import dataclasses
+    cfg = get_config(arch, smoke=smoke)
+    if n_blocks is not None:
+        cfg = scale_config(cfg, n_blocks)
+    if attn_impl:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    if attn_block:
+        cfg = dataclasses.replace(cfg, attn_block=attn_block)
+    if shape_name == "sage_serve":
+        kw = {k: v for k, v in kw.items() if k in _ALLOWED_KW["sage"]}
+        return build_sage_serve(cfg, mesh, **kw)
+    shape = SHAPES[shape_name]
+    kw = {k: v for k, v in kw.items() if k in _ALLOWED_KW[shape.kind]}
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, **kw)
+    return build_decode(cfg, shape, mesh, **kw)

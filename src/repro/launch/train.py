@@ -1,0 +1,82 @@
+"""Training launcher for the transformer substrate.
+
+Runs real steps on the available devices (CPU smoke / debug mesh here; the
+same pjit path lowers to the production mesh via launch/dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch phi3-mini-3.8b \
+        --smoke --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.config import OptimConfig, get_config
+from repro.data.synthetic import token_stream
+from repro.models import transformer as tfm
+from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
+                                    make_optimizer)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optim", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    oc = OptimConfig(kind=args.optim, lr=args.lr)
+    opt = make_optimizer(oc)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"devices={jax.device_count()}")
+
+    extras = {}
+    if cfg.family == "vlm":
+        extras["image_embeds"] = jnp.zeros(
+            (args.batch, cfg.n_image_tokens, cfg.vision_dim), jnp.float32)
+    if cfg.family == "encdec":
+        extras["frames"] = jnp.zeros(
+            (args.batch, max(args.seq // 4, 16), cfg.enc_input_dim),
+            jnp.float32)
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: tfm.lm_loss(p, cfg, batch))(params)
+        grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, params, oc.lr)
+        return apply_updates(params, updates), opt_state, loss, gnorm
+
+    stream = token_stream(cfg.vocab, args.batch, args.seq)
+    losses, t0 = [], time.time()
+    for i in range(args.steps):
+        batch = {**next(stream), **extras}
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, loss, gnorm = train_step(params, opt_state, batch)
+        losses.append(float(loss))
+        if i % 5 == 0:
+            print(f"step {i:4d} loss={losses[-1]:.4f} gnorm={float(gnorm):.2f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    print(f"loss {losses[0]:.4f} -> {np.mean(losses[-3:]):.4f}")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, args.steps, params)
+        print("checkpoint ->", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,270 @@
+"""Attention mixers: GQA (covers MHA/MQA, bias, qk_norm, sliding window,
+cross-attention) and DeepSeek-style MLA with compressed-KV caching.
+
+Cache layouts
+-------------
+GQA:  {"k": (B, L, Hkv, hd), "v": (B, L, Hkv, hd)}   L = max_len or window
+MLA:  {"ckv": (B, L, kv_lora), "kr": (B, L, rope_hd)}
+
+Sliding-window serving uses the same layout with L = window and ring-buffer
+addressing (slot = pos % window); RoPE is applied *before* caching, so slot
+order is irrelevant to the attention math.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import (apply_rope, attend, attend_chunked,
+                                 causal_mask, dense_init, dot, rms_norm)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig, cross: bool = False,
+             dtype=jnp.float32) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    del cross  # cross-attn memory is already projected to d_model
+    p: Params = {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _qkv(p: Params, cfg: ModelConfig, x: jax.Array,
+         kv_src: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = dot(x, p["wq"])
+    k = dot(kv_src, p["wk"])
+    v = dot(kv_src, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, kv_src.shape[1], cfg.n_kv_heads, hd)
+    v = v.reshape(B, kv_src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    return q, k, v
+
+
+def gqa_full(p: Params, cfg: ModelConfig, x: jax.Array, *,
+             causal: bool = True, window: int = 0,
+             memory: Optional[jax.Array] = None,
+             pos0: int = 0) -> jax.Array:
+    """Full-sequence attention (training / encoder / cross)."""
+    kv_src = memory if memory is not None else x
+    q, k, v = _qkv(p, cfg, x, kv_src)
+    if memory is None:  # self-attention gets RoPE
+        pos = jnp.arange(x.shape[1]) + pos0
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    if cfg.attn_impl == "chunked":
+        out = attend_chunked(q, k, v, causal=causal, window=window,
+                             scale=1.0 / math.sqrt(cfg.hd),
+                             block=cfg.attn_block)
+    else:
+        mask = (causal_mask(q.shape[1], k.shape[1], window=window)
+                if causal else None)
+        out = attend(q, k, v, mask, 1.0 / math.sqrt(cfg.hd))
+    return dot(out.reshape(*x.shape[:2], -1), p["wo"])
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype) -> Params:
+    shp = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def gqa_prefill(p: Params, cfg: ModelConfig, x: jax.Array, *,
+                max_len: int, window: int = 0) -> Tuple[jax.Array, Params]:
+    """Causal self-attention over the prompt; returns output + filled cache.
+
+    With ``window`` the cache holds the last ``window`` (ring layout —
+    consistent with :func:`gqa_decode` since S % window slots line up when
+    the prompt is written sequentially; here we write rows at i % window).
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, x)
+    pos = jnp.arange(S)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    if cfg.attn_impl == "chunked":
+        out = attend_chunked(q, k, v, causal=True, window=window,
+                             scale=1.0 / math.sqrt(cfg.hd),
+                             block=cfg.attn_block)
+    else:
+        mask = causal_mask(S, S, window=window)
+        out = attend(q, k, v, mask, 1.0 / math.sqrt(cfg.hd))
+    cache = gqa_cache_init(cfg, B, max_len, k.dtype)
+    if window and max_len == window and S >= window:
+        # ring layout: keep the last `window` rows at slot = abs_pos % window
+        slots = jnp.arange(S - window, S) % window
+        cache = {"k": cache["k"].at[:, slots].set(k[:, -window:]),
+                 "v": cache["v"].at[:, slots].set(v[:, -window:])}
+    else:
+        cache = {"k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+                 "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)}
+    return dot(out.reshape(B, S, -1), p["wo"]), cache
+
+
+def gqa_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+               pos: jax.Array, *, ring: bool = False,
+               memory_kv: Optional[Params] = None
+               ) -> Tuple[jax.Array, Params]:
+    """One-token decode. x (B,1,D); pos scalar int32 (current index)."""
+    B = x.shape[0]
+    q, k, v = _qkv(p, cfg, x, x)
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k = apply_rope(k, pos[None], cfg.rope_theta)
+    L = cache["k"].shape[1]
+    slot = pos % L if ring else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+    valid = (jnp.arange(L) <= pos)[None, None, None, None, :]
+    out = attend(q, ck, cv, valid, 1.0 / math.sqrt(cfg.hd))
+    return dot(out.reshape(B, 1, -1), p["wo"]), {"k": ck, "v": cv}
+
+
+def gqa_cross_cache(p: Params, cfg: ModelConfig, memory: jax.Array) -> Params:
+    """Precompute cross-attention K/V from encoder/image memory."""
+    B, S, _ = memory.shape
+    k = dot(memory, p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = dot(memory, p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(k.dtype).reshape(1, 1, cfg.n_kv_heads, cfg.hd)
+        v = v + p["bv"].astype(v.dtype).reshape(1, 1, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    return {"k": k, "v": v}
+
+
+def gqa_cross_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                     kv: Params) -> jax.Array:
+    """Cross-attention of one (or few) query tokens against cached memory KV."""
+    B, S, _ = x.shape
+    q = dot(x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+    out = attend(q, kv["k"], kv["v"], None, 1.0 / math.sqrt(cfg.hd))
+    return dot(out.reshape(B, S, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq": dense_init(k1, d, H * qd, dtype),
+        "wdkv": dense_init(k2, d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "wukv": dense_init(k3, m.kv_lora_rank,
+                           H * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": dense_init(k4, H * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_q(p, cfg, x, pos):
+    m = cfg.mla
+    B, S, _ = x.shape
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = dot(x, p["wq"]).reshape(B, S, cfg.n_heads, qd)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _mla_ckv(p, cfg, x, pos):
+    m = cfg.mla
+    dkv = dot(x, p["wdkv"])
+    ckv, kr = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p["kv_norm"], cfg.rms_eps)
+    kr = apply_rope(kr[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+    return ckv, kr
+
+
+def _mla_attend(p, cfg, q, ckv, kr, mask):
+    """q (B,Sq,H,nope+rope); ckv (B,Sk,r); kr (B,Sk,rope)."""
+    m = cfg.mla
+    B, Sk, _ = ckv.shape
+    H = cfg.n_heads
+    up = dot(ckv, p["wukv"]).reshape(B, Sk, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(up, [m.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, Sk, H, m.qk_rope_head_dim))],
+        axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    out = attend(q, k, v, mask, scale)
+    return dot(out.reshape(B, q.shape[1], -1), p["wo"])
+
+
+def mla_full(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    q = _mla_q(p, cfg, x, pos)
+    ckv, kr = _mla_ckv(p, cfg, x, pos)
+    return _mla_attend(p, cfg, q, ckv, kr, causal_mask(S, S))
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype)}
+
+
+def mla_prefill(p: Params, cfg: ModelConfig, x: jax.Array, *,
+                max_len: int) -> Tuple[jax.Array, Params]:
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    q = _mla_q(p, cfg, x, pos)
+    ckv, kr = _mla_ckv(p, cfg, x, pos)
+    out = _mla_attend(p, cfg, q, ckv, kr, causal_mask(S, S))
+    cache = mla_cache_init(cfg, B, max_len, ckv.dtype)
+    cache = {"ckv": jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, 0, 1),
+             "kr": jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr, 0, 1)}
+    return out, cache
+
+
+def mla_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+               pos: jax.Array) -> Tuple[jax.Array, Params]:
+    B = x.shape[0]
+    q = _mla_q(p, cfg, x, pos[None])
+    ckv, kr = _mla_ckv(p, cfg, x, pos[None])
+    c2 = {"ckv": jax.lax.dynamic_update_slice_in_dim(
+              cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, 1),
+          "kr": jax.lax.dynamic_update_slice_in_dim(
+              cache["kr"], kr.astype(cache["kr"].dtype), pos, 1)}
+    L = c2["ckv"].shape[1]
+    mask = (jnp.arange(L) <= pos)[None, None, None, None, :]
+    out = _mla_attend(p, cfg, q, c2["ckv"], c2["kr"], mask)
+    return out, c2

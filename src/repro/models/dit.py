@@ -1,0 +1,128 @@
+"""Latent DiT denoiser — the TPU-native adaptation of the paper's SD-v1.5
+UNet backbone (DESIGN.md §2): patchified latent transformer, adaLN-zero
+timestep conditioning, cross-attention text conditioning (PixArt-style).
+
+eps = dit.forward(params, cfg, z_t, t, cond)   # epsilon-prediction
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import apply_mlp, dense_init, dot, init_mlp
+
+Params = Dict[str, Any]
+
+_TDIM = 256
+
+
+def timestep_embedding(t: jax.Array, dim: int = _TDIM) -> jax.Array:
+    """Sinusoidal embedding; t (B,) float or int -> (B, dim) fp32."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def _ln(x: jax.Array) -> jax.Array:
+    """Parameter-free LayerNorm (affine comes from adaLN modulation)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+
+
+def _mod(x: jax.Array, shift: jax.Array, scale: jax.Array) -> jax.Array:
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def n_tokens(cfg: ModelConfig) -> int:
+    return (cfg.latent_size // cfg.patch) ** 2
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    p_in = cfg.patch * cfg.patch * cfg.latent_channels
+    ks = jax.random.split(key, 10)
+
+    def init_block(k):
+        kb = jax.random.split(k, 4)
+        return {
+            "adaln": jnp.zeros((d, 6 * d), jnp.float32),
+            "adaln_b": jnp.zeros((6 * d,), jnp.float32),
+            "attn": attn.init_gqa(kb[0], cfg),
+            "lnx": jnp.zeros((d,), jnp.float32),
+            "xattn": attn.init_gqa(kb[1], cfg, cross=True),
+            "mlp": init_mlp(kb[2], d, cfg.d_ff, cfg.mlp_kind),
+        }
+
+    return {
+        "patch_in": dense_init(ks[0], p_in, d),
+        "pos": jax.random.normal(ks[1], (n_tokens(cfg), d)) * 0.02,
+        "t_w1": dense_init(ks[2], _TDIM, d),
+        "t_w2": dense_init(ks[3], d, d),
+        "cond_proj": dense_init(ks[4], cfg.cond_dim, d),
+        "blocks": jax.vmap(init_block)(jax.random.split(ks[5], cfg.n_layers)),
+        "final_adaln": jnp.zeros((d, 2 * d), jnp.float32),
+        "final_adaln_b": jnp.zeros((2 * d,), jnp.float32),
+        # small (not zero) init: a zero output matrix would also zero every
+        # upstream gradient, which deadlocks LoRA fine-tuning (base frozen).
+        "out": dense_init(ks[6], d, p_in) * 0.02,
+    }
+
+
+def patchify(cfg: ModelConfig, z: jax.Array) -> jax.Array:
+    B, H, W, C = z.shape
+    p = cfg.patch
+    z = z.reshape(B, H // p, p, W // p, p, C).transpose(0, 1, 3, 2, 4, 5)
+    return z.reshape(B, (H // p) * (W // p), p * p * C)
+
+
+def unpatchify(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, n, _ = x.shape
+    p, C = cfg.patch, cfg.latent_channels
+    hw = int(math.isqrt(n))
+    x = x.reshape(B, hw, hw, p, p, C).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, hw * p, hw * p, C)
+
+
+def forward(params: Params, cfg: ModelConfig, z: jax.Array, t: jax.Array,
+            cond: jax.Array, remat: bool = False) -> jax.Array:
+    """z (B,H,W,C) latents at time t; t (B,); cond (B,Lc,cond_dim) -> eps."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = dot(patchify(cfg, z).astype(dtype), params["patch_in"])
+    x = x + params["pos"].astype(dtype)[None]
+    temb = timestep_embedding(t)
+    temb = dot(jax.nn.silu(dot(temb, params["t_w1"])), params["t_w2"])  # (B,d)
+    c = dot(cond.astype(dtype), params["cond_proj"])                    # (B,Lc,d)
+    tmod = jax.nn.silu(temb)
+
+    def body(x, bp):
+        mod = (tmod @ bp["adaln"].astype(tmod.dtype)
+               + bp["adaln_b"].astype(tmod.dtype))
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        h = _mod(_ln(x), sh1.astype(dtype), sc1.astype(dtype))
+        x = x + g1[:, None, :].astype(dtype) * attn.gqa_full(
+            bp["attn"], cfg, h, causal=False)
+        hx = _ln(x) * (1.0 + bp["lnx"].astype(dtype))
+        x = x + attn.gqa_full(bp["xattn"], cfg, hx, causal=False, memory=c)
+        h = _mod(_ln(x), sh2.astype(dtype), sc2.astype(dtype))
+        x = x + g2[:, None, :].astype(dtype) * apply_mlp(bp["mlp"], h,
+                                                         cfg.mlp_kind)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+
+    fmod = (tmod @ params["final_adaln"].astype(tmod.dtype)
+            + params["final_adaln_b"].astype(tmod.dtype))
+    shf, scf = jnp.split(fmod, 2, axis=-1)
+    x = _mod(_ln(x), shf.astype(dtype), scf.astype(dtype))
+    out = dot(x, params["out"])
+    return unpatchify(cfg, out).astype(jnp.float32)

@@ -1,0 +1,175 @@
+"""Shared neural-net building blocks (pure-functional, dict params).
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays (param_dtype, default fp32);
+* activations run in ``cfg.dtype`` (default bf16) — weights are cast at the
+  matmul site via :func:`dot`;
+* shapes: x (B, S, D); attention heads last-but-one: q (B, S, H, hd).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+
+def dot(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x @ w with the weight cast to the activation dtype."""
+    return x @ w.astype(x.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); pos: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = pos[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, kind: str, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"wi": dense_init(ks[0], d, ff, dtype),
+                "wg": dense_init(ks[1], d, ff, dtype),
+                "wo": dense_init(ks[2], ff, d, dtype)}
+    return {"wi": dense_init(ks[0], d, ff, dtype),
+            "wo": dense_init(ks[2], ff, d, dtype)}
+
+
+def apply_mlp(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return dot(jax.nn.silu(dot(x, p["wg"])) * dot(x, p["wi"]), p["wo"])
+    return dot(jax.nn.gelu(dot(x, p["wi"])), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# attention core
+# ---------------------------------------------------------------------------
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array,
+           mask: Optional[jax.Array], scale: float) -> jax.Array:
+    """q (B,Sq,H,hd), k/v (B,Sk,Hkv,hd) with H % Hkv == 0 -> (B,Sq,H,hd).
+
+    Scores accumulate in fp32; GQA via reshape (no kv repeat materialised
+    beyond the einsum broadcast).
+    """
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    q = q.reshape(B, Sq, Hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def causal_mask(sq: int, sk: int, q_offset: int = 0,
+                window: int = 0) -> jax.Array:
+    """(1,1,1,sq,sk) boolean mask; window=0 means full causal."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    m = ki <= qi
+    if window:
+        m &= ki > qi - window
+    return m[None, None, None]
+
+
+def attend_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, window: int, scale: float,
+                   block: int = 1024) -> jax.Array:
+    """Online-softmax attention with the key axis scanned in blocks — the
+    jnp twin of kernels/flash_attention.  Never materialises the (Sq, Sk)
+    score matrix: peak attention memory drops from O(Sq*Sk) to
+    O(Sq*block), the memory-term lever for 32k prefill (EXPERIMENTS §Perf).
+    Same signature semantics as :func:`attend`."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    pad = (-Sk) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (Sk + pad) // block
+    qr = q.reshape(B, Sq, Hkv, g, hd)
+    kb = k.reshape(B, nb, block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    qi = jnp.arange(Sq)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, bi = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, kc,
+                       preferred_element_type=jnp.float32) * scale
+        ki = bi * block + jnp.arange(block)
+        valid = (ki[None, :] < Sk)
+        if causal:
+            valid = valid & (ki[None, :] <= qi[:, None])
+        if window:
+            valid = valid & (ki[None, :] > qi[:, None] - window)
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha[..., 0][..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, g, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nb)))
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)

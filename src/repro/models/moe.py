@@ -1,0 +1,153 @@
+"""Mixture-of-Experts MLP with top-k routing.
+
+Dispatch is sort-based with static capacity (dropless up to the capacity
+factor): token-choice pairs are sorted by expert id inside fixed-size token
+*groups* (kept local so the sort never crosses the data axis), packed into an
+(E, C, d) buffer, run through a batched expert matmul, and scattered back
+with the router weights.  This keeps compiled FLOPs proportional to
+*active* experts (E*C ~ tokens*top_k*capacity_factor), which is what the
+roofline analysis needs — a dense all-expert einsum would overcount ~E/k x.
+
+Shared experts (DeepSeek-style) are a fused always-on MLP.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, dot
+
+Params = Dict[str, Any]
+
+
+def _capacity(tokens: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = int(tokens * top_k * cf / n_experts) + 1
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    m = cfg.moe
+    d, ff = cfg.d_model, m.d_ff_expert
+    kr, ke, ks = jax.random.split(key, 3)
+    ekeys = jax.random.split(ke, 3)
+    p: Params = {
+        "router": dense_init(kr, d, m.n_routed, dtype),
+        "wi": jax.vmap(lambda k: dense_init(k, d, ff, dtype))(
+            jax.random.split(ekeys[0], m.n_routed)),
+        "wg": jax.vmap(lambda k: dense_init(k, d, ff, dtype))(
+            jax.random.split(ekeys[1], m.n_routed)),
+        "wo": jax.vmap(lambda k: dense_init(k, ff, d, dtype))(
+            jax.random.split(ekeys[2], m.n_routed)),
+    }
+    if m.n_shared:
+        sf = m.n_shared * ff
+        s1, s2, s3 = jax.random.split(ks, 3)
+        p["shared"] = {"wi": dense_init(s1, d, sf, dtype),
+                       "wg": dense_init(s2, d, sf, dtype),
+                       "wo": dense_init(s3, sf, d, dtype)}
+    return p
+
+
+def _route_group(x: jax.Array, idx: jax.Array, w: jax.Array,
+                 n_experts: int, capacity: int):
+    """Pack one token group.  x (T,d); idx/w (T,k) -> buffer (E*C, d) plus
+    scatter metadata.  Runs under vmap over groups."""
+    T, k = idx.shape
+    flat_e = idx.reshape(T * k)
+    flat_w = w.reshape(T * k)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, stok, sw = flat_e[order], flat_tok[order], flat_w[order]
+    # rank of each entry within its expert
+    first = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(T * k) - first
+    keep = rank < capacity
+    slot = jnp.where(keep, se * capacity + jnp.minimum(rank, capacity - 1), 0)
+    gathered = jnp.where(keep[:, None], x[stok], 0.0)
+    buf = jnp.zeros((n_experts * capacity, x.shape[-1]), x.dtype)
+    buf = buf.at[slot].add(gathered)   # slots unique among kept entries
+    return buf, (slot, stok, sw, keep)
+
+
+def _unroute_group(out_buf: jax.Array, meta, T: int) -> jax.Array:
+    slot, stok, sw, keep = meta
+    vals = out_buf[slot] * (sw * keep)[:, None].astype(out_buf.dtype)
+    y = jnp.zeros((T, out_buf.shape[-1]), out_buf.dtype)
+    return y.at[stok].add(vals)
+
+
+def apply_moe(p: Params, cfg: ModelConfig, x: jax.Array,
+              group_size: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,D) -> (out (B,S,D), aux load-balance loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt @ p["router"].astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    wk, idx = jax.lax.top_k(probs, m.top_k)
+    wk = wk / jnp.sum(wk, axis=-1, keepdims=True)          # renormalise top-k
+
+    # aux loss: mean prob per expert * mean assignment fraction (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, m.n_routed, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = m.router_aux_coef * m.n_routed * jnp.sum(me * ce)
+
+    g = group_size or min(T, 4096)
+    n_groups = -(-T // g)
+    pad = n_groups * g - T
+    if pad:
+        xt_p = jnp.pad(xt, ((0, pad), (0, 0)))
+        idx_p = jnp.pad(idx, ((0, pad), (0, 0)))
+        wk_p = jnp.pad(wk, ((0, pad), (0, 0)))
+    else:
+        xt_p, idx_p, wk_p = xt, idx, wk
+    xg = xt_p.reshape(n_groups, g, d)
+    ig = idx_p.reshape(n_groups, g, m.top_k)
+    wg_ = wk_p.reshape(n_groups, g, m.top_k).astype(x.dtype)
+
+    C = _capacity(g, m.top_k, m.n_routed, m.capacity_factor)
+    buf, meta = jax.vmap(
+        lambda xx, ii, ww: _route_group(xx, ii, ww, m.n_routed, C))(xg, ig, wg_)
+    ebuf = buf.reshape(n_groups, m.n_routed, C, d)
+
+    # batched expert MLP: (G,E,C,d) x (E,d,f)
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", ebuf, p["wg"].astype(x.dtype)))
+         * jnp.einsum("gecd,edf->gecf", ebuf, p["wi"].astype(x.dtype)))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    out_buf = out_buf.reshape(n_groups, m.n_routed * C, d)
+
+    y = jax.vmap(lambda ob, mt: _unroute_group(ob, mt, g))(out_buf, meta)
+    y = y.reshape(n_groups * g, d)[:T]
+
+    if m.n_shared:
+        sp = p["shared"]
+        y = y + dot(jax.nn.silu(dot(xt, sp["wg"])) * dot(xt, sp["wi"]), sp["wo"])
+    return y.reshape(B, S, d), aux
+
+
+def apply_moe_dense_ref(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Oracle: compute every expert densely and mix with router weights.
+    Matches apply_moe exactly when nothing is dropped.  Test-only."""
+    m = cfg.moe
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = (xt @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    wk, idx = jax.lax.top_k(probs, m.top_k)
+    wk = wk / jnp.sum(wk, axis=-1, keepdims=True)
+    wfull = jnp.zeros_like(probs)
+    wfull = jax.vmap(lambda w_, i_, row: row.at[i_].set(w_))(wk, idx, wfull)
+    h = (jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["wg"].astype(x.dtype)))
+         * jnp.einsum("td,edf->tef", xt, p["wi"].astype(x.dtype)))
+    ey = jnp.einsum("tef,efd->ted", h, p["wo"].astype(x.dtype))
+    y = jnp.einsum("ted,te->td", ey, wfull.astype(x.dtype))
+    if m.n_shared:
+        sp = p["shared"]
+        y = y + dot(jax.nn.silu(dot(xt, sp["wg"])) * dot(xt, sp["wi"]), sp["wo"])
+    return y.reshape(B, S, d)

@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).  [arXiv:2402.19427]
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+r_t / i_t: sigmoid gates (dense here; block-diagonal in the paper — noted).
+
+Train/prefill via jax.lax.associative_scan; decode is a single-step update.
+Cache: {"conv": (B, K-1, W), "state": (B, W)}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, dot
+from repro.models.ssm import causal_conv1d, conv_step
+
+Params = Dict[str, Any]
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    K = cfg.rglru.conv_kernel
+    ks = jax.random.split(key, 6)
+    # init Lambda so a ~ U(0.9, 0.999)^c-ish (Griffin appendix)
+    lam = jax.random.uniform(ks[4], (w,), jnp.float32, 0.38, 0.8)
+    return {
+        "wx": dense_init(ks[0], d, w, dtype),
+        "wg": dense_init(ks[1], d, w, dtype),
+        "conv_w": jax.random.normal(ks[2], (K, w), dtype) / K,
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": dense_init(ks[3], w, w, dtype),
+        "ba": jnp.zeros((w,), dtype),
+        "wi": dense_init(ks[5], w, w, dtype),
+        "bi": jnp.zeros((w,), dtype),
+        "lam": lam,
+        "out": dense_init(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+
+
+def _gates(p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """log_a (fp32) and gated input sqrt(1-a^2)*i*x."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(dot(x, p["wa"]).astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(dot(x, p["wi"]).astype(jnp.float32) + p["bi"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * i * xf
+
+
+def rglru_full(p: Params, cfg: ModelConfig, u: jax.Array,
+               init_state=None, return_cache: bool = False):
+    """u (B,S,D) -> (B,S,D) [, cache]."""
+    B, S, _ = u.shape
+    K = cfg.rglru.conv_kernel
+    gate = jax.nn.gelu(dot(u, p["wg"]).astype(jnp.float32))
+    xw = dot(u, p["wx"])
+    x = causal_conv1d(xw, p["conv_w"]) + p["conv_b"].astype(xw.dtype)
+    log_a, b = _gates(p, x)
+    a = jnp.exp(log_a)
+    if init_state is not None:
+        # fold carried state into the first step: h_0' contribution
+        b = b.at[:, 0].add(a[:, 0] * init_state.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * gate).astype(u.dtype)
+    out = dot(y, p["out"])
+    if return_cache:
+        tail = xw[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+            xw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return out, {"conv": tail, "state": h[:, -1]}
+    return out
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int, dtype) -> Params:
+    w = cfg.rglru.lru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.rglru.conv_kernel - 1, w), dtype),
+            "state": jnp.zeros((batch, w), jnp.float32)}
+
+
+def rglru_decode(p: Params, cfg: ModelConfig, u: jax.Array, cache: Params
+                 ) -> Tuple[jax.Array, Params]:
+    """u (B,1,D)."""
+    gate = jax.nn.gelu(dot(u, p["wg"]).astype(jnp.float32))[:, 0]
+    xw = dot(u, p["wx"])                                    # (B,1,W)
+    window = jnp.concatenate([cache["conv"], xw], axis=1)
+    x = conv_step(window, p["conv_w"]) + p["conv_b"].astype(xw.dtype)
+    log_a, b = _gates(p, x[:, None, :])
+    h = jnp.exp(log_a[:, 0]) * cache["state"] + b[:, 0]
+    y = (h * gate).astype(u.dtype)[:, None, :]
+    return dot(y, p["out"]), {"conv": window[:, 1:], "state": h}

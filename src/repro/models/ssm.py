@@ -1,0 +1,216 @@
+"""Mamba2 / SSD (state-space duality) mixer.  [arXiv:2405.21060]
+
+Chunked SSD for train/prefill (quadratic intra-chunk + linear inter-chunk
+recurrence) and an O(1)-state single-step recurrence for decode.  Single
+B/C group (n_groups=1 in all assigned configs) — noted in DESIGN.md.
+
+Cache: {"conv": (B, K-1, conv_dim), "state": (B, H, P, N)}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, dot, rms_norm
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv1d
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (B,S,C), w (K,C) depthwise causal -> (B,S,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],     # (K, 1, C)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=w.shape[1])
+    return out.astype(x.dtype)
+
+
+def conv_step(window: jax.Array, w: jax.Array) -> jax.Array:
+    """window (B,K,C) — the last K inputs (newest last) -> (B,C)."""
+    return jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(window.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., Q) -> (..., Q, Q); out[i,j] = sum_{k=j+1..i} x_k (i>=j)."""
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    Q = x.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, NEG_INF)
+
+
+def ssd_chunked(x: jax.Array, dA: jax.Array, B_: jax.Array, C_: jax.Array,
+                chunk: int, init_state=None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan.  x (b,l,h,p) — already multiplied by dt;
+    dA (b,l,h) = dt * A (negative); B_/C_ (b,l,n).
+    Returns y (b,l,h,p) and final state (b,h,p,n).  fp32 internally.
+    """
+    b, l, h, p = x.shape
+    n = B_.shape[-1]
+    # pad the tail to a chunk multiple: zero inputs with dA=0 (decay=1)
+    # leave y[:l] and the final state untouched.
+    l0 = l
+    if l % chunk:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        l = l + pad
+    c, Q = l // chunk, chunk
+    xf = x.astype(jnp.float32).reshape(b, c, Q, h, p)
+    Bf = B_.astype(jnp.float32).reshape(b, c, Q, n)
+    Cf = C_.astype(jnp.float32).reshape(b, c, Q, n)
+    A = dA.astype(jnp.float32).reshape(b, c, Q, h).transpose(0, 3, 1, 2)  # b h c Q
+    A_cum = jnp.cumsum(A, axis=-1)
+
+    # intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(A))                                   # (b,h,c,Q,Q)
+    Y_diag = jnp.einsum("bzqn,bzsn,bhzqs,bzshp->bzqhp", Cf, Bf, L, xf)
+
+    # per-chunk input states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)           # (b,h,c,Q)
+    states = jnp.einsum("bzqn,bhzq,bzqhp->bzhpn", Bf, decay_states, xf)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cum[..., -1])                     # (b,h,c)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        st, dec = inp                                         # (b,h,p,n), (b,h)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s                                        # emit state *entering* the chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (b,c,h,p,n)
+
+    state_decay_out = jnp.exp(A_cum)                          # (b,h,c,Q)
+    Y_off = jnp.einsum("bzqn,bzhpn,bhzq->bzqhp", Cf, prev_states, state_decay_out)
+    y = (Y_diag + Y_off).reshape(b, l, h, p)[:, :l0]
+    return y.astype(x.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    """Separate z/x/BC/dt projections (instead of one packed in_proj) so the
+    wide dims shard cleanly on the model axis (DESIGN.md §5)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "z_proj": dense_init(k4, d, d_in, dtype),
+        "x_proj": dense_init(k1, d, d_in, dtype),
+        "bc_proj": dense_init(k5, d, 2 * s.d_state, dtype),
+        "dt_proj": dense_init(k6, d, H, dtype),
+        "conv_w": (jax.random.normal(k2, (s.conv_kernel, conv_dim), dtype)
+                   / s.conv_kernel),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(k3, d_in, d, dtype),
+    }
+
+
+def _ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return s, d_in, H
+
+
+def _ssm_split(p, cfg, u):
+    """Projections.  u (B,S,D) -> z (B,S,d_in), xBC (B,S,conv_dim), dt (B,S,H)."""
+    z = dot(u, p["z_proj"])
+    xBC = jnp.concatenate([dot(u, p["x_proj"]), dot(u, p["bc_proj"])], -1)
+    dt = dot(u, p["dt_proj"])
+    return z, xBC, dt
+
+
+def _ssm_post(p, cfg, y, z):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["norm"], cfg.rms_eps)
+    return dot(y, p["out_proj"])
+
+
+def ssm_full(p: Params, cfg: ModelConfig, u: jax.Array,
+             init_state=None, return_cache: bool = False):
+    """Train / prefill path.  u (B,S,D) -> (B,S,D) [, cache]."""
+    s, d_in, H = _ssm_dims(cfg)
+    B, S, _ = u.shape
+    z, xBC, dt = _ssm_split(p, cfg, u)
+    xBC_conv = jax.nn.silu(
+        causal_conv1d(xBC, p["conv_w"]).astype(jnp.float32)
+        + p["conv_b"].astype(jnp.float32)).astype(u.dtype)
+    x, B_, C_ = jnp.split(xBC_conv, [d_in, d_in + s.d_state], axis=-1)
+    x = x.reshape(B, S, H, s.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+    y, final = ssd_chunked(x * dt[..., None].astype(x.dtype),
+                           dt * A, B_, C_, s.chunk, init_state)
+    y = y + x * p["D"].astype(x.dtype)[None, None, :, None]
+    out = _ssm_post(p, cfg, y.reshape(B, S, d_in), z)
+    if return_cache:
+        K = s.conv_kernel
+        conv_tail = xBC[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+            xBC, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return out, {"conv": conv_tail, "state": final}
+    return out
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype) -> Params:
+    s, d_in, H = _ssm_dims(cfg)
+    conv_dim = d_in + 2 * s.d_state
+    return {"conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+            "state": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32)}
+
+
+def ssm_decode(p: Params, cfg: ModelConfig, u: jax.Array, cache: Params,
+               ) -> Tuple[jax.Array, Params]:
+    """One-step recurrence.  u (B,1,D)."""
+    s, d_in, H = _ssm_dims(cfg)
+    B = u.shape[0]
+    z, xBC, dt = _ssm_split(p, cfg, u)
+    window = jnp.concatenate([cache["conv"], xBC], axis=1)            # (B,K,conv)
+    xBC_c = jax.nn.silu(conv_step(window, p["conv_w"]).astype(jnp.float32)
+                        + p["conv_b"].astype(jnp.float32)).astype(u.dtype)
+    x, B_, C_ = jnp.split(xBC_c, [d_in, d_in + s.d_state], axis=-1)   # (B, .)
+    x = x.reshape(B, H, s.head_dim)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt1 * A)                                             # (B,H)
+    xf = x.astype(jnp.float32) * dt1[..., None]
+    state = (cache["state"] * dA[..., None, None]
+             + jnp.einsum("bhp,bn->bhpn", xf, B_.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", state, C_.astype(jnp.float32)).astype(u.dtype)
+    y = y + x * p["D"].astype(x.dtype)[None, :, None]
+    out = _ssm_post(p, cfg, y.reshape(B, 1, d_in), z)
+    return out, {"conv": window[:, 1:], "state": state}

@@ -1,0 +1,453 @@
+"""Model assembly: every assigned architecture family behind one API.
+
+Layer stacks are ``lax.scan`` over stacked params (compile-time friendly for
+52-64 layer models); non-uniform families scan *super-blocks* (VLM: 4 self +
+1 cross; RecurrentGemma: rglru,rglru,local_attn) with remainders unrolled.
+
+Public API
+----------
+init_params(cfg, key)                          -> params
+forward_train(params, cfg, tokens, extras)     -> (logits, aux)
+prefill(params, cfg, tokens, extras, max_len)  -> (last_logits, cache)
+decode_step(params, cfg, cache, token, pos)    -> (logits, cache)
+init_cache(cfg, batch, max_len, window=...)    -> cache (zeros; decode-only entry)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (MIX_ATTN, MIX_CROSS_ATTN, MIX_LOCAL_ATTN, MIX_RGLRU,
+                          MIX_SSM, ModelConfig)
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import dense_init, dot, init_mlp, apply_mlp, rms_norm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# plan: how layers are grouped into (prefix, scanned blocks, suffix)
+# ---------------------------------------------------------------------------
+
+def plan(cfg: ModelConfig) -> Tuple[Tuple[str, ...], Tuple[str, ...], int,
+                                    Tuple[str, ...]]:
+    kinds = cfg.layer_kinds()
+    if cfg.family == "moe":
+        f = cfg.moe.first_moe_layer
+        return kinds[:f], (MIX_ATTN,), cfg.n_layers - f, ()
+    if cfg.family == "encdec":
+        return (), (MIX_CROSS_ATTN,), cfg.n_layers, ()
+    if cfg.pattern:
+        n_blocks = (cfg.n_layers - len(cfg.remainder)) // len(cfg.pattern)
+        return (), tuple(cfg.pattern), n_blocks, tuple(cfg.remainder)
+    return (), (MIX_ATTN,), cfg.n_layers, ()
+
+
+def _mlp_kind(cfg: ModelConfig, in_scan: bool) -> str:
+    """'moe' | 'dense' | 'none' for a layer position."""
+    if cfg.d_ff == 0 and cfg.moe is None:
+        return "none"
+    if cfg.moe is not None and in_scan:
+        return "moe"
+    return "dense"
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: str, mlpk: str,
+               dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"ln1": jnp.zeros((d,), dtype)}
+    if kind in (MIX_ATTN, MIX_LOCAL_ATTN, MIX_CROSS_ATTN):
+        if cfg.attn_kind == "mla":
+            p["mix"] = attn.init_mla(k1, cfg, dtype)
+        else:
+            p["mix"] = attn.init_gqa(k1, cfg, dtype=dtype)
+        if kind == MIX_CROSS_ATTN:
+            p["lnx"] = jnp.zeros((d,), dtype)
+            p["xattn"] = attn.init_gqa(k4, cfg, cross=True, dtype=dtype)
+    elif kind == MIX_SSM:
+        p["mix"] = ssm_lib.init_ssm(k1, cfg, dtype)
+    elif kind == MIX_RGLRU:
+        p["mix"] = rglru_lib.init_rglru(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if mlpk == "dense":
+        ff = (cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense)
+              else cfg.d_ff)
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["mlp"] = init_mlp(k2, d, ff, cfg.mlp_kind, dtype)
+    elif mlpk == "moe":
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["moe"] = moe_lib.init_moe(k3, cfg, dtype)
+    return p
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype, window: int = 0) -> Optional[Params]:
+    if kind in (MIX_ATTN, MIX_CROSS_ATTN):
+        L = window or max_len
+        if cfg.attn_kind == "mla":
+            c = attn.mla_cache_init(cfg, batch, L, dtype)
+        else:
+            c = attn.gqa_cache_init(cfg, batch, L, dtype)
+        if kind == MIX_CROSS_ATTN:
+            n_mem = (cfg.n_image_tokens if cfg.family == "vlm"
+                     else _enc_len_default(cfg))
+            c = {"self": c,
+                 "cross": {"k": jnp.zeros((batch, n_mem, cfg.n_kv_heads, cfg.hd), dtype),
+                           "v": jnp.zeros((batch, n_mem, cfg.n_kv_heads, cfg.hd), dtype)}}
+        return c
+    if kind == MIX_LOCAL_ATTN:
+        return attn.gqa_cache_init(cfg, batch, min(cfg.window, max_len), dtype)
+    if kind == MIX_SSM:
+        return ssm_lib.ssm_cache_init(cfg, batch, dtype)
+    if kind == MIX_RGLRU:
+        return rglru_lib.rglru_cache_init(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+_ENC_LEN = 4096  # default encoder memory length for enc-dec decode caches
+
+
+def _enc_len_default(cfg: ModelConfig) -> int:
+    return _ENC_LEN
+
+
+def apply_layer(p: Params, cfg: ModelConfig, kind: str, mlpk: str,
+                x: jax.Array, *, mode: str, cache=None, pos=None,
+                memory=None, window: int = 0, ring: bool = False,
+                max_len: int = 0):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    new_cache = cache
+    if kind in (MIX_ATTN, MIX_LOCAL_ATTN, MIX_CROSS_ATTN):
+        w = cfg.window if kind == MIX_LOCAL_ATTN else window
+        self_cache = cache["self"] if (kind == MIX_CROSS_ATTN and cache is not None) else cache
+        if mode == "train":
+            if cfg.attn_kind == "mla":
+                a = attn.mla_full(p["mix"], cfg, h)
+            else:
+                a = attn.gqa_full(p["mix"], cfg, h, window=w)
+            nsc = None
+        elif mode == "prefill":
+            if cfg.attn_kind == "mla":
+                a, nsc = attn.mla_prefill(p["mix"], cfg, h, max_len=max_len)
+            else:
+                L = min(w, max_len) if w else max_len
+                a, nsc = attn.gqa_prefill(p["mix"], cfg, h, max_len=L,
+                                          window=w)
+        else:  # decode
+            if cfg.attn_kind == "mla":
+                a, nsc = attn.mla_decode(p["mix"], cfg, h, self_cache, pos)
+            else:
+                a, nsc = attn.gqa_decode(p["mix"], cfg, h, self_cache, pos,
+                                         ring=ring or kind == MIX_LOCAL_ATTN)
+        x = x + a
+        if kind == MIX_CROSS_ATTN:
+            hx = rms_norm(x, p["lnx"], cfg.rms_eps)
+            if mode == "train":
+                x = x + attn.gqa_full(p["xattn"], cfg, hx, causal=False,
+                                      memory=memory)
+                new_cache = None
+            elif mode == "prefill":
+                x = x + attn.gqa_full(p["xattn"], cfg, hx, causal=False,
+                                      memory=memory)
+                xkv = attn.gqa_cross_cache(p["xattn"], cfg, memory)
+                new_cache = {"self": nsc, "cross": xkv}
+            else:
+                xkv = cache["cross"]
+                x = x + attn.gqa_cross_decode(p["xattn"], cfg, hx, xkv)
+                new_cache = {"self": nsc, "cross": xkv}
+        else:
+            new_cache = nsc
+    elif kind == MIX_SSM:
+        if mode == "train":
+            x = x + ssm_lib.ssm_full(p["mix"], cfg, h)
+        elif mode == "prefill":
+            a, new_cache = ssm_lib.ssm_full(p["mix"], cfg, h, return_cache=True)
+            x = x + a
+        else:
+            a, new_cache = ssm_lib.ssm_decode(p["mix"], cfg, h, cache)
+            x = x + a
+    elif kind == MIX_RGLRU:
+        if mode == "train":
+            x = x + rglru_lib.rglru_full(p["mix"], cfg, h)
+        elif mode == "prefill":
+            a, new_cache = rglru_lib.rglru_full(p["mix"], cfg, h,
+                                                return_cache=True)
+            x = x + a
+        else:
+            a, new_cache = rglru_lib.rglru_decode(p["mix"], cfg, h, cache)
+            x = x + a
+    else:
+        raise ValueError(kind)
+
+    if mlpk == "dense":
+        x = x + apply_mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.rms_eps),
+                          cfg.mlp_kind)
+    elif mlpk == "moe":
+        y, aux = moe_lib.apply_moe(p["moe"], cfg,
+                                   rms_norm(x, p["ln2"], cfg.rms_eps))
+        x = x + y
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    import numpy as np
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    prefix, block, n_blocks, suffix = plan(cfg)
+    d = cfg.d_model
+    p: Params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, d), dtype) * 0.02
+                  if cfg.vocab else None),
+        "ln_f": jnp.zeros((d,), dtype),
+    }
+    if cfg.vocab and not cfg.tie_embeddings:
+        p["head"] = dense_init(keys[1], d, cfg.vocab, dtype)
+
+    def init_block(k):
+        bks = jax.random.split(k, len(block))
+        return {f"l{j}": init_layer(bks[j], cfg, kind, _mlp_kind(cfg, True),
+                                    dtype)
+                for j, kind in enumerate(block)}
+
+    p["prefix"] = [init_layer(jax.random.fold_in(keys[2], i), cfg, kind,
+                              _mlp_kind(cfg, False), dtype)
+                   for i, kind in enumerate(prefix)]
+    p["blocks"] = jax.vmap(init_block)(jax.random.split(keys[3], n_blocks))
+    p["suffix"] = [init_layer(jax.random.fold_in(keys[4], i), cfg, kind,
+                              _mlp_kind(cfg, False), dtype)
+                   for i, kind in enumerate(suffix)]
+
+    if cfg.family == "vlm":
+        p["proj"] = dense_init(keys[5], cfg.vision_dim, d, dtype)
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(keys[6], cfg.enc_layers)
+
+        def init_enc(k):
+            return {"l0": init_layer(k, cfg, MIX_ATTN, "dense", dtype)}
+
+        p["enc_in"] = dense_init(keys[7], cfg.enc_input_dim, d, dtype)
+        p["enc_blocks"] = jax.vmap(init_enc)(enc_keys)
+        p["enc_ln"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# encoder (enc-dec only): bidirectional attention stack
+# ---------------------------------------------------------------------------
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array,
+           remat: bool = False, unroll: bool = False) -> jax.Array:
+    x = dot(frames.astype(jnp.dtype(cfg.dtype)), params["enc_in"])
+
+    def body(x, bp):
+        h = rms_norm(x, bp["l0"]["ln1"], cfg.rms_eps)
+        x = x + attn.gqa_full(bp["l0"]["mix"], cfg, h, causal=False)
+        x = x + apply_mlp(bp["l0"]["mlp"],
+                          rms_norm(x, bp["l0"]["ln2"], cfg.rms_eps),
+                          cfg.mlp_kind)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"], unroll=unroll)
+    return rms_norm(x, params["enc_ln"], cfg.rms_eps)
+
+
+def _memory(params: Params, cfg: ModelConfig, extras: Optional[Dict],
+            remat: bool = False, unroll: bool = False
+            ) -> Optional[jax.Array]:
+    if cfg.family == "vlm":
+        img = extras["image_embeds"].astype(jnp.dtype(cfg.dtype))
+        return dot(img, params["proj"])
+    if cfg.family == "encdec":
+        return encode(params, cfg, extras["frames"], remat, unroll)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+
+def forward_train(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  extras: Optional[Dict] = None, remat: bool = False,
+                  unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B,S) -> (logits (B,S,V), aux)."""
+    prefix, block, n_blocks, suffix = plan(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    memory = _memory(params, cfg, extras, remat, unroll)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    for lp, kind in zip(params["prefix"], prefix):
+        x, _, a = apply_layer(lp, cfg, kind, _mlp_kind(cfg, False), x,
+                              mode="train", memory=memory)
+        aux0 = aux0 + a
+
+    def body(carry, bp):
+        x, aux = carry
+        for j, kind in enumerate(block):
+            x, _, a = apply_layer(bp[f"l{j}"], cfg, kind,
+                                  _mlp_kind(cfg, True), x, mode="train",
+                                  memory=memory)
+            aux = aux + a
+        return (x, aux), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux0), _ = jax.lax.scan(body, (x, aux0), params["blocks"],
+                                unroll=unroll)
+
+    for lp, kind in zip(params["suffix"], suffix):
+        x, _, a = apply_layer(lp, cfg, kind, _mlp_kind(cfg, False), x,
+                              mode="train", memory=memory)
+        aux0 = aux0 + a
+
+    x = rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = dot(x, head)
+    return logits, aux0
+
+
+# ---------------------------------------------------------------------------
+# cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None, window: int = 0) -> Params:
+    """Zero cache for pure decode dry-runs (no prefill)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    prefix, block, n_blocks, suffix = plan(cfg)
+
+    def blk_cache():
+        return {f"l{j}": init_layer_cache(cfg, kind, batch, max_len, dtype,
+                                          window)
+                for j, kind in enumerate(block)}
+
+    one = blk_cache()
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_blocks,) + a.shape), one)
+    return {
+        "prefix": [init_layer_cache(cfg, kind, batch, max_len, dtype, window)
+                   for kind in prefix],
+        "blocks": stacked,
+        "suffix": [init_layer_cache(cfg, kind, batch, max_len, dtype, window)
+                   for kind in suffix],
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            extras: Optional[Dict] = None, max_len: int = 0,
+            window: int = 0, unroll: bool = False
+            ) -> Tuple[jax.Array, Params]:
+    """Run the prompt, build the cache; returns last-position logits."""
+    prefix, block, n_blocks, suffix = plan(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    memory = _memory(params, cfg, extras, unroll=unroll)
+
+    caches: Params = {"prefix": [], "suffix": []}
+    for lp, kind in zip(params["prefix"], prefix):
+        x, c, _ = apply_layer(lp, cfg, kind, _mlp_kind(cfg, False), x,
+                              mode="prefill", memory=memory, max_len=max_len,
+                              window=window, ring=bool(window))
+        caches["prefix"].append(c)
+
+    def body(x, bp):
+        cs = {}
+        for j, kind in enumerate(block):
+            x, c, _ = apply_layer(bp[f"l{j}"], cfg, kind,
+                                  _mlp_kind(cfg, True), x, mode="prefill",
+                                  memory=memory, max_len=max_len,
+                                  window=window, ring=bool(window))
+            cs[f"l{j}"] = c
+        return x, cs
+
+    x, blk_caches = jax.lax.scan(body, x, params["blocks"],
+                                 unroll=unroll)
+    caches["blocks"] = blk_caches
+
+    for lp, kind in zip(params["suffix"], suffix):
+        x, c, _ = apply_layer(lp, cfg, kind, _mlp_kind(cfg, False), x,
+                              mode="prefill", memory=memory, max_len=max_len,
+                              window=window, ring=bool(window))
+        caches["suffix"].append(c)
+
+    x = rms_norm(x[:, -1:], params["ln_f"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return dot(x, head), caches
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                token: jax.Array, pos: jax.Array, ring: bool = False,
+                unroll: bool = False) -> Tuple[jax.Array, Params]:
+    """token (B,1) int32; pos scalar int32 -> (logits (B,1,V), cache)."""
+    prefix, block, n_blocks, suffix = plan(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+
+    new_cache: Params = {"prefix": [], "suffix": []}
+    for lp, kind, c in zip(params["prefix"], prefix, cache["prefix"]):
+        x, nc, _ = apply_layer(lp, cfg, kind, _mlp_kind(cfg, False), x,
+                               mode="decode", cache=c, pos=pos, ring=ring)
+        new_cache["prefix"].append(nc)
+
+    def body(x, scanned):
+        bp, bc = scanned
+        ncs = {}
+        for j, kind in enumerate(block):
+            x, nc, _ = apply_layer(bp[f"l{j}"], cfg, kind,
+                                   _mlp_kind(cfg, True), x, mode="decode",
+                                   cache=bc[f"l{j}"], pos=pos, ring=ring)
+            ncs[f"l{j}"] = nc
+        return x, ncs
+
+    x, blk_cache = jax.lax.scan(body, x,
+                                (params["blocks"], cache["blocks"]),
+                                unroll=unroll)
+    new_cache["blocks"] = blk_cache
+
+    for lp, kind, c in zip(params["suffix"], suffix, cache["suffix"]):
+        x, nc, _ = apply_layer(lp, cfg, kind, _mlp_kind(cfg, False), x,
+                               mode="decode", cache=c, pos=pos, ring=ring)
+        new_cache["suffix"].append(nc)
+
+    x = rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return dot(x, head), new_cache
+
+
+# ---------------------------------------------------------------------------
+# LM loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            remat: bool = False, unroll: bool = False) -> jax.Array:
+    logits, aux = forward_train(params, cfg, batch["tokens"],
+                                extras={k: v for k, v in batch.items()
+                                        if k not in ("tokens", "labels")},
+                                remat=remat, unroll=unroll)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold) + aux

@@ -1,0 +1,80 @@
+"""Small convolutional VAE for the latent-diffusion substrate.
+
+Encoder: 3 stride-2 conv stages (8x spatial reduction) -> (mean, logvar) of a
+``latent_channels`` latent.  Decoder mirrors with resize+conv.  This is the
+`E`/`D` of the paper's LDM formulation — small because the offline substrate
+trains on synthetic images, but structurally complete (KL + recon training
+in ``examples/train_vae.py`` path).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+_CH = (32, 64, 128)
+
+
+def _conv_init(key, k, cin, cout):
+    scale = 1.0 / jnp.sqrt(k * k * cin)
+    return jax.random.normal(key, (k, k, cin, cout)) * scale
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def init_params(key, image_channels: int = 3, latent_channels: int = 4) -> Params:
+    ks = jax.random.split(key, 8)
+    enc = {}
+    cin = image_channels
+    for i, ch in enumerate(_CH):
+        enc[f"w{i}"] = _conv_init(ks[i], 3, cin, ch)
+        cin = ch
+    enc["out"] = _conv_init(ks[3], 1, cin, 2 * latent_channels)
+    dec = {"in": _conv_init(ks[4], 1, latent_channels, _CH[-1])}
+    cin = _CH[-1]
+    for i, ch in enumerate(reversed(_CH[:-1])):
+        dec[f"w{i}"] = _conv_init(ks[5 + i], 3, cin, ch)
+        cin = ch
+    dec["out"] = _conv_init(ks[7], 3, cin, image_channels)
+    return {"enc": enc, "dec": dec}
+
+
+def encode(p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B,H,W,3) in [-1,1] -> (mean, logvar), spatial /8."""
+    h = x
+    for i in range(len(_CH)):
+        h = jax.nn.silu(_conv(h, p["enc"][f"w{i}"], stride=2))
+    out = _conv(h, p["enc"]["out"])
+    mean, logvar = jnp.split(out, 2, axis=-1)
+    return mean, jnp.clip(logvar, -10.0, 10.0)
+
+
+def sample(key, mean: jax.Array, logvar: jax.Array) -> jax.Array:
+    return mean + jnp.exp(0.5 * logvar) * jax.random.normal(key, mean.shape)
+
+
+def decode(p: Params, z: jax.Array) -> jax.Array:
+    h = jax.nn.silu(_conv(z, p["dec"]["in"]))
+    for i in range(len(_CH) - 1):
+        B, H, W, C = h.shape
+        h = jax.image.resize(h, (B, H * 2, W * 2, C), "nearest")
+        h = jax.nn.silu(_conv(h, p["dec"][f"w{i}"]))
+    B, H, W, C = h.shape
+    h = jax.image.resize(h, (B, H * 2, W * 2, C), "nearest")
+    return jnp.tanh(_conv(h, p["dec"]["out"]))
+
+
+def vae_loss(p: Params, key, x: jax.Array, kl_weight: float = 1e-3):
+    mean, logvar = encode(p, x)
+    z = sample(key, mean, logvar)
+    recon = decode(p, z)
+    rec = jnp.mean((recon - x) ** 2)
+    kl = 0.5 * jnp.mean(mean ** 2 + jnp.exp(logvar) - 1.0 - logvar)
+    return rec + kl_weight * kl, {"rec": rec, "kl": kl}

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw, adafactor, make_optimizer,
+                                    clip_by_global_norm)
+from repro.optim.schedules import make_lr_schedule

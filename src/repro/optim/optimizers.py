@@ -1,0 +1,123 @@
+"""Functional optimizers (optax-style, dependency-free).
+
+An optimizer is a pair (init, update):
+    state = init(params)
+    updates, state = update(grads, state, params, lr)
+``apply_updates`` adds updates (already scaled by -lr) to params.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "count": c}
+
+    return Optimizer(init, update)
+
+
+def adafactor(eps=1e-30, decay=0.8, clip_threshold=1.0) -> Optimizer:
+    """Factored second-moment optimizer — the memory-lean option for the
+    biggest training configs (state is O(rows+cols) for matrices vs Adam's
+    2x full)."""
+
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"s": jax.tree.map(per_leaf, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array)),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        beta = 1.0 - c.astype(jnp.float32) ** (-decay)
+
+        def per_leaf(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None],
+                                  eps))
+                upd = gf / jnp.maximum(denom, eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = gf / jnp.sqrt(v + eps)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-12)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr * upd).astype(p.dtype), ns
+
+        flat_u = jax.tree.map(per_leaf, grads, state["s"], params,
+                              is_leaf=lambda x: isinstance(x, jax.Array))
+        updates = jax.tree.map(lambda t: t[0], flat_u,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda t: t[1], flat_u,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"s": new_s, "count": c}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: OptimConfig) -> Optimizer:
+    if cfg.kind == "adamw":
+        return adamw(cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay)
+    if cfg.kind == "adafactor":
+        return adafactor()
+    raise ValueError(cfg.kind)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

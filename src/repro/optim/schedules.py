@@ -1,0 +1,20 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import OptimConfig
+
+
+def make_lr_schedule(cfg: OptimConfig, total_steps: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(cfg.warmup, 1))
+        if cfg.schedule == "cosine":
+            frac = jnp.clip((s - cfg.warmup) / max(total_steps - cfg.warmup, 1),
+                            0.0, 1.0)
+            base = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        else:
+            base = 1.0
+        return cfg.lr * warm * base
+    return lr

@@ -1,0 +1,2 @@
+from repro.serving.engine import SageServingEngine
+from repro.serving.shared_prefill import group_requests, shared_prefix_prefill

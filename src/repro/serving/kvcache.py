@@ -1,0 +1,41 @@
+"""KV/state-cache manipulation for the serving engine."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def fork_cache(cache: Any, n: int) -> Any:
+    """Replicate a batch-1-per-group cache along the member axis:
+    (B, ...) -> (B*n, ...).  This is SAGE's branch point for AR serving —
+    O(bytes) for attention KV, O(d_state) for SSM/RG-LRU states (the SSM
+    fork is the cheapest, see DESIGN.md §4)."""
+    def rep(x):
+        if x.ndim == 0:
+            return x
+        return jnp.repeat(x, n, axis=0)
+    return jax.tree.map(rep, cache)
+
+
+def fork_model_cache(cache: Any, n: int) -> Any:
+    """Fork a transformer-runtime cache ({'prefix','blocks','suffix'}):
+    scanned 'blocks' leaves carry a leading (n_blocks) stack dim, so their
+    batch axis is 1; prefix/suffix leaves fork on axis 0."""
+    def rep(ax):
+        return lambda x: x if x.ndim == 0 else jnp.repeat(x, n, axis=ax)
+
+    return {"prefix": jax.tree.map(rep(0), cache["prefix"]),
+            "blocks": jax.tree.map(rep(1), cache["blocks"]),
+            "suffix": jax.tree.map(rep(0), cache["suffix"])}
+
+
+def select_rows(cache: Any, idx) -> Any:
+    """Gather member rows of a batched cache (request eviction/reorder)."""
+    return jax.tree.map(lambda x: x if x.ndim == 0 else jnp.take(x, idx, 0),
+                        cache)
+
+
+def cache_bytes(cache: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

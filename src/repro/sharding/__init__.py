@@ -1,0 +1,2 @@
+from repro.sharding.partition import (batch_axes, cache_specs, opt_specs,
+                                      param_specs, shard_tree)

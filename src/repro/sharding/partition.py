@@ -1,0 +1,197 @@
+"""Partitioning rules: param/optimizer/KV-cache PartitionSpecs.
+
+Scheme (DESIGN.md §5):
+* tensor parallelism on the ``model`` axis — attention head / FFN-hidden /
+  expert / vocab dims;
+* optional FSDP: additionally shard a big *unsharded* dim over ``data``
+  (training configs; params are all-gathered by GSPMD per layer);
+* the ``pod`` axis is pure data parallelism (params replicated across pods);
+* decode caches: batch over data; head-dim (or MLA latent dim) over model —
+  heads themselves rarely divide a 16-wide axis (GQA kv ∈ {1, 8, 16, 40}).
+
+Rules are name+shape driven over the *last two* dims; leading stack dims
+(scan blocks, MoE expert dim) are handled positionally.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _name_of(part) -> str:
+    return str(getattr(part, "key", getattr(part, "idx", part)))
+
+
+# weights whose OUTPUT (last dim) carries the parallel dimension
+_COL = ("wq", "wk", "wv", "wi", "wg", "wdkv", "wukv", "z_proj", "x_proj",
+        "bc_proj", "dt_proj", "wx", "wa", "patch_in", "cond_proj", "adaln",
+        "t_w1", "t_w2", "enc_in", "proj", "head", "final_adaln")
+# weights whose INPUT (second-to-last dim) carries it (row-parallel)
+_ROW = ("wo", "out", "out_proj")
+_REPL = ("router", "conv_w", "conv_b", "A_log", "D", "dt_bias", "lam",
+         "pos", "ln", "norm", "b", "ba", "bi", "bq", "bk", "bv")
+
+
+def spec_for(cfg: ModelConfig, path: Tuple, shape: Tuple[int, ...],
+             mesh: Mesh, fsdp: bool = False) -> P:
+    names = [_name_of(p) for p in path]
+    leaf = names[-1] if names else ""
+    m = _axis_size(mesh, "model")
+    d = _axis_size(mesh, "data")
+    nd = len(shape)
+
+    if nd == 0:
+        return P()
+    if nd == 1 or leaf.startswith("b") and nd == 1:
+        return P(*([None] * nd))
+
+    is_expert = any("moe" == n for n in names) and leaf in ("wi", "wg", "wo")
+    base = 3 if is_expert else 2
+    lead = [None] * (nd - base)
+
+    def fits(dim: int, size: int) -> bool:
+        return size > 1 and dim % size == 0
+
+    if is_expert:
+        # (E, d_model, ff) / (E, ff, d_model): experts over model
+        e_ax = "model" if fits(shape[-3], m) else None
+        spec = lead + [e_ax, None, None]
+        if fsdp and fits(shape[-2], d):
+            spec[-2] = "data"
+        return P(*spec)
+
+    if leaf == "embed":
+        spec = lead + ["model" if fits(shape[-2], m) else None, None]
+        if fsdp and fits(shape[-1], d):
+            spec[-1] = "data"
+        return P(*spec)
+
+    if leaf in _ROW:
+        spec = lead + ["model" if fits(shape[-2], m) else None, None]
+        if fsdp and fits(shape[-1], d):
+            spec[-1] = "data"
+        return P(*spec)
+
+    if leaf in _COL or leaf.startswith("w"):
+        spec = lead + [None, "model" if fits(shape[-1], m) else None]
+        if fsdp and fits(shape[-2], d):
+            spec[-2] = "data"
+        return P(*spec)
+
+    return P(*([None] * nd))
+
+
+def param_specs(cfg: ModelConfig, params_shapes, mesh: Mesh,
+                fsdp: bool = False):
+    """Pytree of PartitionSpec matching a params (shape) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(cfg, path, leaf.shape, mesh, fsdp),
+        params_shapes)
+
+
+def opt_specs(pspecs, opt_state_shapes):
+    """Optimizer state mirrors param sharding; scalars replicated."""
+
+    def fix(path, leaf):
+        # walk down pspecs along the path *after* the top-level state key
+        node: Any = None
+        for part in path:
+            name = _name_of(part)
+            if node is None:
+                node = pspecs if name in ("mu", "nu", "s") else "scalar"
+                continue
+            if node == "scalar":
+                break
+            if isinstance(node, dict) and name in node:
+                node = node[name]
+            elif isinstance(node, (list, tuple)):
+                node = node[int(name)]
+            else:
+                break
+        if isinstance(node, P):
+            if len(node) == len(leaf.shape):
+                return node
+            # factored adafactor stats: drop trailing axes of the spec
+            return P(*list(node)[:len(leaf.shape)])
+        return P()
+
+    return jax.tree_util.tree_map_with_path(fix, opt_state_shapes)
+
+
+def batch_axes(mesh: Mesh, batch: int) -> Optional[Tuple[str, ...]]:
+    """Largest prefix of (pod, data) whose product divides the batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    chosen = []
+    prod = 1
+    for a in axes:
+        if batch % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    return tuple(chosen) or None
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes, mesh: Mesh, batch: int,
+                seq_shard: bool = False):
+    """KV/state cache sharding for decode.
+
+    seq_shard=True shards the cache *sequence* dim over `model` instead of
+    heads/head-dim — softmax stats then reduce over the sharded key axis
+    with small (B,H,1) collectives instead of all-reducing full score rows
+    (§Perf collective-term variant)."""
+    ba = batch_axes(mesh, batch)
+    m = _axis_size(mesh, "model")
+
+    def fix(path, leaf):
+        names = [_name_of(p) for p in path]
+        leafname = names[-1]
+        nd = len(leaf.shape)
+        # strip the scan-stack dim if present (blocks caches)
+        has_stack = "blocks" in names and nd >= 3
+        lead = [None] if has_stack else []
+        core = list(leaf.shape[1:]) if has_stack else list(leaf.shape)
+
+        def done(spec):
+            return P(*(lead + spec))
+
+        if leafname in ("k", "v"):          # (B, L, Hkv, hd)
+            hkv, hd = core[2], core[3]
+            if seq_shard and core[1] % m == 0:
+                return done([ba, "model", None, None])
+            if hkv % m == 0:
+                return done([ba, None, "model", None])
+            if hd % m == 0:
+                return done([ba, None, None, "model"])
+            return done([ba, None, None, None])
+        if leafname == "ckv":               # (B, L, r)
+            if seq_shard and core[1] % m == 0:
+                return done([ba, "model", None])
+            return done([ba, None, "model" if core[2] % m == 0 else None])
+        if leafname == "kr":                # (B, L, rope_hd)
+            return done([ba, None, None])
+        if leafname == "conv":              # (B, K-1, C)
+            return done([ba, None, "model" if core[2] % m == 0 else None])
+        if leafname == "state":             # ssm (B,H,P,N) / rglru (B,W)
+            if len(core) == 4:
+                ax = "model" if core[1] % m == 0 else None
+                return done([ba, ax, None, None])
+            return done([ba, "model" if core[1] % m == 0 else None])
+        return done([ba] + [None] * (len(core) - 1))
+
+    return jax.tree_util.tree_map_with_path(fix, cache_shapes)
+
+
+def shard_tree(tree, specs, mesh: Mesh):
+    """Attach NamedShardings: returns ShapeDtypeStructs for AOT lowering."""
+    return jax.tree.map(
+        lambda leaf, spec: jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, spec)),
+        tree, specs)

@@ -1,0 +1,51 @@
+"""The full configs must match the assignment sheet exactly."""
+import pytest
+
+from repro.config import get_config
+
+SPEC = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+    "mamba2-780m": (48, 1536, None, None, 0, 50280),
+    "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+    "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, None, 163840),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    "deepseek-v2-lite-16b": (27, 2048, 16, 16, None, 102400),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(SPEC))
+def test_assignment_numbers(arch):
+    L, d, h, kv, ff, v = SPEC[arch]
+    cfg = get_config(arch)
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    if h is not None:
+        assert cfg.n_heads == h
+        assert cfg.n_kv_heads == kv
+    if ff:
+        assert cfg.d_ff == ff
+    assert cfg.vocab == v
+
+
+def test_assignment_extras():
+    assert get_config("mamba2-780m").ssm.d_state == 128
+    assert get_config("deepseek-v2-lite-16b").mla.kv_lora_rank == 512
+    k = get_config("kimi-k2-1t-a32b").moe
+    assert (k.n_routed, k.top_k, k.d_ff_expert) == (384, 8, 2048)
+    d = get_config("deepseek-v2-lite-16b").moe
+    assert (d.n_routed, d.top_k, d.n_shared, d.d_ff_expert) == (64, 6, 2, 1408)
+    assert get_config("qwen1.5-32b").qkv_bias
+    assert get_config("qwen3-32b").qk_norm
+    rg = get_config("recurrentgemma-2b")
+    assert rg.pattern == ("rglru", "rglru", "local_attn")
+    sm = get_config("seamless-m4t-large-v2")
+    assert sm.enc_layers == 24 and sm.family == "encdec"
+    vl = get_config("llama-3.2-vision-11b")
+    assert vl.family == "vlm" and vl.pattern.count("cross_attn") == 1
+    # 1T-param check for the paper-table MoE
+    assert 0.95e12 < get_config("kimi-k2-1t-a32b").n_params() < 1.1e12

@@ -1,0 +1,47 @@
+"""ssd_scan Pallas kernel vs the pure-jnp SSD oracle: shape/dtype sweep."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan.ops import ssd_chunked_kernel
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _data(key, b, l, h, p, n, dtype):
+    x = jax.random.normal(jax.random.fold_in(key, 0), (b, l, h, p), dtype)
+    dA = -jax.nn.softplus(
+        jax.random.normal(jax.random.fold_in(key, 1), (b, l, h))
+    ).astype(jnp.float32)
+    B_ = jax.random.normal(jax.random.fold_in(key, 2), (b, l, n), dtype)
+    C_ = jax.random.normal(jax.random.fold_in(key, 3), (b, l, n), dtype)
+    return x, dA, B_, C_
+
+
+@pytest.mark.parametrize("b,l,h,p,n,chunk", [
+    (1, 16, 2, 8, 16, 8),
+    (2, 32, 3, 16, 8, 16),
+    (1, 64, 2, 32, 32, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_matches_oracle(b, l, h, p, n, chunk, dtype):
+    key = jax.random.PRNGKey(b * 100 + l)
+    x, dA, B_, C_ = _data(key, b, l, h, p, n, dtype)
+    y, s = ssd_chunked_kernel(x, dA, B_, C_, chunk)
+    y_ref, s_ref = ssd_ref(x, dA, B_, C_, chunk)
+    tol = 1e-4 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=tol, atol=tol)
+
+
+def test_ssd_kernel_state_continuity():
+    """Kernel final state must continue a split sequence correctly."""
+    key = jax.random.PRNGKey(7)
+    x, dA, B_, C_ = _data(key, 1, 32, 2, 8, 16, jnp.float32)
+    y_full, s_full = ssd_chunked_kernel(x, dA, B_, C_, 16)
+    _, s_ref = ssd_ref(x, dA, B_, C_, 8)   # different chunking, same state
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)

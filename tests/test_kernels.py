@@ -1,0 +1,142 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ddim_step.ops import fused_cfg_ddim_step
+from repro.kernels.ddim_step.ref import fused_cfg_ddim_step_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.group_mean.ops import masked_group_mean
+from repro.kernels.group_mean.ref import masked_group_mean_ref
+
+
+# ---------------------------------------------------------------------------
+# ddim_step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(2, 8, 8, 4), (1, 64, 64, 4), (3, 17, 5, 3),
+                                   (4, 32, 32, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ddim_step_kernel(shape, dtype):
+    key = jax.random.PRNGKey(hash(shape) % 2**31)
+    z, eu, ec = (jax.random.normal(jax.random.fold_in(key, i), shape, dtype)
+                 for i in range(3))
+    args = dict(guidance=7.5, a_t=0.7, s_t=0.714, a_n=0.9, s_n=0.436)
+    out = fused_cfg_ddim_step(z, eu, ec, **args)
+    ref = fused_cfg_ddim_step_ref(z, eu, ec, **args)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@given(st.integers(1, 4), st.integers(1, 40), st.floats(1.0, 10.0))
+@settings(max_examples=10, deadline=None)
+def test_ddim_step_property(b, n, w):
+    """Property: guidance=0 -> pure uncond eps; any padding round-trips."""
+    key = jax.random.PRNGKey(b * 100 + n)
+    shape = (b, n, 3)
+    z, eu, ec = (jax.random.normal(jax.random.fold_in(key, i), shape)
+                 for i in range(3))
+    out0 = fused_cfg_ddim_step(z, eu, ec, 0.0, 0.8, 0.6, 0.9, 0.436)
+    ref0 = fused_cfg_ddim_step_ref(z, eu, ec, 0.0, 0.8, 0.6, 0.9, 0.436)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(ref0),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# group_mean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kn", [(1, 2), (4, 5), (8, 3)])
+@pytest.mark.parametrize("feat", [(7,), (16, 24), (8, 8, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_group_mean_kernel(kn, feat, dtype):
+    K, N = kn
+    key = jax.random.PRNGKey(K * 10 + N)
+    x = jax.random.normal(key, (K, N) + feat, dtype)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 1), (K, N)) > 0.3
+            ).astype(jnp.float32)
+    mask = mask.at[:, 0].set(1.0)           # at least one member
+    out = masked_group_mean(x, mask)
+    ref = masked_group_mean_ref(x, mask)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@given(st.integers(1, 6), st.integers(1, 5))
+@settings(max_examples=10, deadline=None)
+def test_group_mean_full_mask_is_mean(k, n):
+    x = jax.random.normal(jax.random.PRNGKey(k * 7 + n), (k, n, 33))
+    out = masked_group_mean(x, jnp.ones((k, n)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x.mean(1)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", [128, 256, 384])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_aligned(s, causal, dtype):
+    B, H, D = 2, 4, 64
+    key = jax.random.PRNGKey(s)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, s, H, D),
+                                 dtype) for i in range(3))
+    out = flash_attention(q, k, v, causal=causal)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, s, D),
+        k.transpose(0, 2, 1, 3).reshape(B * H, s, D),
+        v.transpose(0, 2, 1, 3).reshape(B * H, s, D),
+        causal=causal, scale=1.0 / np.sqrt(D))
+    ref = ref.reshape(B, H, s, D).transpose(0, 2, 1, 3)
+    tol = 2e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("sq,sk", [(100, 100), (130, 260), (256, 100)])
+def test_flash_attention_unaligned_and_cross(sq, sk):
+    """Padding path + cross-attention (Sq != Sk, non-causal)."""
+    B, H, D = 1, 2, 48
+    key = jax.random.PRNGKey(sq * 1000 + sk)
+    q = jax.random.normal(jax.random.fold_in(key, 0), (B, sq, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, sk, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, sk, H, D))
+    out = flash_attention(q, k, v, causal=False)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, sq, D),
+        k.transpose(0, 2, 1, 3).reshape(B * H, sk, D),
+        v.transpose(0, 2, 1, 3).reshape(B * H, sk, D),
+        causal=False, scale=1.0 / np.sqrt(D))
+    ref = ref.reshape(B, H, sq, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_gqa():
+    B, S, H, Hkv, D = 2, 128, 8, 2, 64
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(jax.random.fold_in(key, 0), (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, D))
+    out = flash_attention(q, k, v, causal=True)
+    kr = jnp.repeat(k, H // Hkv, axis=2)
+    vr = jnp.repeat(v, H // Hkv, axis=2)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+        kr.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+        vr.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+        causal=True, scale=1.0 / np.sqrt(D))
+    ref = ref.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)

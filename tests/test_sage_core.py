@@ -1,0 +1,231 @@
+"""Unit + property tests for the paper's core: schedule, samplers, grouping,
+Eq. 3 loss, Alg. 1 shared sampling, Alg. 2 training, LoRA."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import OptimConfig, SageConfig, get_config
+from repro.core import grouping, lora as lora_lib, samplers, trainer
+from repro.core import sage_loss as losses
+from repro.core.schedule import Schedule, ddim_timesteps, make_schedule
+from repro.core.shared_sampling import (group_mean, independent_sample,
+                                        shared_sample)
+from repro.models import dit
+
+SCHED = make_schedule(1000)
+CFG = get_config("sage-dit", smoke=True)
+SAGE = SageConfig(total_steps=8, share_ratio=0.25, guidance_scale=3.0)
+
+
+# ---------------------------------------------------------------------------
+# schedule
+# ---------------------------------------------------------------------------
+
+def test_schedule_vp_invariant():
+    a, s = np.asarray(SCHED.alphas), np.asarray(SCHED.sigmas)
+    np.testing.assert_allclose(a ** 2 + s ** 2, 1.0, atol=1e-5)
+    assert a[0] == pytest.approx(1.0, abs=1e-4)
+    assert np.all(np.diff(a) <= 1e-7)           # alpha monotone decreasing
+
+
+@given(st.integers(2, 100))
+@settings(max_examples=20, deadline=None)
+def test_ddim_grid(n):
+    ts = ddim_timesteps(1000, n)
+    assert len(ts) == n + 1
+    assert ts[0] == 1000 and ts[-1] == 0
+    assert np.all(np.diff(ts) < 0)
+
+
+def test_ddim_step_identity_at_same_t():
+    z = jnp.ones((2, 4, 4, 3))
+    eps = jnp.zeros_like(z)
+    out = samplers.ddim_step(SCHED, z, jnp.int32(500), jnp.int32(500), eps)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(z), rtol=1e-5)
+
+
+def test_ddim_recovers_z0_with_true_eps():
+    """One giant DDIM step with the exact eps recovers z0 exactly."""
+    key = jax.random.PRNGKey(0)
+    z0 = jax.random.normal(key, (2, 4, 4, 3))
+    eps = jax.random.normal(jax.random.fold_in(key, 1), z0.shape)
+    t = jnp.int32(700)
+    zt = SCHED.alpha(t) * z0 + SCHED.sigma(t) * eps
+    out = samplers.ddim_step(SCHED, zt, t, jnp.int32(0), eps)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(z0), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# grouping
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 40), st.floats(0.1, 0.9))
+@settings(max_examples=25, deadline=None)
+def test_grouping_invariants(m, tau):
+    rng = np.random.RandomState(m)
+    e = rng.randn(m, 16)
+    sim = grouping.similarity_matrix(e)
+    groups = grouping.greedy_clique_groups(sim, tau, group_max=5)
+    flat = [i for g in groups for i in g]
+    assert sorted(flat) == list(range(m))            # partition: cover, no dup
+    for g in groups:
+        assert 1 <= len(g) <= 5
+        for i in g:
+            for j in g:
+                if i != j:
+                    assert sim[i, j] > tau           # pairwise clique property
+
+
+def test_pad_groups_mask():
+    idx, mask = grouping.pad_groups([[0, 1, 2], [3], [4, 5, 6, 7, 8, 9, 10]],
+                                    group_size=5)
+    assert idx.shape == mask.shape
+    assert mask.sum() == 11
+    # oversize group split
+    assert idx.shape[0] == 4
+
+
+def test_cost_saving_matches_paper_form():
+    # beta = 40% of 30 steps, groups of ~2.5 -> paper reports 25.5%
+    groups = [[0, 1, 2], [3, 4], [5, 6, 7], [8, 9]]   # M=10, K=4
+    out = grouping.cost_saving(groups, total_steps=30, branch_point=18)
+    expect = 1.0 - (4 * 12 * 2 + 10 * 18 * 2) / (10 * 30 * 2)
+    assert out["saving"] == pytest.approx(expect)
+    # shared-uncond CFG strictly increases saving
+    out2 = grouping.cost_saving(groups, 30, 18, shared_uncond=True)
+    assert out2["saving"] > out["saving"]
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3 loss + Alg. 2 step
+# ---------------------------------------------------------------------------
+
+def _toy_batch(key, K=2, N=3):
+    kz, kc = jax.random.split(key)
+    H = CFG.latent_size
+    z = jax.random.normal(kz, (K, N, H, H, CFG.latent_channels))
+    cond = jax.random.normal(kc, (K, N, CFG.cond_len, CFG.cond_dim))
+    mask = jnp.ones((K, N))
+    return {"z": z, "cond": cond, "mask": mask}
+
+
+def test_group_mean_masked():
+    x = jnp.stack([jnp.stack([jnp.ones(4), 3 * jnp.ones(4), 99 * jnp.ones(4)])])
+    mask = jnp.array([[1.0, 1.0, 0.0]])
+    np.testing.assert_allclose(np.asarray(group_mean(x, mask)[0]),
+                               2 * np.ones(4), rtol=1e-6)
+
+
+def test_sage_loss_finite_and_parts():
+    params = dit.init_params(CFG, jax.random.PRNGKey(0))
+    batch = _toy_batch(jax.random.PRNGKey(1))
+    eps_fn = lambda z, t, c: dit.forward(params, CFG, z, t, c)
+    loss, parts = losses.sage_loss(eps_fn, SCHED, SAGE, jax.random.PRNGKey(2),
+                                   batch["z"], batch["cond"], batch["mask"])
+    assert np.isfinite(float(loss))
+    assert set(parts) == {"shared", "soft", "branch"}
+    # with an untrained (zero-output) DiT, eps_pred ~ 0 -> branch ~ E||e||^2 ~ 1
+    assert 0.0 < float(parts["branch"]) < 5.0
+
+
+def test_sage_train_step_descends():
+    opt = OptimConfig(lr=2e-3)
+    state = trainer.init_state(CFG, opt, jax.random.PRNGKey(0))
+    step = trainer.make_sage_train_step(CFG, SAGE, SCHED, opt)
+    batch = _toy_batch(jax.random.PRNGKey(1))
+    losses_seen = []
+    for i in range(8):
+        state, m = step(state, batch, jax.random.PRNGKey(i + 10))
+        losses_seen.append(float(m["loss"]))
+    assert losses_seen[-1] < losses_seen[0]          # same batch -> must descend
+
+
+def test_lora_only_updates_lora():
+    opt = OptimConfig(lr=1e-3)
+    state = trainer.init_state(CFG, opt, jax.random.PRNGKey(0), lora_rank=4)
+    step = trainer.make_sage_train_step(CFG, SAGE, SCHED, opt, lora_rank=4)
+    batch = _toy_batch(jax.random.PRNGKey(1))
+    before = jax.tree.map(lambda x: x.copy(), state["params"])
+    state, m = step(state, batch, jax.random.PRNGKey(3))
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert any(float(jnp.abs(x).sum()) > 0
+               for ab in state["lora"].values() for x in [ab["b"]])
+
+
+def test_lora_merge_zero_b_is_identity():
+    params = dit.init_params(CFG, jax.random.PRNGKey(0))
+    lo = lora_lib.init_lora(params, 4, jax.random.PRNGKey(1))
+    merged = lora_lib.merge(params, lo)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(merged)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 shared sampling
+# ---------------------------------------------------------------------------
+
+def test_shared_sampling_shapes_and_nfe():
+    params = dit.init_params(CFG, jax.random.PRNGKey(0))
+    eps_fn = lambda z, t, c: dit.forward(params, CFG, z, t, c)
+    K, N = 2, 3
+    cond = jax.random.normal(jax.random.PRNGKey(1),
+                             (K, N, CFG.cond_len, CFG.cond_dim))
+    mask = jnp.ones((K, N))
+    null = jnp.zeros((CFG.cond_len, CFG.cond_dim))
+    H = CFG.latent_size
+    out = shared_sample(eps_fn, SCHED, SAGE, jax.random.PRNGKey(2), cond,
+                        mask, null, (H, H, CFG.latent_channels))
+    assert out["latents"].shape == (K, N, H, H, CFG.latent_channels)
+    assert bool(jnp.all(jnp.isfinite(out["latents"])))
+    T, Ts = SAGE.total_steps, SAGE.branch_point
+    assert int(out["nfe"]) == 2 * K * (T - Ts) + 2 * K * N * Ts
+
+
+def test_shared_equals_independent_at_zero_sharing():
+    """beta=0 with identical per-member noise must reduce to independent
+    sampling of each member (the scheme is a strict generalisation)."""
+    params = dit.init_params(CFG, jax.random.PRNGKey(0))
+    eps_fn = lambda z, t, c: dit.forward(params, CFG, z, t, c)
+    sage0 = dataclasses.replace(SAGE, share_ratio=0.0)
+    K, N = 2, 1                                     # singleton groups
+    cond = jax.random.normal(jax.random.PRNGKey(1),
+                             (K, N, CFG.cond_len, CFG.cond_dim))
+    mask = jnp.ones((K, N))
+    null = jnp.zeros((CFG.cond_len, CFG.cond_dim))
+    H = CFG.latent_size
+    shared = shared_sample(eps_fn, SCHED, sage0, jax.random.PRNGKey(7), cond,
+                           mask, null, (H, H, CFG.latent_channels))
+    indep = independent_sample(eps_fn, SCHED, sage0, jax.random.PRNGKey(7),
+                               cond.reshape(K, CFG.cond_len, CFG.cond_dim),
+                               null, (H, H, CFG.latent_channels))
+    np.testing.assert_allclose(
+        np.asarray(shared["latents"].reshape(K, H, H, -1)),
+        np.asarray(indep["latents"]), rtol=2e-2, atol=2e-3)
+
+
+def test_shared_sampling_members_identical_at_full_sharing():
+    params = dit.init_params(CFG, jax.random.PRNGKey(0))
+    eps_fn = lambda z, t, c: dit.forward(params, CFG, z, t, c)
+    sage1 = dataclasses.replace(SAGE, share_ratio=1.0)
+    K, N = 1, 3
+    cond = jax.random.normal(jax.random.PRNGKey(1),
+                             (K, N, CFG.cond_len, CFG.cond_dim))
+    mask = jnp.ones((K, N))
+    null = jnp.zeros((CFG.cond_len, CFG.cond_dim))
+    H = CFG.latent_size
+    out = shared_sample(eps_fn, SCHED, sage1, jax.random.PRNGKey(2), cond,
+                        mask, null, (H, H, CFG.latent_channels))
+    lat = np.asarray(out["latents"])
+    np.testing.assert_allclose(lat[:, 0], lat[:, 1], atol=1e-6)
+    np.testing.assert_allclose(lat[:, 0], lat[:, 2], atol=1e-6)
+
+
+def test_adaptive_branch_point_monotone():
+    T = 30
+    bps = [grouping.adaptive_branch_point(s, T) for s in (0.2, 0.5, 0.9)]
+    assert bps[0] >= bps[1] >= bps[2]                # tighter group -> share more

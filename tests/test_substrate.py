@@ -1,0 +1,169 @@
+"""Substrate tests: data pipeline, optimizers, checkpointing, serving engine,
+shared-prefix prefill, kv-cache forking."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.config import OptimConfig, SageConfig, get_config
+from repro.data.grouped import build_grouped_dataset
+from repro.data.synthetic import ShapesDataset, token_stream
+from repro.models import dit, transformer as tfm
+from repro.models import text_encoder as te
+from repro.optim.optimizers import (adafactor, adamw, apply_updates,
+                                    clip_by_global_norm)
+from repro.serving.engine import SageServingEngine
+from repro.serving.kvcache import fork_cache, select_rows
+from repro.serving.shared_prefill import (common_prefix_len,
+                                          shared_prefix_prefill)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_shapes_dataset_deterministic():
+    ds = ShapesDataset(res=32, seed=1)
+    img1, p1 = ds.sample(7)
+    img2, p2 = ds.sample(7)
+    np.testing.assert_array_equal(img1, img2)
+    assert p1 == p2
+    assert img1.shape == (32, 32, 3)
+    assert img1.min() >= -1.0 and img1.max() <= 1.0
+
+
+def test_grouped_dataset_build():
+    tc = te.text_cfg(dim=64, layers=2)
+    tp = te.init_text(jax.random.PRNGKey(0), tc)
+
+    def encode(prompts):
+        toks = te.tokenize(prompts, max_len=24)
+        return te.encode_text(tp, tc, toks)
+
+    gd = build_grouped_dataset(encode, n_items=48, res=16, tau_min=0.3)
+    assert sorted(i for g in gd.groups for i in g) == list(range(48))
+    batches = list(gd.iter_batches(k_groups=2, group_size=3))
+    assert batches, "no batches produced"
+    b = batches[0]
+    assert b["images"].shape[:2] == (2, 3)
+    assert b["cond"].shape[:2] == (2, 3)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [lambda: adamw(), lambda: adafactor()])
+def test_optimizer_reduces_quadratic(make):
+    opt = make()
+    params = {"w": jnp.array([3.0, -2.0]), "m": jnp.ones((4, 4))}
+    state = opt.init(params)
+    for _ in range(60):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2)
+                         + jnp.sum(p["m"] ** 2))(params)
+        updates, state = opt.update(grads, state, params, 0.1)
+        params = apply_updates(params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+    assert float(jnp.abs(params["m"]).max()) < 0.5
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(10) * 100, rel=1e-5)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "lst": [jnp.zeros(2), jnp.ones(3)]}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 5, tree)
+        save_checkpoint(d, 9, tree)
+        assert latest_step(d) == 9
+        back = restore_checkpoint(d, 5, tree)
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                          np.asarray(y, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# kv cache ops + shared prefix prefill
+# ---------------------------------------------------------------------------
+
+def test_fork_and_select():
+    cache = {"k": jnp.arange(12.0).reshape(2, 3, 2)[0:1]}
+    f = fork_cache(cache, 3)
+    assert f["k"].shape == (3, 3, 2)
+    np.testing.assert_array_equal(np.asarray(f["k"][0]),
+                                  np.asarray(f["k"][2]))
+    s = select_rows(f, jnp.array([2, 0]))
+    assert s["k"].shape == (2, 3, 2)
+
+
+def test_common_prefix_len():
+    t = np.array([[1, 2, 3, 4], [1, 2, 9, 4], [1, 2, 3, 7]])
+    assert common_prefix_len(t) == 2
+    assert common_prefix_len(t[:1]) == 4
+
+
+def test_shared_prefix_prefill_matches_independent():
+    """Forked-trunk decoding must produce identical logits to full prefill."""
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    N, S, P = 3, 12, 7
+    rng = np.random.RandomState(0)
+    shared = rng.randint(0, cfg.vocab, (1, P)).repeat(N, axis=0)
+    tails = rng.randint(0, cfg.vocab, (N, S - P))
+    tokens = np.concatenate([shared, tails], axis=1)
+
+    def prefill_fn(t, max_len):
+        return tfm.prefill(params, cfg, jnp.asarray(t), max_len=max_len)
+
+    def decode_fn(cache, tok, pos):
+        return tfm.decode_step(params, cfg, cache, jnp.asarray(tok), pos)
+
+    logits, caches, pos, stats = shared_prefix_prefill(
+        prefill_fn, decode_fn, tokens, max_len=S + 4)
+    assert stats["prefix_len"] == P
+    assert stats["saving"] > 0
+
+    ref, _ = tfm.prefill(params, cfg, jnp.asarray(tokens), max_len=S + 4)
+    np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
+                               np.asarray(ref[:, 0], np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# serving engine (end-to-end on smoke DiT)
+# ---------------------------------------------------------------------------
+
+def test_serving_engine_end_to_end():
+    cfg = get_config("sage-dit", smoke=True)
+    sage = SageConfig(total_steps=6, share_ratio=0.33, guidance_scale=3.0,
+                      tau_min=0.2)
+    tc = te.text_cfg(dim=cfg.cond_dim, layers=2)
+    engine = SageServingEngine(
+        cfg, sage,
+        dit_params=dit.init_params(cfg, jax.random.PRNGKey(0)),
+        text_params=te.init_text(jax.random.PRNGKey(1), tc),
+        text_cfg=tc, group_size=3)
+    ds = ShapesDataset(res=16)
+    _, prompts = ds.batch(0, 9)
+    engine.submit(prompts)
+    done = engine.step(max_batch=9)
+    assert len(done) == 9
+    assert all(np.isfinite(c.image).all() for c in done)
+    # grouping must produce at least one multi-member group on this corpus
+    assert engine.cost_saving >= 0.0
+    assert engine.stats["requests"] == 9
