@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ddim_step.ops import fused_cfg_ddim_step
+from repro.kernels.dispatch import resolve_interpret
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.group_mean.ops import masked_group_mean
 
@@ -25,21 +26,22 @@ def _time(fn, *args, n=5, **kw):
 def main(rows=None):
     rows = rows if rows is not None else []
     key = jax.random.PRNGKey(0)
+    mode = f"interpret={resolve_interpret('auto')}"
 
     z, eu, ec = (jax.random.normal(jax.random.fold_in(key, i),
                                    (8, 64, 64, 4)) for i in range(3))
     us = _time(fused_cfg_ddim_step, z, eu, ec, 7.5, 0.7, 0.714, 0.9, 0.436)
-    rows.append(("kernel/ddim_step/8x64x64x4", us, "interpret=True"))
+    rows.append(("kernel/ddim_step/8x64x64x4", us, mode))
 
     x = jax.random.normal(key, (8, 5, 32, 256))
     m = jnp.ones((8, 5))
     us = _time(masked_group_mean, x, m, n=2)
-    rows.append(("kernel/group_mean/8x5x32x256", us, "interpret=True"))
+    rows.append(("kernel/group_mean/8x5x32x256", us, mode))
 
     q, k, v = (jax.random.normal(jax.random.fold_in(key, i),
                                  (2, 256, 4, 64)) for i in range(3))
     us = _time(flash_attention, q, k, v, n=2)
-    rows.append(("kernel/flash_attention/2x256x4x64", us, "interpret=True"))
+    rows.append(("kernel/flash_attention/2x256x4x64", us, mode))
 
     for r in rows[-3:]:
         print(f"{r[0]},{r[1]:.0f},{r[2]}", flush=True)

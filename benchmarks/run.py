@@ -19,10 +19,11 @@ def main() -> None:
 
     from benchmarks import (beyond_paper, cost_model, fig3_similarity,
                             fig4_shared_steps, kernel_bench, roofline_report,
-                            table1_quality)
+                            sampler_e2e, table1_quality)
     suites = {
         "cost_model": cost_model.main,
         "kernels": kernel_bench.main,
+        "sampler": sampler_e2e.main,
         "roofline": roofline_report.main,
         "table1": table1_quality.main,
         "fig3": fig3_similarity.main,

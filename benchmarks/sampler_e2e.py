@@ -1,0 +1,70 @@
+"""End-to-end sampler benchmark: shared_sample on the naive jnp backend vs
+the Pallas backend (attn_impl="pallas" + step_impl="fused"), reported as
+µs per sampler step normalized by NFE.
+
+Off-TPU this exercises the kernels in interpret mode (correctness-shaped
+timings that track the call graph, not device wall-clock); on TPU the same
+rows time the compiled kernels.  Rows: name,us_per_nfe,derived."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SageConfig, get_config, replace
+from repro.core.schedule import make_schedule
+from repro.core.shared_sampling import shared_sample
+from repro.kernels.dispatch import resolve_interpret
+from repro.models import dit
+
+
+def _time(fn, *args, n=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6, out
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    cfg = get_config("sage-dit", smoke=True)
+    sched = make_schedule(1000)
+    key = jax.random.PRNGKey(0)
+    params = dit.init_params(cfg, key)
+
+    K, N = 2, 4
+    sage = SageConfig(total_steps=8, share_ratio=0.25, guidance_scale=7.5,
+                      shared_uncond_cfg=True)
+    cond = jax.random.normal(jax.random.fold_in(key, 1),
+                             (K, N, cfg.cond_len, cfg.cond_dim))
+    mask = jnp.ones((K, N))
+    null = jnp.zeros((cfg.cond_len, cfg.cond_dim))
+    shape = (cfg.latent_size, cfg.latent_size, cfg.latent_channels)
+    mode = "interpret" if resolve_interpret("auto") else "compiled"
+
+    variants = {
+        "naive": (cfg, sage),
+        "pallas": (replace(cfg, attn_impl="pallas"),
+                   replace(sage, step_impl="fused")),
+    }
+    for name, (c, s) in variants.items():
+        eps_fn = lambda z, t, cc, _c=c: dit.forward(params, _c, z, t, cc)
+        run = jax.jit(lambda rng, cd, m: shared_sample(
+            eps_fn, sched, s, rng, cd, m, null, shape))
+        us, out = _time(run, key, cond, mask)
+        nfe = float(out["nfe"])
+        rows.append((f"sampler_e2e/{name}/K{K}N{N}T{s.total_steps}",
+                     us / nfe, f"us_per_nfe total_us={us:.0f} "
+                               f"nfe={nfe:.0f} {mode}"))
+
+    for r in rows[-len(variants):]:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,11 @@ def main():
     ap.add_argument("--adaptive", action="store_true")
     ap.add_argument("--shared-uncond", action="store_true")
     ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--backend", choices=["naive", "chunked", "pallas"],
+                    default="naive",
+                    help="attention backend (repro.kernels.dispatch)")
+    ap.add_argument("--fused-step", action="store_true",
+                    help="fused Pallas CFG+DDIM update")
     args = ap.parse_args()
 
     cfg = get_config("sage-dit", smoke=True)
@@ -35,7 +40,9 @@ def main():
         cfg, sage,
         dit_params=dit.init_params(cfg, jax.random.PRNGKey(0)),
         text_params=te.init_text(jax.random.PRNGKey(1), tc),
-        text_cfg=tc, group_size=4)
+        text_cfg=tc, group_size=4,
+        attn_impl=args.backend,
+        step_impl="fused" if args.fused_step else None)
 
     ds = ShapesDataset(res=16)
     _, prompts = ds.batch(0, args.requests)

@@ -122,11 +122,17 @@ class ModelConfig:
     dtype: str = "bfloat16"       # compute dtype
     param_dtype: str = "float32"
 
-    # attention implementation for full-sequence paths:
+    # attention implementation for full-sequence paths (kernels.dispatch):
     # "naive" materialises (Sq, Sk) scores; "chunked" is the online-softmax
-    # scan (kernels/flash_attention twin) — the §Perf memory-term variant.
+    # scan (kernels/flash_attention twin) — the §Perf memory-term variant;
+    # "pallas" runs the flash-attention TPU kernel (falls back to chunked
+    # for sliding-window / head_dim > 128 shapes).
     attn_impl: str = "naive"
     attn_block: int = 1024        # chunked-attention key-block size
+    # Pallas interpret-mode plumbing: "auto" interprets off-TPU and
+    # compiles on TPU; "on"/"off" force it; REPRO_KERNEL_INTERPRET=on|off
+    # env var overrides everything (see kernels.dispatch.resolve_interpret).
+    kernel_interpret: str = "auto"
 
     # ---- derived helpers -------------------------------------------------
     @property
@@ -272,6 +278,12 @@ class SageConfig:
     shared_uncond_cfg: bool = False  # beyond-paper: share CFG uncond pass
     clip_x0: float = 3.0           # x0-thresholding in the sampler
     sampler: str = "ddim"          # ddim | dpmpp (DPM-Solver++ 2M)
+    # per-step update implementation (kernels.dispatch): "reference" is the
+    # jnp cfg_combine + samplers.ddim_step pair; "fused" routes the DDIM
+    # path through the single-pass Pallas CFG+DDIM kernel (dpmpp keeps the
+    # reference path — its 2M history term is not fused yet).
+    step_impl: str = "reference"
+    kernel_interpret: str = "auto"  # see ModelConfig.kernel_interpret
 
     @property
     def branch_point(self) -> int:

@@ -13,6 +13,16 @@ import jax.numpy as jnp
 from repro.core.schedule import Schedule
 
 
+def ddim_scalars(sched: Schedule, t: jnp.ndarray, t_next: jnp.ndarray):
+    """Per-step (a_t, s_t, a_n, s_n) schedule gathers for one DDIM update.
+
+    Exposed so the fused CFG+DDIM Pallas kernel receives the scalars
+    directly (one (1, 8) SMEM-sized block) instead of re-deriving them
+    from full-tensor schedule math inside the update."""
+    return (sched.alpha(t), sched.sigma(t),
+            sched.alpha(t_next), sched.sigma(t_next))
+
+
 def ddim_step(sched: Schedule, z: jnp.ndarray, t: jnp.ndarray,
               t_next: jnp.ndarray, eps: jnp.ndarray,
               eta: float = 0.0, clip_x0: float = 0.0) -> jnp.ndarray:

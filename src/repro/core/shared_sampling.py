@@ -15,6 +15,12 @@ Static-shape, device-side implementation:
 Timestep loops are ``lax.scan`` over the DDIM grid (static trip counts;
 branch point is a static Python int — adaptive T* selects among a small set
 of compiled variants, see ``serve.py``).
+
+Kernel routing: ``sage.step_impl == "fused"`` sends the per-step CFG+DDIM
+update (and the shared-uncond group mean) through the Pallas kernels via
+``repro.kernels.dispatch`` — one HBM pass instead of 3+ elementwise passes
+per step; the denoiser's attention backend is chosen separately by
+``ModelConfig.attn_impl``.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ from repro.config import ModelConfig, SageConfig
 from repro.core import samplers
 from repro.core.guidance import cfg_combine
 from repro.core.schedule import Schedule, ddim_timesteps
+from repro.kernels import dispatch
 
 # eps_fn(z, t, cond) -> eps ; z (B,H,W,C), t (B,), cond (B,Lc,dc)
 EpsFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
@@ -36,18 +43,25 @@ EpsFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
 def group_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Masked mean over the member axis.  x (K,N,...), mask (K,N)."""
-    m = mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
-    return jnp.sum(x * m, axis=1) / jnp.maximum(
-        jnp.sum(m, axis=1), 1e-6)
+    from repro.kernels.group_mean.ref import masked_group_mean_ref
+    return masked_group_mean_ref(x, mask)
 
 
-def _cfg_eval(eps_fn: EpsFn, z, t, cond, null_cond, scale: float):
+def _fused_ddim(sage: SageConfig) -> bool:
+    """Single gate for the fused Pallas step path (DDIM only — dpmpp keeps
+    the reference path for its 2M history term); the shared-uncond group
+    mean rides the same gate."""
+    return sage.step_impl == "fused" and sage.sampler == "ddim"
+
+
+def _eps_pair(eps_fn: EpsFn, z, t, cond, null_cond):
+    """One batched denoiser call for the CFG pair -> (eps_u, eps_c)."""
     B = z.shape[0]
     zz = jnp.concatenate([z, z], 0)
     tt = jnp.concatenate([t, t], 0)
     cc = jnp.concatenate([jnp.broadcast_to(null_cond, cond.shape), cond], 0)
     eps = eps_fn(zz, tt, cc)
-    return cfg_combine(eps[:B], eps[B:], scale)
+    return eps[:B], eps[B:]
 
 
 def _sampler_update(sched: Schedule, sage: SageConfig, z, t, t_next, eps,
@@ -61,6 +75,28 @@ def _sampler_update(sched: Schedule, sage: SageConfig, z, t, t_next, eps,
                                       clip_x0=sage.clip_x0)
     return samplers.ddim_step(sched, z, t, t_next, eps,
                               clip_x0=sage.clip_x0)
+
+
+def _step_update(sched: Schedule, sage: SageConfig, z, t, t_next,
+                 eps_u, eps_c, eps_prev, t_prev, is_first):
+    """Apply one sampler update to the CFG pair; returns (z_next, eps).
+
+    ``sage.step_impl == "fused"`` (DDIM only — dpmpp keeps the reference
+    path for its 2M history term) routes through the single-pass Pallas
+    CFG+DDIM kernel: 3 tile reads, 1 write, no intermediate combined-eps /
+    z0 HBM round trips.  The returned eps feeds dpmpp's history carry and
+    is never read on the DDIM path."""
+    if _fused_ddim(sage):
+        a_t, s_t, a_n, s_n = samplers.ddim_scalars(sched, t, t_next)
+        z = dispatch.cfg_ddim_step(
+            z, eps_u, eps_c, guidance=sage.guidance_scale,
+            a_t=a_t, s_t=s_t, a_n=a_n, s_n=s_n, clip_x0=sage.clip_x0,
+            impl="fused", interpret=sage.kernel_interpret)
+        return z, eps_c
+    eps = cfg_combine(eps_u, eps_c, sage.guidance_scale)
+    z = _sampler_update(sched, sage, z, t, t_next, eps, eps_prev, t_prev,
+                        is_first)
+    return z, eps
 
 
 def shared_sample(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
@@ -89,9 +125,9 @@ def shared_sample(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
         z, eps_prev = carry
         t, t_next = grid[i], grid[i + 1]
         tb = jnp.full((K,), t)
-        eps = _cfg_eval(eps_fn, z, tb, cbar, null_cond, sage.guidance_scale)
-        z = _sampler_update(sched, sage, z, t, t_next, eps, eps_prev,
-                            grid[jnp.maximum(i - 1, 0)], i == 0)
+        eps_u, eps_c = _eps_pair(eps_fn, z, tb, cbar, null_cond)
+        z, eps = _step_update(sched, sage, z, t, t_next, eps_u, eps_c,
+                              eps_prev, grid[jnp.maximum(i - 1, 0)], i == 0)
         return (z, eps), None
 
     if n_shared > 0:
@@ -110,22 +146,27 @@ def shared_sample(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
             # members share z only at the branch point, so per-member uncond
             # is approximated by the group-mean latent's uncond — exact at
             # i == n_shared, approximate after.  Quality impact measured in
-            # benchmarks/fig4_shared_steps.py.
-            zg = group_mean(z.reshape(K, N, H, W, C), mask)
-            tg = jnp.full((K,), t)
-            eps_u = eps_fn(zg, tg, jnp.broadcast_to(null_cond, cbar.shape))
-            eps_u = jnp.broadcast_to(eps_u[:, None], (K, N, H, W, C)
+            # benchmarks/fig4_shared_steps.py.  The group eval is PACKED
+            # into the same denoiser batch as the member-cond evals — one
+            # eps_fn call of K + K*N instead of two sequential calls.
+            gm_impl = "pallas" if _fused_ddim(sage) else "reference"
+            zg = dispatch.group_mean(z.reshape(K, N, H, W, C), mask,
+                                     impl=gm_impl,
+                                     interpret=sage.kernel_interpret)
+            zz = jnp.concatenate([zg, z], 0)            # (K + K*N, H, W, C)
+            tt = jnp.full((K + K * N,), t)
+            cc = jnp.concatenate(
+                [jnp.broadcast_to(null_cond, cbar.shape), cm], 0)
+            eps = eps_fn(zz, tt, cc)
+            eps_u = jnp.broadcast_to(eps[:K][:, None], (K, N, H, W, C)
                                      ).reshape(K * N, H, W, C)
-            tb = jnp.full((K * N,), t)
-            eps_c = eps_fn(z, tb, cm)
-            eps = cfg_combine(eps_u, eps_c, sage.guidance_scale)
+            eps_c = eps[K:]
         else:
             tb = jnp.full((K * N,), t)
-            eps = _cfg_eval(eps_fn, z, tb, cm, null_cond,
-                            sage.guidance_scale)
-        z = _sampler_update(sched, sage, z, t, t_next, eps, eps_prev,
-                            grid[jnp.maximum(i - 1, 0)],
-                            i == n_shared)   # history restarts at the fork
+            eps_u, eps_c = _eps_pair(eps_fn, z, tb, cm, null_cond)
+        z, eps = _step_update(sched, sage, z, t, t_next, eps_u, eps_c,
+                              eps_prev, grid[jnp.maximum(i - 1, 0)],
+                              i == n_shared)  # history restarts at the fork
         return (z, eps), None
 
     (zb, _), _ = jax.lax.scan(branch_step, (zb, jnp.zeros_like(zb)),
@@ -155,10 +196,9 @@ def independent_sample(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
         z, eps_prev = carry
         t, t_next = grid[i], grid[i + 1]
         tb = jnp.full((M,), t)
-        eps = _cfg_eval(eps_fn, z, tb, cond_tokens, null_cond,
-                        sage.guidance_scale)
-        z = _sampler_update(sched, sage, z, t, t_next, eps, eps_prev,
-                            grid[jnp.maximum(i - 1, 0)], i == 0)
+        eps_u, eps_c = _eps_pair(eps_fn, z, tb, cond_tokens, null_cond)
+        z, eps = _step_update(sched, sage, z, t, t_next, eps_u, eps_c,
+                              eps_prev, grid[jnp.maximum(i - 1, 0)], i == 0)
         return (z, eps), None
 
     (z, _), _ = jax.lax.scan(step, (z, jnp.zeros_like(z)),

@@ -14,4 +14,10 @@ and are validated on CPU with interpret=True.
                      hot loop; VMEM-tiled, MXU-aligned)
 * ssd_scan        -- Mamba2 SSD intra-chunk tile (decay matrix stays in
                      VMEM; MXU-shaped Q=N=128 matmuls)
+* dispatch        -- config/env-driven backend selector (naive | chunked |
+                     pallas + interpret-mode resolution) that the model /
+                     sampler hot paths call instead of hard-coding an impl
+
+See README.md in this directory for backend selection and the
+interpret-mode plumbing.
 """

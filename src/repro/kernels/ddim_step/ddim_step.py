@@ -30,18 +30,21 @@ def _kernel(scal_ref, z_ref, eu_ref, ec_ref, out_ref):
     w = scal_ref[0, 0]
     a_t, s_t = scal_ref[0, 1], scal_ref[0, 2]
     a_n, s_n = scal_ref[0, 3], scal_ref[0, 4]
+    clip = scal_ref[0, 5]
     z = z_ref[...].astype(jnp.float32)
     eu = eu_ref[...].astype(jnp.float32)
     ec = ec_ref[...].astype(jnp.float32)
     eps = eu + w * (ec - eu)
-    z0 = (z - s_t * eps) / a_t
+    z0 = (z - s_t * eps) / jnp.maximum(a_t, 1e-6)
+    # static x0-thresholding (matches samplers.ddim_step); clip == 0 -> off
+    z0 = jnp.where(clip > 0.0, jnp.clip(z0, -clip, clip), z0)
     out_ref[...] = (a_n * z0 + s_n * eps).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ddim_step_2d(scalars, z, eps_u, eps_c, interpret: bool = True):
     """z/eps_u/eps_c (R, C), R % BLOCK_R == 0 and C % BLOCK_C == 0;
-    scalars (1, 8) f32 = [guidance, a_t, s_t, a_n, s_n, 0, 0, 0]."""
+    scalars (1, 8) f32 = [guidance, a_t, s_t, a_n, s_n, clip_x0, 0, 0]."""
     R, C = z.shape
     grid = (R // BLOCK_R, C // BLOCK_C)
     tile = pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j))

@@ -1,16 +1,26 @@
 """Public wrapper: arbitrary latent shapes -> padded 2-D tiles -> kernel."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.ddim_step.ddim_step import (BLOCK_C, BLOCK_R, ddim_step_2d)
 
 
 def fused_cfg_ddim_step(z, eps_u, eps_c, guidance, a_t, s_t, a_n, s_n,
-                        interpret: bool = True):
-    """Fused CFG + DDIM update for latents of any shape (B, ...)."""
+                        interpret: bool | None = None,
+                        clip_x0: float = 0.0):
+    """Fused CFG + DDIM update for latents of any shape (B, ...).
+
+    The step scalars (guidance, a_t, s_t, a_n, s_n, clip_x0) may be python
+    floats or traced jnp scalars — e.g. ``schedule.alpha(t)`` gathered per
+    scan step — and ride to the kernel in one (1, 8) block.  clip_x0 > 0
+    enables the sampler's x0-thresholding; ``interpret=None`` resolves via
+    dispatch (env override, else compiled only on TPU).
+    """
     assert z.shape == eps_u.shape == eps_c.shape
+    if interpret is None:
+        from repro.kernels.dispatch import resolve_interpret
+        interpret = resolve_interpret()
     orig_shape, n = z.shape, z.size
     C = BLOCK_C
     rows = -(-n // C)
@@ -21,8 +31,9 @@ def fused_cfg_ddim_step(z, eps_u, eps_c, guidance, a_t, s_t, a_n, s_n,
         return jnp.pad(x.reshape(-1), (0, pad)).reshape(rows_p, C)
 
     scal = jnp.zeros((1, 8), jnp.float32)
-    scal = scal.at[0, :5].set(
-        jnp.asarray([guidance, a_t, s_t, a_n, s_n], jnp.float32))
+    scal = scal.at[0, :6].set(
+        jnp.stack([jnp.asarray(v, jnp.float32) for v in
+                   (guidance, a_t, s_t, a_n, s_n, clip_x0)]))
     out = ddim_step_2d(scal, to2d(z), to2d(eps_u), to2d(eps_c),
                        interpret=interpret)
     return out.reshape(-1)[:n].reshape(orig_shape)

@@ -5,8 +5,11 @@ import jax.numpy as jnp
 
 
 def fused_cfg_ddim_step_ref(z, eps_u, eps_c, guidance: float,
-                            a_t: float, s_t: float, a_n: float, s_n: float):
+                            a_t: float, s_t: float, a_n: float, s_n: float,
+                            clip_x0: float = 0.0):
     zf = z.astype(jnp.float32)
     eps = (eps_u + guidance * (eps_c - eps_u)).astype(jnp.float32)
-    z0 = (zf - s_t * eps) / a_t
+    z0 = (zf - s_t * eps) / jnp.maximum(a_t, 1e-6)
+    if clip_x0:
+        z0 = jnp.clip(z0, -clip_x0, clip_x0)
     return (a_n * z0 + s_n * eps).astype(z.dtype)

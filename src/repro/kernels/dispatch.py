@@ -1,0 +1,119 @@
+"""Kernel backend dispatch — one switch between reference jnp math, the
+chunked online-softmax twin, and the Pallas TPU kernels.
+
+Every hot-path site (DiT attention, the CFG+DDIM sampler update, the
+group-mean reductions of Alg. 1) routes through this module instead of
+hard-coding an implementation, so a single config/env knob moves the whole
+sampling loop between backends:
+
+* ``impl`` — ``"naive"`` (materialised scores / separate elementwise
+  passes), ``"chunked"`` (jnp online-softmax scan), ``"pallas"`` (the
+  kernels under ``repro.kernels``).
+* ``interpret`` — Pallas interpret-mode plumbing.  ``"auto"`` (default)
+  runs interpret mode off-TPU (CPU tests exercise the kernel bodies) and
+  compiled mode on TPU — previously ``interpret=True`` was hard-coded at
+  every call site, so the kernels never actually compiled.  The env var
+  ``REPRO_KERNEL_INTERPRET=on|off`` overrides everything (useful to force
+  interpret mode when debugging a miscompile on device).
+
+Fallbacks are explicit and conservative: sliding-window attention has no
+Pallas kernel yet, so ``impl="pallas"`` with ``window > 0`` drops to the
+chunked path rather than silently computing the wrong mask.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional, Union
+
+import jax
+
+ATTN_IMPLS = ("naive", "chunked", "pallas")
+STEP_IMPLS = ("reference", "fused")
+
+InterpretLike = Union[None, bool, str]
+
+
+def resolve_interpret(setting: InterpretLike = "auto") -> bool:
+    """Resolve an interpret-mode setting to a concrete bool.
+
+    Priority: REPRO_KERNEL_INTERPRET env var > explicit on/off setting >
+    auto (interpret unless running on TPU).
+    """
+    env = os.environ.get("REPRO_KERNEL_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "on"):
+        return True
+    if env in ("0", "false", "off"):
+        return False
+    if env:
+        # a typo'd override silently doing nothing is worst exactly when
+        # someone is debugging a miscompile — fail loudly instead
+        raise ValueError(
+            f"REPRO_KERNEL_INTERPRET={env!r} not understood; use on|off")
+    if setting in (True, "on", "1", "true"):
+        return True
+    if setting in (False, "off", "0", "false"):
+        return False
+    if setting not in (None, "auto", ""):
+        raise ValueError(f"unknown interpret setting {setting!r}")
+    return jax.default_backend() != "tpu"
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              impl: str = "naive", causal: bool = False, window: int = 0,
+              block: int = 1024, scale: Optional[float] = None,
+              interpret: InterpretLike = "auto") -> jax.Array:
+    """Backend-dispatched attention.  q (B,Sq,H,hd), k/v (B,Sk,Hkv,hd).
+
+    ``pallas`` streams K/V blocks through the flash kernel (GQA folded
+    into the batch index map, padded keys masked via seq_k); ``chunked``
+    is its jnp twin; ``naive`` materialises the (Sq, Sk) scores.
+    """
+    from repro.models.layers import attend, attend_chunked, causal_mask
+
+    if impl not in ATTN_IMPLS:
+        raise ValueError(f"unknown attn impl {impl!r}; one of {ATTN_IMPLS}")
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    if impl == "pallas" and window == 0 and q.shape[-1] <= 128:
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal, scale=scale,
+                               interpret=resolve_interpret(interpret))
+    if impl in ("chunked", "pallas"):
+        # pallas lands here only for unsupported shapes (window / wide hd)
+        return attend_chunked(q, k, v, causal=causal, window=window,
+                              scale=scale, block=block)
+    mask = (causal_mask(q.shape[1], k.shape[1], window=window)
+            if causal else None)
+    return attend(q, k, v, mask, scale)
+
+
+def cfg_ddim_step(z: jax.Array, eps_u: jax.Array, eps_c: jax.Array, *,
+                  guidance, a_t, s_t, a_n, s_n, clip_x0: float = 0.0,
+                  impl: str = "reference",
+                  interpret: InterpretLike = "auto") -> jax.Array:
+    """CFG combine + DDIM update: one fused HBM pass on the pallas path,
+    reference jnp math otherwise.  Scalars may be traced (per scan step)."""
+    if impl not in STEP_IMPLS:
+        raise ValueError(f"unknown step impl {impl!r}; one of {STEP_IMPLS}")
+    if impl == "fused":
+        from repro.kernels.ddim_step.ops import fused_cfg_ddim_step
+        return fused_cfg_ddim_step(z, eps_u, eps_c, guidance, a_t, s_t,
+                                   a_n, s_n, clip_x0=clip_x0,
+                                   interpret=resolve_interpret(interpret))
+    from repro.kernels.ddim_step.ref import fused_cfg_ddim_step_ref
+    return fused_cfg_ddim_step_ref(z, eps_u, eps_c, guidance, a_t, s_t,
+                                   a_n, s_n, clip_x0=clip_x0)
+
+
+def group_mean(x: jax.Array, mask: jax.Array, *, impl: str = "reference",
+               interpret: InterpretLike = "auto") -> jax.Array:
+    """Masked mean over the member axis.  x (K,N,...), mask (K,N)."""
+    if impl not in ("reference", "pallas", "fused"):
+        raise ValueError(f"unknown group_mean impl {impl!r}")
+    if impl in ("pallas", "fused"):
+        from repro.kernels.group_mean.ops import masked_group_mean
+        return masked_group_mean(x, mask,
+                                 interpret=resolve_interpret(interpret))
+    from repro.kernels.group_mean.ref import masked_group_mean_ref
+    return masked_group_mean_ref(x, mask)

@@ -70,26 +70,33 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("causal", "scale", "interpret", "seq_k"))
+                   static_argnames=("causal", "scale", "interpret", "seq_k",
+                                    "q_per_kv"))
 def flash_attention_bhsd(q, k, v, *, causal: bool = True,
                          scale: float = 1.0, interpret: bool = True,
-                         seq_k: int = 0):
-    """q (BH, Sq, D), k/v (BH, Sk, D) -> (BH, Sq, D).  Sq % BLOCK_Q == 0,
-    Sk % BLOCK_K == 0, D <= 128 (pad lanes upstream).  seq_k = true
-    (pre-padding) key length for masking; 0 -> Sk."""
+                         seq_k: int = 0, q_per_kv: int = 1):
+    """q (BH, Sq, D), k/v (BH // q_per_kv, Sk, D) -> (BH, Sq, D).
+    Sq % BLOCK_Q == 0, Sk % BLOCK_K == 0, D <= 128 (pad lanes upstream).
+    seq_k = true (pre-padding) key length for masking; 0 -> Sk.
+
+    GQA rides on the batch index map: query batch b reads K/V batch
+    b // q_per_kv, so the group is never materialised in HBM — q must be
+    laid out head-major (..., Hkv, g) along its batch axis."""
     BH, Sq, D = q.shape
     Sk = k.shape[1]
+    assert BH == k.shape[0] * q_per_kv, (BH, k.shape[0], q_per_kv)
     grid = (BH, Sq // BLOCK_Q, Sk // BLOCK_K)
     kernel = functools.partial(_kernel, scale=scale, causal=causal,
                                block_q=BLOCK_Q, block_k=BLOCK_K,
                                seq_k=seq_k or Sk)
+    g = q_per_kv
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, BLOCK_Q, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b // g, j, 0)),
+            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b // g, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, BLOCK_Q, D), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),

@@ -9,27 +9,46 @@ from repro.kernels.flash_attention.flash_attention import (
     BLOCK_K, BLOCK_Q, flash_attention_bhsd)
 
 
-def flash_attention(q, k, v, *, causal: bool = True, interpret: bool = True):
-    """q (B, Sq, H, D); k/v (B, Sk, Hkv, D), H % Hkv == 0 -> (B, Sq, H, D)."""
+def flash_attention(q, k, v, *, causal: bool = True,
+                    scale: float | None = None,
+                    interpret: bool | None = None):
+    """q (B, Sq, H, D); k/v (B, Sk, Hkv, D), H % Hkv == 0 -> (B, Sq, H, D).
+
+    The GQA group is folded into the *batch* axis head-major
+    (B, Hkv, g) so the kernel's ``b // g`` index map shares each K/V
+    block across its g query heads — no ``jnp.repeat`` materialisation.
+    ``interpret=None`` resolves via :func:`repro.kernels.dispatch.
+    resolve_interpret` (env override, else compiled only on TPU).
+    """
     B, Sq, H, D = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
-    scale = 1.0 / math.sqrt(D)
+    if D > 128:
+        raise ValueError(
+            f"flash_attention supports head_dim <= 128 (one lane tile), "
+            f"got D={D}; split heads or use attn_impl='chunked'")
+    if H % Hkv:
+        raise ValueError(f"n_heads {H} not divisible by n_kv_heads {Hkv}")
+    if interpret is None:
+        from repro.kernels.dispatch import resolve_interpret
+        interpret = resolve_interpret()
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
     g = H // Hkv
-    if g > 1:                       # materialise GQA repeat for the kernel
-        k = jnp.repeat(k, g, axis=2)
-        v = jnp.repeat(v, g, axis=2)
 
-    def to_bhsd(x, S):
-        x = x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
-        pad_s = (-S) % (BLOCK_Q if S == Sq else BLOCK_K)
+    def to_bhsd(x, *, kv: bool):
+        # block choice is keyed on tensor ROLE (q pads to BLOCK_Q, k/v to
+        # BLOCK_K) — keying on S == Sq misclassifies K/V whenever Sq == Sk.
+        Bx, S, Hx, _ = x.shape
+        x = x.transpose(0, 2, 1, 3).reshape(Bx * Hx, S, D)
+        pad_s = (-S) % (BLOCK_K if kv else BLOCK_Q)
         pad_d = (-D) % 128
-        return jnp.pad(x, ((0, 0), (0, pad_s), (0, pad_d))), pad_s
+        return jnp.pad(x, ((0, 0), (0, pad_s), (0, pad_d)))
 
-    qp, _ = to_bhsd(q, Sq)
-    kp, _ = to_bhsd(k, Sk)
-    vp, _ = to_bhsd(v, Sk)
+    qp = to_bhsd(q, kv=False)                     # (B*H, Sq_p, Dp)
+    kp = to_bhsd(k, kv=True)                      # (B*Hkv, Sk_p, Dp)
+    vp = to_bhsd(v, kv=True)
     # zero-padded key rows are masked inside the kernel via seq_k
     out = flash_attention_bhsd(qp, kp, vp, causal=causal, scale=scale,
-                               interpret=interpret, seq_k=Sk)
+                               interpret=interpret, seq_k=Sk, q_per_kv=g)
     out = out[:, :Sq, :D].reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
     return out

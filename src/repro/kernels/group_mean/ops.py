@@ -6,8 +6,14 @@ import jax.numpy as jnp
 from repro.kernels.group_mean.group_mean import BLOCK_F, group_mean_knf
 
 
-def masked_group_mean(x, mask, interpret: bool = True):
-    """x (K, N, ...); mask (K, N) f32 -> masked mean over N: (K, ...)."""
+def masked_group_mean(x, mask, interpret: bool | None = None):
+    """x (K, N, ...); mask (K, N) f32 -> masked mean over N: (K, ...).
+
+    ``interpret=None`` resolves via dispatch (env override, else compiled
+    only on TPU)."""
+    if interpret is None:
+        from repro.kernels.dispatch import resolve_interpret
+        interpret = resolve_interpret()
     K, N = x.shape[:2]
     feat_shape = x.shape[2:]
     F = 1

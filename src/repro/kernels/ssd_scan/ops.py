@@ -9,9 +9,14 @@ import jax.numpy as jnp
 from repro.kernels.ssd_scan.ssd_scan import ssd_intra_chunk
 
 
-def ssd_chunked_kernel(x, dA, B_, C_, chunk: int, interpret: bool = True):
+def ssd_chunked_kernel(x, dA, B_, C_, chunk: int,
+                       interpret: bool | None = None):
     """Same contract as models.ssm.ssd_chunked (g=1 groups):
-    x (b,l,h,p) pre-multiplied by dt; dA (b,l,h); B_/C_ (b,l,n)."""
+    x (b,l,h,p) pre-multiplied by dt; dA (b,l,h); B_/C_ (b,l,n).
+    ``interpret=None`` resolves via dispatch (compiled only on TPU)."""
+    if interpret is None:
+        from repro.kernels.dispatch import resolve_interpret
+        interpret = resolve_interpret()
     b, l, h, p = x.shape
     n = B_.shape[-1]
     assert l % chunk == 0, (l, chunk)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.kernels import dispatch
 from repro.models.layers import (apply_rope, attend, attend_chunked,
                                  causal_mask, dense_init, dot, rms_norm)
 
@@ -74,21 +75,22 @@ def gqa_full(p: Params, cfg: ModelConfig, x: jax.Array, *,
              causal: bool = True, window: int = 0,
              memory: Optional[jax.Array] = None,
              pos0: int = 0) -> jax.Array:
-    """Full-sequence attention (training / encoder / cross)."""
+    """Full-sequence attention (training / encoder / cross).
+
+    Backend comes from ``cfg.attn_impl`` via the kernel dispatch layer:
+    ``pallas`` runs the flash-attention kernel for both self-attention and
+    cross-attention (padded cond keys masked via seq_k inside the kernel).
+    """
     kv_src = memory if memory is not None else x
     q, k, v = _qkv(p, cfg, x, kv_src)
     if memory is None:  # self-attention gets RoPE
         pos = jnp.arange(x.shape[1]) + pos0
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
-    if cfg.attn_impl == "chunked":
-        out = attend_chunked(q, k, v, causal=causal, window=window,
+    out = dispatch.attention(q, k, v, impl=cfg.attn_impl, causal=causal,
+                             window=window, block=cfg.attn_block,
                              scale=1.0 / math.sqrt(cfg.hd),
-                             block=cfg.attn_block)
-    else:
-        mask = (causal_mask(q.shape[1], k.shape[1], window=window)
-                if causal else None)
-        out = attend(q, k, v, mask, 1.0 / math.sqrt(cfg.hd))
+                             interpret=cfg.kernel_interpret)
     return dot(out.reshape(*x.shape[:2], -1), p["wo"])
 
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, SageConfig
+from repro.config import replace as config_replace
 from repro.core import grouping
 from repro.core.schedule import Schedule, make_schedule
 from repro.core.shared_sampling import shared_sample
@@ -41,7 +42,21 @@ class SageServingEngine:
                  dit_params, text_params, text_cfg, vae_params=None,
                  sched: Optional[Schedule] = None, group_size: int = 4,
                  branch_buckets: Sequence[float] = (0.2, 0.3, 0.4),
-                 seed: int = 0):
+                 seed: int = 0, attn_impl: Optional[str] = None,
+                 step_impl: Optional[str] = None,
+                 kernel_interpret: Optional[str] = None):
+        """attn_impl / step_impl / kernel_interpret override the kernel
+        backend knobs of model_cfg / sage (see repro.kernels.dispatch):
+        attn_impl="pallas" + step_impl="fused" runs the whole sampling hot
+        path on the Pallas kernels."""
+        if attn_impl is not None:
+            model_cfg = config_replace(model_cfg, attn_impl=attn_impl)
+        if kernel_interpret is not None:
+            model_cfg = config_replace(model_cfg,
+                                       kernel_interpret=kernel_interpret)
+            sage = config_replace(sage, kernel_interpret=kernel_interpret)
+        if step_impl is not None:
+            sage = config_replace(sage, step_impl=step_impl)
         self.cfg = model_cfg
         self.sage = sage
         self.sched = sched or make_schedule(1000)

@@ -1,0 +1,210 @@
+"""Dispatch-layer parity: the pallas backends must match the naive jnp
+paths everywhere the sampling hot loop uses them — attention (self and
+cross, padded keys), the fused CFG+DDIM update, and full shared_sample
+trajectories (acceptance: atol 2e-2 attention / 1e-4 fused update)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SageConfig, get_config, replace
+from repro.core import samplers
+from repro.core.guidance import cfg_combine
+from repro.core.schedule import make_schedule
+from repro.core.shared_sampling import shared_sample
+from repro.kernels import dispatch
+from repro.kernels.ddim_step.ops import fused_cfg_ddim_step
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models import attention as attn
+from repro.models import dit
+
+SCHED = make_schedule(1000)
+CFG = get_config("sage-dit", smoke=True)
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_interpret_auto_and_overrides(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_INTERPRET", raising=False)
+    on_tpu = jax.default_backend() == "tpu"
+    assert dispatch.resolve_interpret("auto") == (not on_tpu)
+    assert dispatch.resolve_interpret("on") is True
+    assert dispatch.resolve_interpret("off") is False
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "on")
+    assert dispatch.resolve_interpret("off") is True  # env wins
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "off")
+    assert dispatch.resolve_interpret("on") is False
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "yes-please")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_INTERPRET"):
+        dispatch.resolve_interpret("auto")  # typo'd override fails loudly
+    monkeypatch.delenv("REPRO_KERNEL_INTERPRET")
+    with pytest.raises(ValueError):
+        dispatch.resolve_interpret("sometimes")
+
+
+def test_dispatch_rejects_unknown_impls():
+    x = jnp.zeros((1, 8, 2, 16))
+    with pytest.raises(ValueError):
+        dispatch.attention(x, x, x, impl="cuda")
+    z = jnp.zeros((1, 4, 4, 2))
+    with pytest.raises(ValueError):
+        dispatch.cfg_ddim_step(z, z, z, guidance=1.0, a_t=0.9, s_t=0.44,
+                               a_n=0.95, s_n=0.31, impl="magic")
+
+
+# ---------------------------------------------------------------------------
+# attention backend parity through gqa_full
+# ---------------------------------------------------------------------------
+
+def _attn_setup(n_kv_heads=None, dtype="float32"):
+    cfg = CFG if n_kv_heads is None else replace(CFG, n_kv_heads=n_kv_heads)
+    cfg = replace(cfg, dtype=dtype)
+    key = jax.random.PRNGKey(0)
+    p = attn.init_gqa(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model),
+                          jnp.dtype(dtype))
+    return cfg, p, x
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("n_kv", [None, 2])  # MHA and a real GQA fold
+def test_pallas_self_attention_matches_naive(dtype, n_kv):
+    cfg, p, x = _attn_setup(n_kv_heads=n_kv, dtype=dtype)
+    ref = attn.gqa_full(p, replace(cfg, attn_impl="naive"), x, causal=False)
+    out = attn.gqa_full(p, replace(cfg, attn_impl="pallas"), x, causal=False)
+    tol = 1e-3 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("lc", [48, 77, 130])  # odd / padded key lengths
+def test_pallas_cross_attention_masks_padded_keys(lc):
+    cfg, p, x = _attn_setup()
+    mem = jax.random.normal(jax.random.PRNGKey(7), (2, lc, cfg.d_model))
+    ref = attn.gqa_full(p, replace(cfg, attn_impl="naive"), x,
+                        causal=False, memory=mem)
+    out = attn.gqa_full(p, replace(cfg, attn_impl="pallas"), x,
+                        causal=False, memory=mem)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_pallas_window_falls_back_to_chunked():
+    cfg, p, x = _attn_setup()
+    ref = attn.gqa_full(p, replace(cfg, attn_impl="chunked"), x,
+                        causal=True, window=8)
+    out = attn.gqa_full(p, replace(cfg, attn_impl="pallas"), x,
+                        causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_rejects_wide_heads():
+    q = jnp.zeros((1, 128, 2, 256))
+    with pytest.raises(ValueError, match="head_dim"):
+        flash_attention(q, q, q, causal=False)
+
+
+# ---------------------------------------------------------------------------
+# fused CFG+DDIM vs cfg_combine + samplers.ddim_step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(2, 8, 8, 4), (3, 17, 5, 3), (1, 7, 9, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("clip", [0.0, 3.0])
+def test_fused_step_matches_sampler_composition(shape, dtype, clip):
+    key = jax.random.PRNGKey(hash((shape, clip)) % 2**31)
+    z, eu, ec = (jax.random.normal(jax.random.fold_in(key, i), shape, dtype)
+                 for i in range(3))
+    t, t_next = jnp.int32(700), jnp.int32(466)
+    w = 7.5
+    eps = cfg_combine(eu, ec, w)
+    ref = samplers.ddim_step(SCHED, z, t, t_next, eps, clip_x0=clip)
+    a_t, s_t, a_n, s_n = samplers.ddim_scalars(SCHED, t, t_next)
+    out = fused_cfg_ddim_step(z, eu, ec, w, a_t, s_t, a_n, s_n,
+                              clip_x0=clip)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_dispatch_step_reference_equals_fused():
+    key = jax.random.PRNGKey(3)
+    z, eu, ec = (jax.random.normal(jax.random.fold_in(key, i), (2, 6, 6, 4))
+                 for i in range(3))
+    kw = dict(guidance=5.0, a_t=SCHED.alpha(500), s_t=SCHED.sigma(500),
+              a_n=SCHED.alpha(333), s_n=SCHED.sigma(333), clip_x0=3.0)
+    ref = dispatch.cfg_ddim_step(z, eu, ec, impl="reference", **kw)
+    out = dispatch.cfg_ddim_step(z, eu, ec, impl="fused", **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dispatch_group_mean_matches_reference():
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (3, 4, 8, 8, 2))
+    mask = (jax.random.uniform(jax.random.fold_in(key, 1), (3, 4)) > 0.4
+            ).astype(jnp.float32).at[:, 0].set(1.0)
+    ref = dispatch.group_mean(x, mask, impl="reference")
+    out = dispatch.group_mean(x, mask, impl="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: shared_sample naive vs pallas+fused
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shared_uncond", [False, True])
+def test_shared_sample_pallas_fused_matches_naive(shared_uncond):
+    sched = SCHED
+    key = jax.random.PRNGKey(0)
+    params = dit.init_params(CFG, key)
+    K, N = 2, 3
+    cond = jax.random.normal(jax.random.fold_in(key, 1),
+                             (K, N, CFG.cond_len, CFG.cond_dim))
+    mask = jnp.ones((K, N)).at[1, 2].set(0.0)
+    null = jnp.zeros((CFG.cond_len, CFG.cond_dim))
+    shape = (CFG.latent_size, CFG.latent_size, CFG.latent_channels)
+    sage = SageConfig(total_steps=6, share_ratio=0.33, guidance_scale=3.0,
+                      shared_uncond_cfg=shared_uncond)
+
+    def run(cfg, sg):
+        return shared_sample(
+            lambda z, t, c: dit.forward(params, cfg, z, t, c),
+            sched, sg, key, cond, mask, null, shape)
+
+    ref = run(replace(CFG, attn_impl="naive"), sage)
+    out = run(replace(CFG, attn_impl="pallas"),
+              replace(sage, step_impl="fused"))
+    assert int(ref["nfe"]) == int(out["nfe"])  # fusion must not change NFE
+    np.testing.assert_allclose(np.asarray(out["latents"]),
+                               np.asarray(ref["latents"]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_serving_engine_runs_on_pallas_backend():
+    from repro.models import text_encoder as te
+    from repro.serving.engine import SageServingEngine
+
+    sage = SageConfig(total_steps=4, share_ratio=0.5, guidance_scale=2.0,
+                      tau_min=0.2)
+    tc = te.text_cfg(dim=CFG.cond_dim, layers=2)
+    key = jax.random.PRNGKey(0)
+    engine = SageServingEngine(
+        CFG, sage, dit_params=dit.init_params(CFG, key),
+        text_params=te.init_text(jax.random.fold_in(key, 1), tc),
+        text_cfg=tc, group_size=3,
+        attn_impl="pallas", step_impl="fused")
+    assert engine.cfg.attn_impl == "pallas"
+    assert engine.sage.step_impl == "fused"
+    engine.submit(["a red circle", "a big red circle", "a blue square"])
+    done = engine.step(max_batch=3)
+    assert len(done) == 3
+    assert all(np.isfinite(c.image).all() for c in done)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels.ddim_step.ops import fused_cfg_ddim_step
 from repro.kernels.ddim_step.ref import fused_cfg_ddim_step_ref

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.config import OptimConfig, SageConfig, get_config
 from repro.core import grouping, lora as lora_lib, samplers, trainer

@@ -4,7 +4,7 @@ RG-LRU associative scan with its step form."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.config import get_config
 from repro.models import rglru as rglru_lib
