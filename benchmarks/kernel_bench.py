@@ -7,8 +7,12 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import samplers
+from repro.core.guidance import cfg_combine
+from repro.core.schedule import make_schedule
 from repro.kernels.ddim_step.ops import fused_cfg_ddim_step
 from repro.kernels.dispatch import resolve_interpret
+from repro.kernels.dpmpp_step.ops import fused_cfg_dpmpp_step
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.group_mean.ops import masked_group_mean
 
@@ -43,7 +47,35 @@ def main(rows=None):
     us = _time(flash_attention, q, k, v, n=2)
     rows.append(("kernel/flash_attention/2x256x4x64", us, mode))
 
-    for r in rows[-3:]:
+    # sliding window: K grid trimmed to the blocks the window touches
+    qw, kw, vw = (jax.random.normal(jax.random.fold_in(key, i),
+                                    (1, 512, 4, 64)) for i in range(3))
+    us = _time(flash_attention, qw, kw, vw, window=128, n=2)
+    rows.append(("kernel/flash_attention_w128/1x512x4x64", us, mode))
+
+    # head_dim=256: two-lane-tile D variant
+    qd, kd, vd = (jax.random.normal(jax.random.fold_in(key, i),
+                                    (1, 256, 2, 256)) for i in range(3))
+    us = _time(flash_attention, qd, kd, vd, n=2)
+    rows.append(("kernel/flash_attention_d256/1x256x2x256", us, mode))
+
+    # dpmpp fused kernel vs the jnp reference composition
+    sched = make_schedule(1000)
+    zs = [jax.random.normal(jax.random.fold_in(key, 20 + i), (8, 64, 64, 4))
+          for i in range(4)]
+    sc = samplers.dpmpp_scalars(sched, 700, 466, 933)
+
+    def dpmpp_ref(z, eu, ec, ep):
+        eps = cfg_combine(eu, ec, 7.5)
+        return samplers.dpmpp_2m_step(sched, z, 700, 466, eps, ep, 933,
+                                      clip_x0=3.0), eps
+
+    us = _time(fused_cfg_dpmpp_step, *zs, 7.5, *sc, False, clip_x0=3.0)
+    rows.append(("kernel/dpmpp_step_fused/8x64x64x4", us, mode))
+    us = _time(jax.jit(dpmpp_ref), *zs)
+    rows.append(("kernel/dpmpp_step_reference/8x64x64x4", us, mode))
+
+    for r in rows[-7:]:
         print(f"{r[0]},{r[1]:.0f},{r[2]}", flush=True)
     return rows
 

@@ -46,10 +46,15 @@ def main(rows=None):
     shape = (cfg.latent_size, cfg.latent_size, cfg.latent_channels)
     mode = "interpret" if resolve_interpret("auto") else "compiled"
 
+    dpmpp = replace(sage, sampler="dpmpp")
     variants = {
         "naive": (cfg, sage),
         "pallas": (replace(cfg, attn_impl="pallas"),
                    replace(sage, step_impl="fused")),
+        # dpmpp fused-vs-reference pair: same attention backend, so the
+        # row delta isolates the fused CFG+DPM-Solver++(2M) step kernel
+        "dpmpp_ref": (cfg, dpmpp),
+        "dpmpp_fused": (cfg, replace(dpmpp, step_impl="fused")),
     }
     for name, (c, s) in variants.items():
         eps_fn = lambda z, t, cc, _c=c: dit.forward(params, _c, z, t, cc)

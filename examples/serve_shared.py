@@ -27,14 +27,17 @@ def main():
                     default="naive",
                     help="attention backend (repro.kernels.dispatch)")
     ap.add_argument("--fused-step", action="store_true",
-                    help="fused Pallas CFG+DDIM update")
+                    help="fused Pallas CFG+solver update (DDIM and dpmpp)")
+    ap.add_argument("--sampler", choices=["ddim", "dpmpp"], default="ddim",
+                    help="ODE solver (both have fused Pallas kernels)")
     args = ap.parse_args()
 
     cfg = get_config("sage-dit", smoke=True)
     sage = SageConfig(total_steps=args.steps, share_ratio=0.3,
                       guidance_scale=4.0, tau_min=0.3,
                       adaptive_branch=args.adaptive,
-                      shared_uncond_cfg=args.shared_uncond)
+                      shared_uncond_cfg=args.shared_uncond,
+                      sampler=args.sampler)
     tc = te.text_cfg(dim=cfg.cond_dim, layers=2)
     engine = SageServingEngine(
         cfg, sage,

@@ -125,8 +125,9 @@ class ModelConfig:
     # attention implementation for full-sequence paths (kernels.dispatch):
     # "naive" materialises (Sq, Sk) scores; "chunked" is the online-softmax
     # scan (kernels/flash_attention twin) — the §Perf memory-term variant;
-    # "pallas" runs the flash-attention TPU kernel (falls back to chunked
-    # for sliding-window / head_dim > 128 shapes).
+    # "pallas" runs the flash-attention TPU kernel, incl. causal sliding
+    # windows (K-index-map variant) and head_dim <= 256 (two-lane-tile D);
+    # only head_dim > 256 / non-causal windows fall back to chunked.
     attn_impl: str = "naive"
     attn_block: int = 1024        # chunked-attention key-block size
     # Pallas interpret-mode plumbing: "auto" interprets off-TPU and
@@ -279,9 +280,10 @@ class SageConfig:
     clip_x0: float = 3.0           # x0-thresholding in the sampler
     sampler: str = "ddim"          # ddim | dpmpp (DPM-Solver++ 2M)
     # per-step update implementation (kernels.dispatch): "reference" is the
-    # jnp cfg_combine + samplers.ddim_step pair; "fused" routes the DDIM
-    # path through the single-pass Pallas CFG+DDIM kernel (dpmpp keeps the
-    # reference path — its 2M history term is not fused yet).
+    # jnp cfg_combine + samplers.<solver>_step pair; "fused" routes BOTH
+    # solvers through single-pass Pallas kernels — CFG+DDIM (3 reads /
+    # 1 write) and CFG+DPM-Solver++(2M) (4 reads / 2 writes; the kernel
+    # also emits the combined eps for the 2M history carry).
     step_impl: str = "reference"
     kernel_interpret: str = "auto"  # see ModelConfig.kernel_interpret
 

@@ -23,6 +23,26 @@ def ddim_scalars(sched: Schedule, t: jnp.ndarray, t_next: jnp.ndarray):
             sched.alpha(t_next), sched.sigma(t_next))
 
 
+def dpmpp_scalars(sched: Schedule, t: jnp.ndarray, t_next: jnp.ndarray,
+                  t_prev: jnp.ndarray):
+    """Per-step scalars for one fused DPM-Solver++(2M) update.
+
+    Returns ``(a_t, s_t, a_n, s_n, lam, lam_p, lam_n)`` — the schedule
+    gathers plus the three log-SNR points the 2M extrapolation needs.
+    Exposed so the fused CFG+DPM-Solver++ Pallas kernel receives everything
+    in one (1, 16) SMEM-sized block instead of re-deriving lambda-space
+    quantities from full-tensor schedule math inside the update; the same
+    guard epsilons as :func:`dpmpp_2m_step` keep the two paths bit-aligned.
+    """
+    a_t, s_t = sched.alpha(t), sched.sigma(t)
+    a_n, s_n = sched.alpha(t_next), sched.sigma(t_next)
+    a_p, s_p = sched.alpha(t_prev), sched.sigma(t_prev)
+    lam = jnp.log(jnp.maximum(a_t, 1e-6) / jnp.maximum(s_t, 1e-8))
+    lam_n = jnp.log(jnp.maximum(a_n, 1e-6) / jnp.maximum(s_n, 1e-8))
+    lam_p = jnp.log(jnp.maximum(a_p, 1e-6) / jnp.maximum(s_p, 1e-8))
+    return a_t, s_t, a_n, s_n, lam, lam_p, lam_n
+
+
 def ddim_step(sched: Schedule, z: jnp.ndarray, t: jnp.ndarray,
               t_next: jnp.ndarray, eps: jnp.ndarray,
               eta: float = 0.0, clip_x0: float = 0.0) -> jnp.ndarray:

@@ -16,10 +16,12 @@ Timestep loops are ``lax.scan`` over the DDIM grid (static trip counts;
 branch point is a static Python int — adaptive T* selects among a small set
 of compiled variants, see ``serve.py``).
 
-Kernel routing: ``sage.step_impl == "fused"`` sends the per-step CFG+DDIM
-update (and the shared-uncond group mean) through the Pallas kernels via
-``repro.kernels.dispatch`` — one HBM pass instead of 3+ elementwise passes
-per step; the denoiser's attention backend is chosen separately by
+Kernel routing: ``sage.step_impl == "fused"`` sends the per-step CFG+solver
+update — DDIM *and* DPM-Solver++(2M) — plus the shared-uncond group mean
+through the Pallas kernels via ``repro.kernels.dispatch``: one HBM pass
+instead of 3+ elementwise passes per step (the dpmpp kernel also returns
+the combined eps so the 2M history carry costs no extra pass); the
+denoiser's attention backend is chosen separately by
 ``ModelConfig.attn_impl``.
 """
 from __future__ import annotations
@@ -47,11 +49,11 @@ def group_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return masked_group_mean_ref(x, mask)
 
 
-def _fused_ddim(sage: SageConfig) -> bool:
-    """Single gate for the fused Pallas step path (DDIM only — dpmpp keeps
-    the reference path for its 2M history term); the shared-uncond group
-    mean rides the same gate."""
-    return sage.step_impl == "fused" and sage.sampler == "ddim"
+def _fused_step(sage: SageConfig) -> bool:
+    """Single gate for the fused Pallas step path — both solvers the paper
+    evaluates (DDIM and DPM-Solver++(2M)) have fused kernels; the
+    shared-uncond group mean rides the same gate."""
+    return sage.step_impl == "fused"
 
 
 def _eps_pair(eps_fn: EpsFn, z, t, cond, null_cond):
@@ -81,12 +83,22 @@ def _step_update(sched: Schedule, sage: SageConfig, z, t, t_next,
                  eps_u, eps_c, eps_prev, t_prev, is_first):
     """Apply one sampler update to the CFG pair; returns (z_next, eps).
 
-    ``sage.step_impl == "fused"`` (DDIM only — dpmpp keeps the reference
-    path for its 2M history term) routes through the single-pass Pallas
-    CFG+DDIM kernel: 3 tile reads, 1 write, no intermediate combined-eps /
-    z0 HBM round trips.  The returned eps feeds dpmpp's history carry and
-    is never read on the DDIM path."""
-    if _fused_ddim(sage):
+    ``sage.step_impl == "fused"`` routes through the single-pass Pallas
+    kernels: CFG+DDIM is 3 tile reads / 1 write, CFG+DPM-Solver++(2M) is
+    4 reads / 2 writes (the kernel also emits the combined eps for the 2M
+    history carry) — no intermediate combined-eps / x0 HBM round trips
+    either way.  The returned eps feeds dpmpp's history carry and is never
+    read on the DDIM path."""
+    if _fused_step(sage) and sage.sampler == "dpmpp":
+        a_t, s_t, a_n, s_n, lam, lam_p, lam_n = samplers.dpmpp_scalars(
+            sched, t, t_next, t_prev)
+        return dispatch.cfg_dpmpp_step(
+            z, eps_u, eps_c, eps_prev, guidance=sage.guidance_scale,
+            a_t=a_t, s_t=s_t, a_n=a_n, s_n=s_n,
+            lam=lam, lam_p=lam_p, lam_n=lam_n, is_first=is_first,
+            clip_x0=sage.clip_x0, impl="fused",
+            interpret=sage.kernel_interpret)
+    if _fused_step(sage):
         a_t, s_t, a_n, s_n = samplers.ddim_scalars(sched, t, t_next)
         z = dispatch.cfg_ddim_step(
             z, eps_u, eps_c, guidance=sage.guidance_scale,
@@ -149,7 +161,7 @@ def shared_sample(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
             # benchmarks/fig4_shared_steps.py.  The group eval is PACKED
             # into the same denoiser batch as the member-cond evals — one
             # eps_fn call of K + K*N instead of two sequential calls.
-            gm_impl = "pallas" if _fused_ddim(sage) else "reference"
+            gm_impl = "pallas" if _fused_step(sage) else "reference"
             zg = dispatch.group_mean(z.reshape(K, N, H, W, C), mask,
                                      impl=gm_impl,
                                      interpret=sage.kernel_interpret)

@@ -8,6 +8,9 @@ and are validated on CPU with interpret=True.
 * ddim_step       -- fused CFG combine + DDIM latent update (the per-step
                      elementwise tail of Alg. 1; fusing avoids repeated HBM
                      round trips per sampler step)
+* dpmpp_step      -- fused CFG combine + DPM-Solver++(2M) update (lambda
+                     extrapolation + history term in one pass; also emits
+                     the combined eps for the solver's history carry)
 * group_mean      -- masked segment mean over group members (the c-bar /
                      z-bar of Alg. 1/2) incl. the branch-point broadcast
 * flash_attention -- blocked online-softmax attention (the DiT/transformer

@@ -1,0 +1,38 @@
+"""Shared plumbing for the elementwise step kernels: flatten arbitrary
+latent shapes to padded (rows, BLOCK_C) tiles and pack per-step scalars
+into one small fp32 block.  Used by ddim_step/ops.py and dpmpp_step/ops.py
+so the tiling scheme can't drift between the two fused-step kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tile_2d(block_r: int, block_c: int, *arrays):
+    """Flatten each array to a zero-padded (rows_p, block_c) tile grid.
+
+    All arrays must share a shape.  Returns ``(tiles, untile)`` where
+    ``untile`` maps a (rows_p, block_c) result back to the original shape.
+    """
+    n = arrays[0].size
+    orig_shape = arrays[0].shape
+    rows = -(-n // block_c)
+    rows_p = -(-rows // block_r) * block_r
+    pad = rows_p * block_c - n
+
+    def to2d(x):
+        assert x.shape == orig_shape, (x.shape, orig_shape)
+        return jnp.pad(x.reshape(-1), (0, pad)).reshape(rows_p, block_c)
+
+    def untile(x):
+        return x.reshape(-1)[:n].reshape(orig_shape)
+
+    return [to2d(x) for x in arrays], untile
+
+
+def scalar_block(values, width: int):
+    """Pack per-step scalars (python floats or traced jnp scalars) into a
+    zero-padded (1, width) fp32 block for an SMEM-sized BlockSpec."""
+    assert len(values) <= width, (len(values), width)
+    block = jnp.zeros((1, width), jnp.float32)
+    return block.at[0, :len(values)].set(
+        jnp.stack([jnp.asarray(v, jnp.float32) for v in values]))

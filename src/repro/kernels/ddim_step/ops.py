@@ -1,8 +1,7 @@
 """Public wrapper: arbitrary latent shapes -> padded 2-D tiles -> kernel."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
+from repro.kernels._tiles import scalar_block, tile_2d
 from repro.kernels.ddim_step.ddim_step import (BLOCK_C, BLOCK_R, ddim_step_2d)
 
 
@@ -21,19 +20,7 @@ def fused_cfg_ddim_step(z, eps_u, eps_c, guidance, a_t, s_t, a_n, s_n,
     if interpret is None:
         from repro.kernels.dispatch import resolve_interpret
         interpret = resolve_interpret()
-    orig_shape, n = z.shape, z.size
-    C = BLOCK_C
-    rows = -(-n // C)
-    rows_p = -(-rows // BLOCK_R) * BLOCK_R
-    pad = rows_p * C - n
-
-    def to2d(x):
-        return jnp.pad(x.reshape(-1), (0, pad)).reshape(rows_p, C)
-
-    scal = jnp.zeros((1, 8), jnp.float32)
-    scal = scal.at[0, :6].set(
-        jnp.stack([jnp.asarray(v, jnp.float32) for v in
-                   (guidance, a_t, s_t, a_n, s_n, clip_x0)]))
-    out = ddim_step_2d(scal, to2d(z), to2d(eps_u), to2d(eps_c),
-                       interpret=interpret)
-    return out.reshape(-1)[:n].reshape(orig_shape)
+    tiles, untile = tile_2d(BLOCK_R, BLOCK_C, z, eps_u, eps_c)
+    # layout must match the kernel's scal_ref reads (see ddim_step.py)
+    scal = scalar_block((guidance, a_t, s_t, a_n, s_n, clip_x0), 8)
+    return untile(ddim_step_2d(scal, *tiles, interpret=interpret))

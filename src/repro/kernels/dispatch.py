@@ -16,9 +16,9 @@ sampling loop between backends:
   ``REPRO_KERNEL_INTERPRET=on|off`` overrides everything (useful to force
   interpret mode when debugging a miscompile on device).
 
-Fallbacks are explicit and conservative: sliding-window attention has no
-Pallas kernel yet, so ``impl="pallas"`` with ``window > 0`` drops to the
-chunked path rather than silently computing the wrong mask.
+Fallbacks are explicit and conservative: the only shapes the flash kernel
+does not cover — ``head_dim > 256`` and non-causal sliding windows — drop
+to the chunked path rather than silently computing the wrong mask.
 """
 from __future__ import annotations
 
@@ -66,8 +66,10 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """Backend-dispatched attention.  q (B,Sq,H,hd), k/v (B,Sk,Hkv,hd).
 
     ``pallas`` streams K/V blocks through the flash kernel (GQA folded
-    into the batch index map, padded keys masked via seq_k); ``chunked``
-    is its jnp twin; ``naive`` materialises the (Sq, Sk) scores.
+    into the batch index map, padded keys masked via seq_k; sliding
+    windows trim the K grid via the index map; head_dim <= 256 runs the
+    two-lane-tile D variant); ``chunked`` is its jnp twin; ``naive``
+    materialises the (Sq, Sk) scores.
     """
     from repro.models.layers import attend, attend_chunked, causal_mask
 
@@ -75,16 +77,27 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         raise ValueError(f"unknown attn impl {impl!r}; one of {ATTN_IMPLS}")
     if scale is None:
         scale = 1.0 / math.sqrt(q.shape[-1])
-    if impl == "pallas" and window == 0 and q.shape[-1] <= 128:
+    if (impl == "pallas" and q.shape[-1] <= 256
+            and (window == 0 or causal)):
         from repro.kernels.flash_attention.ops import flash_attention
-        return flash_attention(q, k, v, causal=causal, scale=scale,
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale,
                                interpret=resolve_interpret(interpret))
     if impl in ("chunked", "pallas"):
-        # pallas lands here only for unsupported shapes (window / wide hd)
+        # pallas lands here only for head_dim > 256 / non-causal window
         return attend_chunked(q, k, v, causal=causal, window=window,
                               scale=scale, block=block)
-    mask = (causal_mask(q.shape[1], k.shape[1], window=window)
-            if causal else None)
+    if causal:
+        mask = causal_mask(q.shape[1], k.shape[1], window=window)
+    elif window:
+        # look-back limit without causality — match the chunked twin's
+        # semantics instead of silently ignoring the window
+        import jax.numpy as jnp
+        qi = jnp.arange(q.shape[1])[:, None]
+        ki = jnp.arange(k.shape[1])[None, :]
+        mask = (ki > qi - window)[None, None, None]
+    else:
+        mask = None
     return attend(q, k, v, mask, scale)
 
 
@@ -104,6 +117,33 @@ def cfg_ddim_step(z: jax.Array, eps_u: jax.Array, eps_c: jax.Array, *,
     from repro.kernels.ddim_step.ref import fused_cfg_ddim_step_ref
     return fused_cfg_ddim_step_ref(z, eps_u, eps_c, guidance, a_t, s_t,
                                    a_n, s_n, clip_x0=clip_x0)
+
+
+def cfg_dpmpp_step(z: jax.Array, eps_u: jax.Array, eps_c: jax.Array,
+                   eps_prev: jax.Array, *, guidance, a_t, s_t, a_n, s_n,
+                   lam, lam_p, lam_n, is_first, clip_x0: float = 0.0,
+                   impl: str = "reference",
+                   interpret: InterpretLike = "auto"):
+    """CFG combine + DPM-Solver++(2M) update -> ``(z_next, eps_combined)``.
+
+    One fused HBM pass on the pallas path (read 4 tiles, write 2 — the
+    combined eps comes back for the solver's history carry); reference jnp
+    math otherwise.  Scalars come from ``samplers.dpmpp_scalars`` and may
+    be traced (per scan step); ``is_first`` flags the history-warmup step
+    (first step and the branch fork), where the extrapolation term is
+    exactly zero."""
+    if impl not in STEP_IMPLS:
+        raise ValueError(f"unknown step impl {impl!r}; one of {STEP_IMPLS}")
+    if impl == "fused":
+        from repro.kernels.dpmpp_step.ops import fused_cfg_dpmpp_step
+        return fused_cfg_dpmpp_step(z, eps_u, eps_c, eps_prev, guidance,
+                                    a_t, s_t, a_n, s_n, lam, lam_p, lam_n,
+                                    is_first, clip_x0=clip_x0,
+                                    interpret=resolve_interpret(interpret))
+    from repro.kernels.dpmpp_step.ref import fused_cfg_dpmpp_step_ref
+    return fused_cfg_dpmpp_step_ref(z, eps_u, eps_c, eps_prev, guidance,
+                                    a_t, s_t, a_n, s_n, lam, lam_p, lam_n,
+                                    is_first, clip_x0=clip_x0)
 
 
 def group_mean(x: jax.Array, mask: jax.Array, *, impl: str = "reference",

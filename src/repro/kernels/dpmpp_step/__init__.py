@@ -1,0 +1,1 @@
+from repro.kernels.dpmpp_step.ops import fused_cfg_dpmpp_step  # noqa: F401

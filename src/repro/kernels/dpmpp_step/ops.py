@@ -1,0 +1,35 @@
+"""Public wrapper: arbitrary latent shapes -> padded 2-D tiles -> kernel."""
+from __future__ import annotations
+
+from repro.kernels._tiles import scalar_block, tile_2d
+from repro.kernels.dpmpp_step.dpmpp_step import (BLOCK_C, BLOCK_R,
+                                                 SCAL_WIDTH, dpmpp_step_2d)
+
+
+def fused_cfg_dpmpp_step(z, eps_u, eps_c, eps_prev, guidance,
+                         a_t, s_t, a_n, s_n, lam, lam_p, lam_n,
+                         is_first, clip_x0: float = 0.0,
+                         interpret: bool | None = None):
+    """Fused CFG + DPM-Solver++(2M) update for latents of any shape (B, ...).
+
+    Returns ``(z_next, eps_combined)`` — the combined eps feeds the solver's
+    history carry, so the CFG combine never takes a separate HBM pass.  All
+    step scalars (guidance, the four schedule gathers, the three lambdas
+    from ``samplers.dpmpp_scalars``, clip_x0, the ``is_first`` warm-up flag)
+    may be python floats or traced jnp scalars — e.g. gathered per scan
+    step — and ride to the kernel in one (1, 16) block.  ``is_first`` may be
+    a traced bool; it is carried as a 0/1 float and zeroes the history
+    extrapolation term in-kernel (exactly the reference's ``eps_prev := eps``
+    aliasing).  ``interpret=None`` resolves via dispatch (env override, else
+    compiled only on TPU).
+    """
+    assert z.shape == eps_u.shape == eps_c.shape == eps_prev.shape
+    if interpret is None:
+        from repro.kernels.dispatch import resolve_interpret
+        interpret = resolve_interpret()
+    tiles, untile = tile_2d(BLOCK_R, BLOCK_C, z, eps_u, eps_c, eps_prev)
+    # layout must match the kernel's scal_ref reads (see dpmpp_step.py)
+    scal = scalar_block((guidance, a_t, s_t, a_n, s_n, clip_x0,
+                         lam, lam_p, lam_n, is_first), SCAL_WIDTH)
+    zn, eps = dpmpp_step_2d(scal, *tiles, interpret=interpret)
+    return untile(zn), untile(eps)

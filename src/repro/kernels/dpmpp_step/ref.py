@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused CFG+DPM-Solver++(2M) kernel.
+
+Mirrors ``guidance.cfg_combine`` + ``samplers.dpmpp_2m_step`` exactly, but
+from the per-step scalars the kernel receives (``samplers.dpmpp_scalars``)
+rather than the full schedule."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_cfg_dpmpp_step_ref(z, eps_u, eps_c, eps_prev, guidance,
+                             a_t, s_t, a_n, s_n, lam, lam_p, lam_n,
+                             is_first, clip_x0: float = 0.0):
+    """Returns (z_next, eps_combined); eps_combined is the history carry."""
+    zf = z.astype(jnp.float32)
+    eps = (eps_u.astype(jnp.float32)
+           + guidance * (eps_c.astype(jnp.float32)
+                         - eps_u.astype(jnp.float32)))
+    ep = jnp.where(jnp.asarray(is_first, jnp.bool_), eps,
+                   eps_prev.astype(jnp.float32))
+    h = lam_n - lam
+    hs = jnp.where(jnp.abs(h) > 1e-8, h, 1e-8)
+    r = (lam - lam_p) / hs
+
+    def pred_x0(e):
+        x0 = (zf - s_t * e) / jnp.maximum(a_t, 1e-6)
+        return jnp.clip(x0, -clip_x0, clip_x0) if clip_x0 else x0
+
+    x0 = pred_x0(eps)
+    x0p = pred_x0(ep)
+    d = x0 + (x0 - x0p) / (2.0 * jnp.maximum(r, 1e-8))
+    zn = (s_n / jnp.maximum(s_t, 1e-8)) * zf - a_n * jnp.expm1(-h) * d
+    return zn.astype(z.dtype), eps.astype(z.dtype)

@@ -9,8 +9,21 @@ denominator accumulators live in VMEM scratch across grid steps (TPU grids
 execute sequentially per core — the standard Pallas-TPU reduction idiom —
 rather than CUDA's one-CTA-per-tile + atomics).
 
-Shapes: q (B, H, S, D), kv (B, H, Skv, D); D <= 128 padded to lane width.
-VMEM: q/k/v/o blocks + (BQ, BK) scores ~ 128*128*4B * 5 ~ 0.4 MB.
+Sliding-window attention rides on the K *index map*, not a materialised
+mask: with window W only ``nkw = ceil-ish((W + BQ) / BK)`` K blocks can
+intersect a query block's visible span, so the grid's K dimension shrinks
+from ``Sk/BK`` to ``nkw`` and the index map pins the visited blocks to the
+causal frontier (``start(i) = clip(last_causal_block(i) - nkw + 1, 0,
+nk - nkw)`` — the upper clamp keeps cross-attention shapes with Sq > Sk
+in range).
+Blocks pulled in left of the window and right of the diagonal are killed by
+the in-kernel window/causal masks; block-granularity work drops from
+O(Sq Sk) to O(Sq W).
+
+Shapes: q (B, H, S, D), kv (B, H, Skv, D); D <= 256 padded to lane width —
+head_dim in (128, 256] runs as a two-lane-tile D block (scores contract
+over both 128-lane tiles, acc scratch widens to (BQ, 256)).
+VMEM: q/k/v/o blocks + (BQ, BK) scores ~ 128*256*4B * 5 ~ 0.7 MB.
 """
 from __future__ import annotations
 
@@ -26,12 +39,22 @@ BLOCK_K = 128
 NEG_INF = -1e30
 
 
+def _k_start(qi, *, block_q: int, block_k: int, nkw: int, nk: int):
+    """First K block visited for query block qi — the window of nkw visited
+    blocks ends at the last block a causal query row can see, clamped into
+    the valid block range (cross-attention may have Sq > Sk, where the
+    causal frontier runs past the last K block; with nkw == nk this
+    degenerates to 0).  Shared by the BlockSpec index map and the in-kernel
+    column reconstruction."""
+    last = (qi * block_q + block_q - 1) // block_k
+    return jnp.clip(last - (nkw - 1), 0, nk - nkw)
+
+
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, causal: bool, block_q: int, block_k: int,
-            seq_k: int):
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, seq_k: int, nkw: int, nk: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
-    nk = pl.num_programs(2)
 
     @pl.when(ki == 0)
     def _init():
@@ -45,12 +68,17 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
 
-    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # actual K block this grid step visits — mirrors the K/V index map
+    kb = _k_start(qi, block_q=block_q, block_k=block_k, nkw=nkw,
+                  nk=nk) + ki
+    cols = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     valid = cols < seq_k                     # mask zero-padded key rows
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
     if causal:
-        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
-                                                       s.shape, 0)
         valid &= cols <= rows
+    if window:
+        # kills blocks the index map pulls in left of the sliding window
+        valid &= cols > rows - window
     s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_scr[...]                                 # (BQ, 1)
@@ -63,7 +91,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         p.astype(v.dtype), v, preferred_element_type=jnp.float32)
     m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc
 
-    @pl.when(ki == nk - 1)
+    @pl.when(ki == nkw - 1)
     def _fin():
         o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
                     ).astype(o_ref.dtype)
@@ -71,32 +99,52 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "scale", "interpret", "seq_k",
-                                    "q_per_kv"))
+                                    "q_per_kv", "window"))
 def flash_attention_bhsd(q, k, v, *, causal: bool = True,
                          scale: float = 1.0, interpret: bool = True,
-                         seq_k: int = 0, q_per_kv: int = 1):
+                         seq_k: int = 0, q_per_kv: int = 1,
+                         window: int = 0):
     """q (BH, Sq, D), k/v (BH // q_per_kv, Sk, D) -> (BH, Sq, D).
-    Sq % BLOCK_Q == 0, Sk % BLOCK_K == 0, D <= 128 (pad lanes upstream).
-    seq_k = true (pre-padding) key length for masking; 0 -> Sk.
+    Sq % BLOCK_Q == 0, Sk % BLOCK_K == 0, D in {128, 256} (pad lanes
+    upstream).  seq_k = true (pre-padding) key length for masking; 0 -> Sk.
 
     GQA rides on the batch index map: query batch b reads K/V batch
     b // q_per_kv, so the group is never materialised in HBM — q must be
-    laid out head-major (..., Hkv, g) along its batch axis."""
+    laid out head-major (..., Hkv, g) along its batch axis.
+
+    window > 0 (causal only) trims the K grid dimension to the nkw blocks
+    that can intersect a query block's window and offsets the K/V index map
+    to the causal frontier — out-of-window work is never fetched, not just
+    masked.  window == 0 visits every K block (nkw == Sk/BK) and the index
+    map degenerates to the identity."""
     BH, Sq, D = q.shape
     Sk = k.shape[1]
     assert BH == k.shape[0] * q_per_kv, (BH, k.shape[0], q_per_kv)
-    grid = (BH, Sq // BLOCK_Q, Sk // BLOCK_K)
+    assert D in (128, 256), D
+    assert window == 0 or causal, "sliding window requires causal"
+    nk = Sk // BLOCK_K
+    if window:
+        # max K blocks a (BQ-row, W-wide) causal band can intersect
+        nkw = min(nk, (window + BLOCK_Q - 2) // BLOCK_K + 2)
+    else:
+        nkw = nk
+    grid = (BH, Sq // BLOCK_Q, nkw)
     kernel = functools.partial(_kernel, scale=scale, causal=causal,
-                               block_q=BLOCK_Q, block_k=BLOCK_K,
-                               seq_k=seq_k or Sk)
+                               window=window, block_q=BLOCK_Q,
+                               block_k=BLOCK_K, seq_k=seq_k or Sk, nkw=nkw,
+                               nk=nk)
     g = q_per_kv
+    start = functools.partial(_k_start, block_q=BLOCK_Q, block_k=BLOCK_K,
+                              nkw=nkw, nk=nk)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, BLOCK_Q, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b // g, j, 0)),
-            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b // g, j, 0)),
+            pl.BlockSpec((1, BLOCK_K, D),
+                         lambda b, i, j: (b // g, start(i) + j, 0)),
+            pl.BlockSpec((1, BLOCK_K, D),
+                         lambda b, i, j: (b // g, start(i) + j, 0)),
         ],
         out_specs=pl.BlockSpec((1, BLOCK_Q, D), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),

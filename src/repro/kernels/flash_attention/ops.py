@@ -9,7 +9,7 @@ from repro.kernels.flash_attention.flash_attention import (
     BLOCK_K, BLOCK_Q, flash_attention_bhsd)
 
 
-def flash_attention(q, k, v, *, causal: bool = True,
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     scale: float | None = None,
                     interpret: bool | None = None):
     """q (B, Sq, H, D); k/v (B, Sk, Hkv, D), H % Hkv == 0 -> (B, Sq, H, D).
@@ -17,15 +17,23 @@ def flash_attention(q, k, v, *, causal: bool = True,
     The GQA group is folded into the *batch* axis head-major
     (B, Hkv, g) so the kernel's ``b // g`` index map shares each K/V
     block across its g query heads — no ``jnp.repeat`` materialisation.
+    ``window > 0`` (causal only) runs the sliding-window variant: the K/V
+    index map is offset to the causal frontier and the K grid dimension
+    shrinks to the blocks a query block's window can touch.  head_dim in
+    (128, 256] runs the two-lane-tile D variant (padded to 256 lanes);
+    D > 256 has no kernel — use attn_impl='chunked'.
     ``interpret=None`` resolves via :func:`repro.kernels.dispatch.
     resolve_interpret` (env override, else compiled only on TPU).
     """
     B, Sq, H, D = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
-    if D > 128:
+    if D > 256:
         raise ValueError(
-            f"flash_attention supports head_dim <= 128 (one lane tile), "
+            f"flash_attention supports head_dim <= 256 (two lane tiles), "
             f"got D={D}; split heads or use attn_impl='chunked'")
+    if window and not causal:
+        raise ValueError("sliding window requires causal attention; "
+                         "use attn_impl='chunked' for non-causal windows")
     if H % Hkv:
         raise ValueError(f"n_heads {H} not divisible by n_kv_heads {Hkv}")
     if interpret is None:
@@ -49,6 +57,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
     vp = to_bhsd(v, kv=True)
     # zero-padded key rows are masked inside the kernel via seq_k
     out = flash_attention_bhsd(qp, kp, vp, causal=causal, scale=scale,
-                               interpret=interpret, seq_k=Sk, q_per_kv=g)
+                               interpret=interpret, seq_k=Sk, q_per_kv=g,
+                               window=window)
     out = out[:, :Sq, :D].reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
     return out

@@ -20,8 +20,8 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.kernels import dispatch
-from repro.models.layers import (apply_rope, attend, attend_chunked,
-                                 causal_mask, dense_init, dot, rms_norm)
+from repro.models.layers import (apply_rope, attend, causal_mask,
+                                 dense_init, dot, rms_norm)
 
 Params = Dict[str, Any]
 
@@ -113,13 +113,13 @@ def gqa_prefill(p: Params, cfg: ModelConfig, x: jax.Array, *,
     pos = jnp.arange(S)
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
-    if cfg.attn_impl == "chunked":
-        out = attend_chunked(q, k, v, causal=True, window=window,
+    # backend from cfg.attn_impl like gqa_full — "pallas" runs the flash
+    # kernel (incl. the sliding-window index-map variant) instead of the
+    # old hard-coded chunked/naive branch
+    out = dispatch.attention(q, k, v, impl=cfg.attn_impl, causal=True,
+                             window=window, block=cfg.attn_block,
                              scale=1.0 / math.sqrt(cfg.hd),
-                             block=cfg.attn_block)
-    else:
-        mask = causal_mask(S, S, window=window)
-        out = attend(q, k, v, mask, 1.0 / math.sqrt(cfg.hd))
+                             interpret=cfg.kernel_interpret)
     cache = gqa_cache_init(cfg, B, max_len, k.dtype)
     if window and max_len == window and S >= window:
         # ring layout: keep the last `window` rows at slot = abs_pos % window

@@ -94,7 +94,8 @@ def test_pallas_cross_attention_masks_padded_keys(lc):
                                rtol=1e-3, atol=1e-3)
 
 
-def test_pallas_window_falls_back_to_chunked():
+def test_pallas_window_matches_chunked_through_gqa_full():
+    # window now runs the flash kernel's index-map variant, not a fallback
     cfg, p, x = _attn_setup()
     ref = attn.gqa_full(p, replace(cfg, attn_impl="chunked"), x,
                         causal=True, window=8)
@@ -104,10 +105,103 @@ def test_pallas_window_falls_back_to_chunked():
                                rtol=1e-5, atol=1e-5)
 
 
-def test_flash_attention_rejects_wide_heads():
-    q = jnp.zeros((1, 128, 2, 256))
+@pytest.mark.parametrize("window,n_kv", [(64, 2), (130, 2), (300, 4)])
+def test_pallas_window_multiblock_matches_chunked(window, n_kv):
+    """S=512 spans 4 K blocks, so the window variant's K index-map offsets
+    (start > 0) and trimmed K grid are actually exercised."""
+    key = jax.random.PRNGKey(window)
+    S, H, D = 512, 4, 64
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, S, n_kv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, S, n_kv, D))
+    ref = dispatch.attention(q, k, v, impl="chunked", causal=True,
+                             window=window, block=64)
+    out = dispatch.attention(q, k, v, impl="pallas", causal=True,
+                             window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("D,window", [(256, 0), (200, 0), (256, 100)])
+def test_pallas_wide_heads_match_chunked(D, window):
+    """head_dim in (128, 256] runs the two-lane-tile D variant (and
+    composes with the sliding window) instead of the chunked fallback."""
+    key = jax.random.PRNGKey(D + window)
+    S, H = 256, 2
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (1, S, H, D))
+               for i in range(3))
+    ref = dispatch.attention(q, k, v, impl="chunked", causal=True,
+                             window=window, block=64)
+    out = dispatch.attention(q, k, v, impl="pallas", causal=True,
+                             window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_naive_noncausal_window_matches_chunked():
+    # naive must apply the look-back limit too, not silently ignore it
+    key = jax.random.PRNGKey(1)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (1, 32, 2, 16))
+               for i in range(3))
+    ref = dispatch.attention(q, k, v, impl="chunked", causal=False,
+                             window=8, block=16)
+    out = dispatch.attention(q, k, v, impl="naive", causal=False, window=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_noncausal_window_falls_back_to_chunked():
+    # the one remaining fallback shape: window without causal
+    cfg, p, x = _attn_setup()
+    ref = attn.gqa_full(p, replace(cfg, attn_impl="chunked"), x,
+                        causal=False, window=8)
+    out = attn.gqa_full(p, replace(cfg, attn_impl="pallas"), x,
+                        causal=False, window=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gqa_prefill_pallas_matches_naive():
+    # gqa_prefill now routes through dispatch instead of hard-coding
+    cfg, p, x = _attn_setup()
+    ref, cache_ref = attn.gqa_prefill(p, replace(cfg, attn_impl="naive"),
+                                      x, max_len=32, window=8)
+    out, cache = attn.gqa_prefill(p, replace(cfg, attn_impl="pallas"),
+                                  x, max_len=32, window=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache["k"]),
+                               np.asarray(cache_ref["k"]), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_pallas_window_and_wide_heads_do_not_route_to_chunked(monkeypatch):
+    """Acceptance: sliding-window and head_dim=256 must hit the kernel, not
+    the chunked fallback — poison attend_chunked and make sure the pallas
+    path never calls it (and that the remaining fallback shapes still do)."""
+    from repro.models import layers
+
+    def boom(*a, **k):
+        raise AssertionError("pallas path routed to attend_chunked")
+
+    monkeypatch.setattr(layers, "attend_chunked", boom)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 2, 64))
+    dispatch.attention(q, q, q, impl="pallas", causal=True, window=64)
+    qw = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 256))
+    dispatch.attention(qw, qw, qw, impl="pallas", causal=True)
+    with pytest.raises(AssertionError):  # head_dim > 256 still falls back
+        qx = jnp.zeros((1, 128, 2, 512))
+        dispatch.attention(qx, qx, qx, impl="pallas", causal=True)
+
+
+def test_flash_attention_rejects_unsupported_shapes():
+    q = jnp.zeros((1, 128, 2, 512))
     with pytest.raises(ValueError, match="head_dim"):
         flash_attention(q, q, q, causal=False)
+    q = jnp.zeros((1, 128, 2, 64))
+    with pytest.raises(ValueError, match="causal"):
+        flash_attention(q, q, q, causal=False, window=8)
 
 
 # ---------------------------------------------------------------------------

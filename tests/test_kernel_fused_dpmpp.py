@@ -1,0 +1,175 @@
+"""Fused CFG+DPM-Solver++(2M) kernel parity: the Pallas path must match the
+jnp cfg_combine + samplers.dpmpp_2m_step composition across guidance scales,
+through the history warmup (first two steps), and over full shared_sample
+trajectories (acceptance: atol 1e-5 fp32)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SageConfig, get_config, replace
+from repro.core import samplers
+from repro.core.guidance import cfg_combine
+from repro.core.schedule import ddim_timesteps, make_schedule
+from repro.core.shared_sampling import independent_sample, shared_sample
+from repro.kernels import dispatch
+from repro.kernels.dpmpp_step.ops import fused_cfg_dpmpp_step
+from repro.models import dit
+
+SCHED = make_schedule(1000)
+CFG = get_config("sage-dit", smoke=True)
+
+
+def _rand(key, shape, n=4, dtype=jnp.float32):
+    return tuple(jax.random.normal(jax.random.fold_in(key, i), shape, dtype)
+                 for i in range(n))
+
+
+def _ref_step(z, eu, ec, ep, t, t_next, t_prev, w, clip, is_first):
+    """The scan body's reference composition from shared_sampling."""
+    eps = cfg_combine(eu, ec, w)
+    ep = jnp.where(is_first, eps, ep)
+    zn = samplers.dpmpp_2m_step(SCHED, z, t, t_next, eps, ep, t_prev,
+                                clip_x0=clip)
+    return zn, eps
+
+
+# ---------------------------------------------------------------------------
+# single-step parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("guidance", [1.0, 3.0, 7.5, 12.5])
+@pytest.mark.parametrize("clip", [0.0, 3.0])
+def test_fused_matches_reference_across_guidance(guidance, clip):
+    key = jax.random.PRNGKey(hash((guidance, clip)) % 2**31)
+    z, eu, ec, ep = _rand(key, (2, 8, 8, 4))
+    t, t_next, t_prev = jnp.int32(700), jnp.int32(466), jnp.int32(933)
+    ref_z, ref_e = _ref_step(z, eu, ec, ep, t, t_next, t_prev, guidance,
+                             clip, False)
+    sc = samplers.dpmpp_scalars(SCHED, t, t_next, t_prev)
+    out_z, out_e = fused_cfg_dpmpp_step(z, eu, ec, ep, guidance, *sc,
+                                        False, clip_x0=clip)
+    np.testing.assert_allclose(np.asarray(out_z), np.asarray(ref_z),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(ref_e),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(3, 17, 5, 3), (1, 7, 9, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_odd_shapes_and_dtypes(shape, dtype):
+    key = jax.random.PRNGKey(hash(shape) % 2**31)
+    z, eu, ec, ep = _rand(key, shape, dtype=dtype)
+    t, t_next, t_prev = jnp.int32(500), jnp.int32(333), jnp.int32(666)
+    ref_z, ref_e = _ref_step(z, eu, ec, ep, t, t_next, t_prev, 5.0, 2.0,
+                             False)
+    sc = samplers.dpmpp_scalars(SCHED, t, t_next, t_prev)
+    out_z, out_e = fused_cfg_dpmpp_step(z, eu, ec, ep, 5.0, *sc, False,
+                                        clip_x0=2.0)
+    assert out_z.dtype == z.dtype and out_e.dtype == z.dtype
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out_z, np.float32),
+                               np.asarray(ref_z, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_history_warmup_first_two_steps():
+    """Step 1 (is_first: history term must vanish exactly, even with a
+    garbage eps_prev and t_prev == t) feeding step 2 (first real 2M
+    extrapolation off step 1's combined eps)."""
+    grid = jnp.asarray(ddim_timesteps(SCHED.T, 8))
+    key = jax.random.PRNGKey(42)
+    z, eu1, ec1, _ = _rand(key, (2, 8, 8, 4))
+    eu2, ec2, _, _ = _rand(jax.random.fold_in(key, 9), (2, 8, 8, 4))
+    w, clip = 7.5, 3.0
+
+    # --- step 1: i == 0, t_prev aliases t, eps_prev carry is zeros -------
+    t, t_next, t_prev = grid[0], grid[1], grid[0]
+    ref_z1, ref_e1 = _ref_step(z, eu1, ec1, jnp.zeros_like(z), t, t_next,
+                               t_prev, w, clip, True)
+    sc = samplers.dpmpp_scalars(SCHED, t, t_next, t_prev)
+    out_z1, out_e1 = fused_cfg_dpmpp_step(z, eu1, ec1, jnp.zeros_like(z),
+                                          w, *sc, True, clip_x0=clip)
+    np.testing.assert_allclose(np.asarray(out_z1), np.asarray(ref_z1),
+                               rtol=1e-5, atol=1e-5)
+    assert bool(jnp.all(jnp.isfinite(out_z1)))
+
+    # --- step 2: first real extrapolation against step 1's carry ---------
+    t, t_next, t_prev = grid[1], grid[2], grid[0]
+    ref_z2, _ = _ref_step(ref_z1, eu2, ec2, ref_e1, t, t_next, t_prev, w,
+                          clip, False)
+    sc = samplers.dpmpp_scalars(SCHED, t, t_next, t_prev)
+    out_z2, _ = fused_cfg_dpmpp_step(out_z1, eu2, ec2, out_e1, w, *sc,
+                                     False, clip_x0=clip)
+    np.testing.assert_allclose(np.asarray(out_z2), np.asarray(ref_z2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_dpmpp_reference_equals_fused():
+    key = jax.random.PRNGKey(3)
+    z, eu, ec, ep = _rand(key, (2, 6, 6, 4))
+    sc = samplers.dpmpp_scalars(SCHED, jnp.int32(500), jnp.int32(333),
+                                jnp.int32(666))
+    names = ("a_t", "s_t", "a_n", "s_n", "lam", "lam_p", "lam_n")
+    kw = dict(zip(names, sc), guidance=5.0, is_first=False, clip_x0=3.0)
+    ref_z, ref_e = dispatch.cfg_dpmpp_step(z, eu, ec, ep, impl="reference",
+                                           **kw)
+    out_z, out_e = dispatch.cfg_dpmpp_step(z, eu, ec, ep, impl="fused",
+                                           **kw)
+    np.testing.assert_allclose(np.asarray(out_z), np.asarray(ref_z),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(ref_e),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):
+        dispatch.cfg_dpmpp_step(z, eu, ec, ep, impl="magic", **kw)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: shared_sample / independent_sample fused vs reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shared_uncond", [False, True])
+def test_shared_sample_dpmpp_fused_matches_reference(shared_uncond):
+    key = jax.random.PRNGKey(0)
+    params = dit.init_params(CFG, key)
+    K, N = 2, 3
+    cond = jax.random.normal(jax.random.fold_in(key, 1),
+                             (K, N, CFG.cond_len, CFG.cond_dim))
+    mask = jnp.ones((K, N)).at[1, 2].set(0.0)
+    null = jnp.zeros((CFG.cond_len, CFG.cond_dim))
+    shape = (CFG.latent_size, CFG.latent_size, CFG.latent_channels)
+    sage = SageConfig(total_steps=6, share_ratio=0.33, guidance_scale=3.0,
+                      sampler="dpmpp", shared_uncond_cfg=shared_uncond)
+
+    def run(sg):
+        return shared_sample(
+            lambda z, t, c: dit.forward(params, CFG, z, t, c),
+            SCHED, sg, key, cond, mask, null, shape)
+
+    ref = run(sage)
+    out = run(replace(sage, step_impl="fused"))
+    assert int(ref["nfe"]) == int(out["nfe"])  # fusion must not change NFE
+    np.testing.assert_allclose(np.asarray(out["latents"]),
+                               np.asarray(ref["latents"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_independent_sample_dpmpp_fused_matches_reference():
+    key = jax.random.PRNGKey(5)
+    params = dit.init_params(CFG, key)
+    cond = jax.random.normal(jax.random.fold_in(key, 1),
+                             (2, CFG.cond_len, CFG.cond_dim))
+    null = jnp.zeros((CFG.cond_len, CFG.cond_dim))
+    shape = (CFG.latent_size, CFG.latent_size, CFG.latent_channels)
+    sage = SageConfig(total_steps=5, guidance_scale=7.5, sampler="dpmpp")
+
+    def run(sg):
+        return independent_sample(
+            lambda z, t, c: dit.forward(params, CFG, z, t, c),
+            SCHED, sg, key, cond, null, shape)
+
+    ref = run(sage)
+    out = run(replace(sage, step_impl="fused"))
+    np.testing.assert_allclose(np.asarray(out["latents"]),
+                               np.asarray(ref["latents"]),
+                               rtol=1e-5, atol=1e-5)
