@@ -19,11 +19,12 @@ def main() -> None:
 
     from benchmarks import (beyond_paper, cost_model, fig3_similarity,
                             fig4_shared_steps, kernel_bench, roofline_report,
-                            sampler_e2e, table1_quality)
+                            sampler_e2e, serving_bench, table1_quality)
     suites = {
         "cost_model": cost_model.main,
         "kernels": kernel_bench.main,
         "sampler": sampler_e2e.main,
+        "serving": serving_bench.main,
         "roofline": roofline_report.main,
         "table1": table1_quality.main,
         "fig3": fig3_similarity.main,

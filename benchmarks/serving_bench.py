@@ -1,0 +1,117 @@
+"""Serving-scheduler benchmark: synchronous engine vs continuous-batching
+streaming vs streaming + cross-batch trunk cache, on a repeated-theme
+arrival trace (the workload arXiv 2508.21032 identifies as the sweet spot
+for cross-query trunk reuse).
+
+The trace is `waves` waves of `wave_size` prompts drawn from a small theme
+pool, arriving one wave per tick gap.  The sync engine serves each wave as
+its own batch (it cannot share across time); the streaming scheduler runs
+the same arrivals through tick-sliced segments; the cached variant
+additionally skips shared phases whose group centroid hits the trunk
+cache.  Rows report us-per-request wall time plus NFE / NFE-saved /
+latency-percentile / occupancy derived stats — NFE is the
+backend-independent number (wall us off-TPU prices the interpret-mode
+call graph, see benchmarks/README.md).
+
+Rows: serving/{sync,stream,stream_cache}/<trace>.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.config import SageConfig, get_config
+from repro.data.synthetic import ShapesDataset
+from repro.models import dit
+from repro.models import text_encoder as te
+from repro.serving.engine import SageServingEngine
+from repro.serving.trunk_cache import TrunkCache
+
+THEMES = 3
+WAVE_SIZE = 4
+WAVES = 3
+STEPS = 6
+SLICE = 3
+
+
+def _trace(seed=0):
+    """WAVES waves of WAVE_SIZE prompts from a THEMES-sized pool."""
+    _, base = ShapesDataset(res=16).batch(0, THEMES)
+    rng = np.random.RandomState(seed)
+    return [[base[rng.randint(THEMES)] for _ in range(WAVE_SIZE)]
+            for _ in range(WAVES)]
+
+
+def _engine():
+    cfg = get_config("sage-dit", smoke=True)
+    sage = SageConfig(total_steps=STEPS, share_ratio=0.33,
+                      guidance_scale=3.0, tau_min=0.3)
+    tc = te.text_cfg(dim=cfg.cond_dim, layers=2)
+    return SageServingEngine(
+        cfg, sage, dit_params=dit.init_params(cfg, jax.random.PRNGKey(0)),
+        text_params=te.init_text(jax.random.PRNGKey(1), tc),
+        text_cfg=tc, group_size=4)
+
+
+def _run_sync(waves):
+    eng = _engine()
+    t0 = time.time()
+    done = []
+    for wave in waves:
+        eng.submit(wave)
+        done.extend(eng.step(max_batch=len(wave)))
+    us = (time.time() - t0) * 1e6
+    return us, len(done), dict(eng.stats), {}
+
+
+def _run_stream(waves, cache):
+    sched = _engine().streaming_scheduler(
+        slice_steps=SLICE, max_wait_ticks=1, trunk_cache=cache)
+    t0 = time.time()
+    done, now = [], 0.0
+    for wave in waves:
+        sched.submit(wave, now=now)
+        while sched.pending:              # wave gap > service time
+            now += 1.0
+            done.extend(sched.tick(now=now))
+    us = (time.time() - t0) * 1e6
+    return us, len(done), dict(sched.stats), sched.summary()
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    waves = _trace()
+    n_req = sum(len(w) for w in waves)
+    trace = f"themes{THEMES}x{WAVES}w{WAVE_SIZE}T{STEPS}"
+
+    us, n, stats, _ = _run_sync(waves)
+    nfe_sync = stats["nfe"]
+    rows.append((f"serving/sync/{trace}", us / n,
+                 f"nfe={stats['nfe']:.0f} "
+                 f"saving={1 - stats['nfe'] / stats['nfe_independent']:.3f}"))
+
+    us, n, stats, s = _run_stream(waves, cache=None)
+    rows.append((f"serving/stream/{trace}", us / n,
+                 f"nfe={stats['nfe']:.0f} "
+                 f"p50={s['latency_p50']:.1f} p95={s['latency_p95']:.1f} "
+                 f"occ={s['occupancy_mean']:.2f}"))
+
+    us, n, stats, s = _run_stream(waves, cache=TrunkCache(tau_trunk=0.9))
+    assert n == n_req and stats["nfe"] < nfe_sync, (
+        f"trunk-cache path must beat sync NFE: {stats['nfe']} vs {nfe_sync}")
+    rows.append((f"serving/stream_cache/{trace}", us / n,
+                 f"nfe={stats['nfe']:.0f} "
+                 f"nfe_saved={stats['nfe_saved_cache']:.0f} "
+                 f"vs_sync={1 - stats['nfe'] / nfe_sync:.3f} "
+                 f"hits={s['cache_hits']:.0f} "
+                 f"p50={s['latency_p50']:.1f} p95={s['latency_p95']:.1f}"))
+
+    for r in rows[-3:]:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

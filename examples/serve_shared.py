@@ -3,6 +3,15 @@ grouping + shared sampling + adaptive branch point + (optionally) the
 beyond-paper shared-uncond CFG.
 
     PYTHONPATH=src python examples/serve_shared.py --requests 24 --adaptive
+
+Streaming mode drives the continuous-batching scheduler instead of the
+synchronous engine: requests arrive over virtual time as a Poisson
+process, join open groups incrementally, advance in S-step segments per
+tick, and (with --trunk-cache) reuse completed shared phases across
+batches via the semantic trunk cache:
+
+    PYTHONPATH=src python examples/serve_shared.py --requests 24 \\
+        --streaming --arrival-rate 2.0 --trunk-cache --themes 4
 """
 import argparse
 import time
@@ -15,6 +24,88 @@ from repro.data.synthetic import ShapesDataset
 from repro.models import dit
 from repro.models import text_encoder as te
 from repro.serving.engine import SageServingEngine
+from repro.serving.trunk_cache import TrunkCache
+
+
+def build_engine(args):
+    cfg = get_config("sage-dit", smoke=True)
+    sage = SageConfig(total_steps=args.steps, share_ratio=0.3,
+                      guidance_scale=4.0, tau_min=0.3,
+                      adaptive_branch=args.adaptive,
+                      shared_uncond_cfg=args.shared_uncond,
+                      sampler=args.sampler)
+    tc = te.text_cfg(dim=cfg.cond_dim, layers=2)
+    return SageServingEngine(
+        cfg, sage,
+        dit_params=dit.init_params(cfg, jax.random.PRNGKey(0)),
+        text_params=te.init_text(jax.random.PRNGKey(1), tc),
+        text_cfg=tc, group_size=4,
+        attn_impl=args.backend,
+        step_impl="fused" if args.fused_step else None)
+
+
+def run_sync(engine, prompts):
+    engine.submit(prompts)
+    t0 = time.time()
+    done = []
+    while engine.queue:
+        done.extend(engine.step(max_batch=16))
+    dt = time.time() - t0
+
+    groups = {}
+    for c in done:
+        groups.setdefault(c.group_id, []).append(c.prompt)
+    print(f"served {len(done)} requests in {dt:.1f}s "
+          f"({len(groups)} groups)")
+    for gid, ps in sorted(groups.items())[:5]:
+        print(f"  group {gid}: {ps}")
+    print(f"NFE total          = {engine.stats['nfe']:.0f}")
+    print(f"NFE if independent = {engine.stats['nfe_independent']:.0f}")
+    print(f"cost saving        = {engine.cost_saving:.1%}")
+
+
+def run_streaming(engine, prompts, args):
+    """Poisson arrival simulation over virtual time (1 tick = 1 time unit;
+    the scheduler treats `now` as an opaque monotone clock)."""
+    rng = np.random.RandomState(args.seed)
+    gaps = rng.exponential(1.0 / max(args.arrival_rate, 1e-6), len(prompts))
+    arrival_t = np.cumsum(gaps)
+
+    cache = TrunkCache(tau_trunk=args.tau_trunk) if args.trunk_cache else None
+    sched = engine.streaming_scheduler(
+        slice_steps=args.slice_steps, max_wait_ticks=args.max_wait_ticks,
+        trunk_cache=cache)
+
+    t0 = time.time()
+    done, now, i = [], 0.0, 0
+    while i < len(prompts) or sched.pending:
+        now += 1.0
+        batch = []
+        while i < len(prompts) and arrival_t[i] <= now:
+            batch.append(prompts[i])
+            i += 1
+        if batch:
+            sched.submit(batch, now=now)
+        done.extend(sched.tick(now=now))
+    dt = time.time() - t0
+
+    s = sched.summary()
+    hits = sum(1 for c in done if c.cache_hit)
+    print(f"served {len(done)} requests in {dt:.1f}s wall "
+          f"({s['ticks']:.0f} ticks, arrival rate {args.arrival_rate}/tick)")
+    print(f"NFE total          = {s['nfe']:.0f}")
+    print(f"NFE if independent = {s['nfe_independent']:.0f}")
+    print(f"cost saving        = {s['cost_saving']:.1%}")
+    print(f"latency p50 / p95  = {s['latency_p50']:.1f} / "
+          f"{s['latency_p95']:.1f} ticks")
+    print(f"occupancy / queue  = {s['occupancy_mean']:.2f} / "
+          f"{s['queue_depth_mean']:.1f}")
+    if cache is not None:
+        print(f"trunk cache        = {hits} hit requests, "
+              f"{s['cache_hits']:.0f} group hits "
+              f"(rate {s['cache_hit_rate']:.0%}), "
+              f"NFE saved {s['nfe_saved_cache']:.0f}, "
+              f"{s['cache_entries']:.0f} entries / {s['cache_bytes']:.0f} B")
 
 
 def main():
@@ -30,45 +121,40 @@ def main():
                     help="fused Pallas CFG+solver update (DDIM and dpmpp)")
     ap.add_argument("--sampler", choices=["ddim", "dpmpp"], default="ddim",
                     help="ODE solver (both have fused Pallas kernels)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="continuous-batching scheduler + Poisson arrivals")
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="mean arrivals per tick (streaming mode)")
+    ap.add_argument("--slice-steps", type=int, default=4,
+                    help="sampler steps each in-flight group advances "
+                         "per tick")
+    ap.add_argument("--max-wait-ticks", type=int, default=2,
+                    help="ticks an underfull group waits before launching")
+    ap.add_argument("--trunk-cache", action="store_true",
+                    help="cross-batch semantic trunk cache")
+    ap.add_argument("--tau-trunk", type=float, default=0.95,
+                    help="cosine threshold for trunk-cache hits")
+    ap.add_argument("--themes", type=int, default=0,
+                    help="draw prompts from this many repeated themes "
+                         "(0 = all distinct) — repeated themes are what "
+                         "the trunk cache exploits")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config("sage-dit", smoke=True)
-    sage = SageConfig(total_steps=args.steps, share_ratio=0.3,
-                      guidance_scale=4.0, tau_min=0.3,
-                      adaptive_branch=args.adaptive,
-                      shared_uncond_cfg=args.shared_uncond,
-                      sampler=args.sampler)
-    tc = te.text_cfg(dim=cfg.cond_dim, layers=2)
-    engine = SageServingEngine(
-        cfg, sage,
-        dit_params=dit.init_params(cfg, jax.random.PRNGKey(0)),
-        text_params=te.init_text(jax.random.PRNGKey(1), tc),
-        text_cfg=tc, group_size=4,
-        attn_impl=args.backend,
-        step_impl="fused" if args.fused_step else None)
-
+    engine = build_engine(args)
     ds = ShapesDataset(res=16)
-    _, prompts = ds.batch(0, args.requests)
-    engine.submit(prompts)
+    if args.themes > 0:
+        _, base = ds.batch(0, args.themes)
+        rng = np.random.RandomState(args.seed + 1)
+        prompts = [base[rng.randint(args.themes)]
+                   for _ in range(args.requests)]
+    else:
+        _, prompts = ds.batch(0, args.requests)
 
-    t0 = time.time()
-    done = []
-    while engine.queue:
-        done.extend(engine.step(max_batch=16))
-    dt = time.time() - t0
-
-    groups = {}
-    for c in done:
-        groups.setdefault(c.group_id, []).append(c.prompt)
-    print(f"served {len(done)} requests in {dt:.1f}s "
-          f"({len(groups)} groups in last batch)")
-    for gid, ps in sorted(groups.items())[:5]:
-        print(f"  group {gid}: {ps}")
-    print(f"NFE total          = {engine.stats['nfe']:.0f}")
-    print(f"NFE if independent = {engine.stats['nfe_independent']:.0f}")
-    print(f"cost saving        = {engine.cost_saving:.1%}"
-          + ("  (adaptive T*)" if args.adaptive else "")
-          + ("  (+shared-uncond CFG)" if args.shared_uncond else ""))
+    if args.streaming:
+        run_streaming(engine, prompts, args)
+    else:
+        run_sync(engine, prompts)
 
 
 if __name__ == "__main__":

@@ -19,6 +19,12 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 
+# Default tau_max: edges live in the OPEN-BELOW interval (tau_min, tau_max]
+# (see ``edge_mask``); 1.01 > 1.0 keeps exact-duplicate prompts (cosine
+# == 1.0 up to float error) groupable under the default.
+DEFAULT_TAU_MAX = 1.01
+
+
 def similarity_matrix(embeds: np.ndarray) -> np.ndarray:
     """embeds (M, d), L2-normalised -> (M, M) cosine similarity."""
     e = np.asarray(embeds, np.float32)
@@ -26,17 +32,37 @@ def similarity_matrix(embeds: np.ndarray) -> np.ndarray:
     return e @ e.T
 
 
+def edge_mask(sim: np.ndarray, tau_min: float,
+              tau_max: float = DEFAULT_TAU_MAX) -> np.ndarray:
+    """THE tau interval convention, in one place: a pair is an edge iff its
+    cosine similarity falls in the half-open interval ``(tau_min, tau_max]``
+    — strictly above tau_min (tau_min itself is *not* similar enough),
+    up to and including tau_max.  Every grouping consumer
+    (``greedy_clique_groups``, ``incremental_assign``, the serving engine
+    and ``serving.shared_prefill``) goes through this helper rather than
+    re-encoding the comparison.
+    """
+    if not tau_min < tau_max:
+        raise ValueError(
+            f"tau interval empty: need tau_min < tau_max, got "
+            f"({tau_min}, {tau_max}]")
+    return (sim > tau_min) & (sim <= tau_max)
+
+
 def greedy_clique_groups(sim: np.ndarray, tau_min: float,
-                         tau_max: float = 1.01, group_max: int = 5
+                         tau_max: float = DEFAULT_TAU_MAX, group_max: int = 5
                          ) -> List[List[int]]:
     """Greedy clique cover of the threshold graph.
 
     Nodes are visited in decreasing degree order; each seed greedily absorbs
     the most-similar compatible candidates (compatible = edge to EVERY
-    current member, the paper's pairwise constraint).
+    current member, the paper's pairwise constraint).  Edges follow the
+    ``edge_mask`` (tau_min, tau_max] convention.
     """
+    if group_max < 1:
+        raise ValueError(f"group_max must be >= 1, got {group_max}")
     M = sim.shape[0]
-    adj = (sim > tau_min) & (sim <= tau_max)
+    adj = edge_mask(sim, tau_min, tau_max)
     np.fill_diagonal(adj, False)
     degree = adj.sum(1)
     unassigned = np.ones(M, bool)
@@ -60,17 +86,65 @@ def greedy_clique_groups(sim: np.ndarray, tau_min: float,
     return groups
 
 
-def pad_groups(groups: Sequence[Sequence[int]], group_size: int
-               ) -> Tuple[np.ndarray, np.ndarray]:
-    """Static-shape packing: (K, N) member indices + (K, N) validity mask.
+def incremental_assign(new_embed: np.ndarray,
+                       group_embeds: Sequence[np.ndarray], tau_min: float,
+                       tau_max: float = DEFAULT_TAU_MAX,
+                       group_max: int = 5) -> int:
+    """Continuous-batching admission: attach ONE arriving request to an
+    existing *open* group, or signal that it should seed a new group.
 
-    Groups larger than N are split; padding repeats the first member (its
-    compute is masked out of all reductions).
+    ``group_embeds[i]`` is the (n_i, d) stack of member embeddings of open
+    group i.  The request may join a group iff it has an edge — the
+    ``edge_mask`` (tau_min, tau_max] convention — to EVERY current member
+    (the same pairwise clique constraint ``greedy_clique_groups`` enforces,
+    so incrementally-built groups satisfy the identical invariant) and the
+    group is not full.  Among admissible groups the one with the highest
+    minimum similarity (tightest resulting clique) wins.
+
+    Returns the chosen group index, or -1 to seed a new group.
     """
+    if group_max < 1:
+        raise ValueError(f"group_max must be >= 1, got {group_max}")
+    e = np.asarray(new_embed, np.float32).reshape(-1)
+    e = e / max(float(np.linalg.norm(e)), 1e-8)
+    best, best_score = -1, -np.inf
+    for gi, members in enumerate(group_embeds):
+        m = np.asarray(members, np.float32)
+        if m.shape[0] >= group_max:
+            continue
+        m = m / np.maximum(np.linalg.norm(m, axis=-1, keepdims=True), 1e-8)
+        sims = m @ e
+        if not np.all(edge_mask(sims, tau_min, tau_max)):
+            continue
+        score = float(sims.min())
+        if score > best_score:
+            best, best_score = gi, score
+    return best
+
+
+def flatten_groups(groups: Sequence[Sequence[int]], group_size: int
+                   ) -> List[List[int]]:
+    """Split oversize groups into packed rows of at most ``group_size`` —
+    the row order of :func:`pad_groups`.  Exposed so completion unpacking
+    can map packed row k back to the right member indices (a clique larger
+    than N occupies *multiple* rows; iterating the unsplit groups
+    misaligns every row after the first split)."""
     flat: List[List[int]] = []
     for g in groups:
         for i in range(0, len(g), group_size):
             flat.append(list(g[i:i + group_size]))
+    return flat
+
+
+def pad_groups(groups: Sequence[Sequence[int]], group_size: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Static-shape packing: (K, N) member indices + (K, N) validity mask.
+
+    Groups larger than N are split (see :func:`flatten_groups`, which
+    defines the packed row order); padding repeats the first member (its
+    compute is masked out of all reductions).
+    """
+    flat = flatten_groups(groups, group_size)
     K = len(flat)
     idx = np.zeros((K, group_size), np.int32)
     mask = np.zeros((K, group_size), np.float32)

@@ -16,6 +16,16 @@ Timestep loops are ``lax.scan`` over the DDIM grid (static trip counts;
 branch point is a static Python int — adaptive T* selects among a small set
 of compiled variants, see ``serve.py``).
 
+Resumable segments (serving scheduler support): the two phases are exposed
+as ``shared_phase(carry, n_steps)`` / ``branch_phase(carry, n_steps)`` over
+an explicit :class:`SampleCarry` ``(z, eps_prev, step_idx)``, so a
+continuous-batching scheduler (``repro.serving.scheduler``) can advance an
+in-flight group a *slice* of S steps per engine tick and a trunk cache can
+checkpoint/restore the shared phase.  ``step_idx`` is a traced scalar —
+one jit compilation covers every slice position of the same length — and
+``shared_sample`` is a thin wrapper (segment sizes = whole phases), so the
+one-shot path and the sliced path run the identical per-step graph.
+
 Kernel routing: ``sage.step_impl == "fused"`` sends the per-step CFG+solver
 update — DDIM *and* DPM-Solver++(2M) — plus the shared-uncond group mean
 through the Pallas kernels via ``repro.kernels.dispatch``: one HBM pass
@@ -26,8 +36,7 @@ denoiser's attention backend is chosen separately by
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -111,13 +120,154 @@ def _step_update(sched: Schedule, sage: SageConfig, z, t, t_next,
     return z, eps
 
 
+class SampleCarry(NamedTuple):
+    """Resumable sampler state between segment calls.
+
+    ``z`` is (B, H, W, C) with B = K during the shared phase and B = K*N
+    after :func:`fork_carry`; ``eps_prev`` (same shape) is the
+    DPM-Solver++(2M) history (never read on the DDIM path); ``step_idx``
+    is the *global* position on the DDIM grid — a traced int32 scalar, so
+    segments of the same length share one compilation regardless of where
+    on the grid they start.
+    """
+    z: jnp.ndarray
+    eps_prev: jnp.ndarray
+    step_idx: jnp.ndarray
+
+
+def init_carry(key: jax.Array, K: int,
+               latent_shape: Tuple[int, int, int]) -> SampleCarry:
+    """Fresh trajectory start: shared init noise, empty history, step 0."""
+    H, W, C = latent_shape
+    z = jax.random.normal(key, (K, H, W, C), jnp.float32)
+    return SampleCarry(z, jnp.zeros_like(z), jnp.int32(0))
+
+
+def fork_carry(carry: SampleCarry, n_members: int) -> SampleCarry:
+    """Branch point: broadcast the K group latents to (K*N) member rows.
+
+    The solver history restarts at the fork (``branch_phase`` takes the
+    warm-up path at ``fork_idx``), so ``eps_prev`` is zeroed — which also
+    makes a trunk-cache restore exact: a cached ``(z_Ts, ...)`` forked by a
+    different group reproduces the same branch trajectories regardless of
+    the shared-phase history that produced it.
+    """
+    K, H, W, C = carry.z.shape
+    zb = jnp.broadcast_to(carry.z[:, None], (K, n_members, H, W, C)
+                          ).reshape(K * n_members, H, W, C)
+    return SampleCarry(zb, jnp.zeros_like(zb), carry.step_idx)
+
+
+def shared_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
+                 carry: SampleCarry, cbar: jnp.ndarray,
+                 null_cond: jnp.ndarray, n_steps: int) -> SampleCarry:
+    """Advance the group-trunk phase ``n_steps`` sampler steps.
+
+    carry.z (K, H, W, C); cbar (K, Lc, dc) group-mean text features.
+    ``n_steps`` is static (one jit bucket per segment length); the start
+    position rides in ``carry.step_idx``.  History warm-up fires at global
+    step 0 only, so resuming mid-phase is exact.
+    """
+    if n_steps <= 0:
+        return carry
+    carry = carry._replace(step_idx=jnp.asarray(carry.step_idx, jnp.int32))
+    K = carry.z.shape[0]
+    grid = jnp.asarray(ddim_timesteps(sched.T, sage.total_steps))
+
+    def body(c: SampleCarry, _):
+        z, eps_prev, i = c
+        t, t_next = grid[i], grid[i + 1]
+        tb = jnp.full((K,), t)
+        eps_u, eps_c = _eps_pair(eps_fn, z, tb, cbar, null_cond)
+        z, eps = _step_update(sched, sage, z, t, t_next, eps_u, eps_c,
+                              eps_prev, grid[jnp.maximum(i - 1, 0)], i == 0)
+        return SampleCarry(z, eps, i + 1), None
+
+    carry, _ = jax.lax.scan(body, carry, None, length=n_steps)
+    return carry
+
+
+def branch_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
+                 carry: SampleCarry, cond_flat: jnp.ndarray,
+                 mask: jnp.ndarray, null_cond: jnp.ndarray, n_steps: int,
+                 fork_idx: Union[int, jnp.ndarray]) -> SampleCarry:
+    """Advance the per-member phase ``n_steps`` steps after a fork.
+
+    carry.z (K*N, H, W, C) from :func:`fork_carry`; cond_flat
+    (K*N, Lc, dc) per-member text features; mask (K, N).  ``fork_idx`` is
+    the global step at which this trajectory forked — the solver history
+    warm-up fires exactly there (it may be traced: groups with different
+    branch points share one compilation per segment length).
+    """
+    if n_steps <= 0:
+        return carry
+    carry = carry._replace(step_idx=jnp.asarray(carry.step_idx, jnp.int32))
+    K, N = mask.shape
+    grid = jnp.asarray(ddim_timesteps(sched.T, sage.total_steps))
+    fork_idx = jnp.asarray(fork_idx, jnp.int32)
+
+    def body(c: SampleCarry, _):
+        z, eps_prev, i = c
+        t, t_next = grid[i], grid[i + 1]
+        if sage.shared_uncond_cfg:
+            # uncond eval once per group on the group-mean trajectory proxy:
+            # members share z only at the branch point, so per-member uncond
+            # is approximated by the group-mean latent's uncond — exact at
+            # i == fork_idx, approximate after.  Quality impact measured in
+            # benchmarks/fig4_shared_steps.py.  The group eval is PACKED
+            # into the same denoiser batch as the member-cond evals — one
+            # eps_fn call of K + K*N instead of two sequential calls.
+            gm_impl = "pallas" if _fused_step(sage) else "reference"
+            zg = dispatch.group_mean(z.reshape(K, N, *z.shape[1:]), mask,
+                                     impl=gm_impl,
+                                     interpret=sage.kernel_interpret)
+            zz = jnp.concatenate([zg, z], 0)            # (K + K*N, H, W, C)
+            tt = jnp.full((K + K * N,), t)
+            null_shape = (K,) + null_cond.shape
+            cc = jnp.concatenate(
+                [jnp.broadcast_to(null_cond, null_shape), cond_flat], 0)
+            eps = eps_fn(zz, tt, cc)
+            eps_u = jnp.broadcast_to(eps[:K][:, None],
+                                     (K, N) + z.shape[1:]
+                                     ).reshape(z.shape)
+            eps_c = eps[K:]
+        else:
+            tb = jnp.full((K * N,), t)
+            eps_u, eps_c = _eps_pair(eps_fn, z, tb, cond_flat, null_cond)
+        z, eps = _step_update(sched, sage, z, t, t_next, eps_u, eps_c,
+                              eps_prev, grid[jnp.maximum(i - 1, 0)],
+                              i == fork_idx)  # history restarts at the fork
+        return SampleCarry(z, eps, i + 1), None
+
+    carry, _ = jax.lax.scan(body, carry, None, length=n_steps)
+    return carry
+
+
+def shared_phase_nfe(K: int, n_steps: int) -> float:
+    """Denoiser evals for ``n_steps`` shared steps: the CFG pair per group."""
+    return 2.0 * K * n_steps
+
+
+def branch_phase_nfe(mask, n_steps: int, shared_uncond: bool):
+    """Denoiser evals for ``n_steps`` branch steps of a (K, N) packing:
+    2 per member, or member + one group-level uncond with the shared-uncond
+    CFG (mask (K, N) — padding rows are masked out of the count).  Stays
+    traceable (the engine jits :func:`shared_sample` whole)."""
+    K = mask.shape[0]
+    n_members = jnp.sum(mask)
+    per_step = (n_members + K) if shared_uncond else 2.0 * n_members
+    return per_step * n_steps
+
+
 def shared_sample(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
                   key: jax.Array, cond_tokens: jnp.ndarray,
                   mask: jnp.ndarray, null_cond: jnp.ndarray,
                   latent_shape: Tuple[int, int, int],
                   branch_point: Optional[int] = None
                   ) -> Dict[str, jnp.ndarray]:
-    """Run Alg. 1 for packed groups.
+    """Run Alg. 1 for packed groups — thin wrapper over the segment API
+    (one shared segment covering the whole trunk, one branch segment to
+    t=0; the serving scheduler calls the same phases in S-step slices).
 
     cond_tokens (K, N, Lc, dc); mask (K, N); null_cond (Lc, dc).
     Returns {"latents": (K, N, H, W, C), "nfe": scalar}.
@@ -126,71 +276,20 @@ def shared_sample(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
     T = sage.total_steps
     Ts = sage.branch_point if branch_point is None else branch_point
     n_shared = T - Ts
-    grid = jnp.asarray(ddim_timesteps(sched.T, T))          # (T+1,) desc
-    H, W, C = latent_shape
 
     cbar = group_mean(cond_tokens, mask)                    # (K, Lc, dc)
-    z = jax.random.normal(key, (K, H, W, C), jnp.float32)   # shared init noise
-
-    # ---- shared phase: t index 0 .. n_shared-1 -------------------------
-    def shared_step(carry, i):
-        z, eps_prev = carry
-        t, t_next = grid[i], grid[i + 1]
-        tb = jnp.full((K,), t)
-        eps_u, eps_c = _eps_pair(eps_fn, z, tb, cbar, null_cond)
-        z, eps = _step_update(sched, sage, z, t, t_next, eps_u, eps_c,
-                              eps_prev, grid[jnp.maximum(i - 1, 0)], i == 0)
-        return (z, eps), None
-
-    if n_shared > 0:
-        (z, _), _ = jax.lax.scan(shared_step, (z, jnp.zeros_like(z)),
-                                 jnp.arange(n_shared))
-
-    # ---- branch: broadcast to members ----------------------------------
-    zb = jnp.broadcast_to(z[:, None], (K, N, H, W, C)).reshape(K * N, H, W, C)
+    carry = init_carry(key, K, latent_shape)
+    carry = shared_phase(eps_fn, sched, sage, carry, cbar, null_cond,
+                         n_shared)
+    carry = fork_carry(carry, N)
     cm = cond_tokens.reshape(K * N, *cond_tokens.shape[2:])
+    carry = branch_phase(eps_fn, sched, sage, carry, cm, mask, null_cond,
+                         T - n_shared, fork_idx=n_shared)
 
-    def branch_step(carry, i):
-        z, eps_prev = carry
-        t, t_next = grid[i], grid[i + 1]
-        if sage.shared_uncond_cfg:
-            # uncond eval once per group on the group-mean trajectory proxy:
-            # members share z only at the branch point, so per-member uncond
-            # is approximated by the group-mean latent's uncond — exact at
-            # i == n_shared, approximate after.  Quality impact measured in
-            # benchmarks/fig4_shared_steps.py.  The group eval is PACKED
-            # into the same denoiser batch as the member-cond evals — one
-            # eps_fn call of K + K*N instead of two sequential calls.
-            gm_impl = "pallas" if _fused_step(sage) else "reference"
-            zg = dispatch.group_mean(z.reshape(K, N, H, W, C), mask,
-                                     impl=gm_impl,
-                                     interpret=sage.kernel_interpret)
-            zz = jnp.concatenate([zg, z], 0)            # (K + K*N, H, W, C)
-            tt = jnp.full((K + K * N,), t)
-            cc = jnp.concatenate(
-                [jnp.broadcast_to(null_cond, cbar.shape), cm], 0)
-            eps = eps_fn(zz, tt, cc)
-            eps_u = jnp.broadcast_to(eps[:K][:, None], (K, N, H, W, C)
-                                     ).reshape(K * N, H, W, C)
-            eps_c = eps[K:]
-        else:
-            tb = jnp.full((K * N,), t)
-            eps_u, eps_c = _eps_pair(eps_fn, z, tb, cm, null_cond)
-        z, eps = _step_update(sched, sage, z, t, t_next, eps_u, eps_c,
-                              eps_prev, grid[jnp.maximum(i - 1, 0)],
-                              i == n_shared)  # history restarts at the fork
-        return (z, eps), None
-
-    (zb, _), _ = jax.lax.scan(branch_step, (zb, jnp.zeros_like(zb)),
-                              jnp.arange(n_shared, T))
-
-    n_members = jnp.sum(mask)
-    if sage.shared_uncond_cfg:
-        branch_nfe = (n_members + K) * Ts
-    else:
-        branch_nfe = 2 * n_members * Ts
-    nfe = 2 * K * n_shared + branch_nfe
-    return {"latents": zb.reshape(K, N, H, W, C), "nfe": nfe}
+    nfe = (shared_phase_nfe(K, n_shared)
+           + branch_phase_nfe(mask, Ts, sage.shared_uncond_cfg))
+    H, W, C = latent_shape
+    return {"latents": carry.z.reshape(K, N, H, W, C), "nfe": nfe}
 
 
 def independent_sample(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,

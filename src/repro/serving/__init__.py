@@ -1,2 +1,4 @@
-from repro.serving.engine import SageServingEngine
+from repro.serving.engine import Completed, SageServingEngine
+from repro.serving.scheduler import RequestScheduler
 from repro.serving.shared_prefill import group_requests, shared_prefix_prefill
+from repro.serving.trunk_cache import TrunkCache, TrunkEntry

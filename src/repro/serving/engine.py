@@ -6,35 +6,34 @@ Request lifecycle:
   width N -> Alg. 1 shared sampling (jit per (K, N, T*) bucket) -> VAE
   decode -> responses + NFE accounting.
 
-Adaptive branch point (paper §2.2 option): T* is chosen from the group's
-min pairwise similarity and snapped to a small bucket set so each bucket
-compiles once.
+The sampling machinery lives in ``repro.serving.scheduler``: ``step()``
+delegates to :meth:`RequestScheduler.run_batch`, the synchronous special
+case of the continuous-batching tick loop (whole-phase segments, no
+arrivals, no trunk cache).  For arrival-driven serving with cross-batch
+trunk reuse, drive the scheduler directly — see
+:meth:`SageServingEngine.streaming_scheduler` and
+``examples/serve_shared.py --streaming``.
+
+Adaptive branch point (paper §2.2 option): T* is chosen from each group's
+own min pairwise similarity and snapped to a small bucket set so each
+bucket compiles once (one packed sampler call per bucket — a singleton
+group's pinned min-sim no longer drags other groups' buckets).
+
+Edge semantics for grouping (which cosine similarities count as "similar
+enough") are defined once in ``core.grouping.edge_mask`` — the
+(tau_min, tau_max] convention — not re-encoded here.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import List, Optional, Sequence
 
 from repro.config import ModelConfig, SageConfig
 from repro.config import replace as config_replace
-from repro.core import grouping
 from repro.core.schedule import Schedule, make_schedule
-from repro.core.shared_sampling import shared_sample
-from repro.models import dit, vae as vae_lib
-from repro.models import text_encoder as te
+from repro.serving.scheduler import Completed, RequestScheduler
+from repro.serving.trunk_cache import TrunkCache
 
-
-@dataclass
-class Completed:
-    prompt: str
-    image: np.ndarray
-    group_id: int
-    nfe_share: float
+__all__ = ["Completed", "SageServingEngine"]
 
 
 class SageServingEngine:
@@ -66,44 +65,17 @@ class SageServingEngine:
         self.vae_params = vae_params
         self.group_size = group_size
         self.branch_buckets = branch_buckets
-        self.key = jax.random.PRNGKey(seed)
+        self.seed = seed
         self.queue: List[str] = []
-        self.stats = {"nfe": 0.0, "nfe_independent": 0.0, "requests": 0}
-        self._sample_cache: Dict[Any, Callable] = {}
+        self.scheduler = RequestScheduler(
+            model_cfg, sage, dit_params, text_params, text_cfg,
+            vae_params=vae_params, sched=self.sched, group_size=group_size,
+            branch_buckets=branch_buckets, seed=seed)
 
     # ------------------------------------------------------------------
     def submit(self, prompts: Sequence[str]) -> None:
         self.queue.extend(prompts)
 
-    def _embed(self, prompts: Sequence[str]):
-        toks = te.tokenize(prompts, max_len=self.cfg.cond_len)
-        feats, pooled = te.encode_text(self.text_params, self.text_cfg, toks)
-        # project per-token features to the DiT cond width if needed
-        if feats.shape[-1] != self.cfg.cond_dim:
-            reps = -(-self.cfg.cond_dim // feats.shape[-1])
-            feats = jnp.tile(feats, (1, 1, reps))[..., :self.cfg.cond_dim]
-        return feats, np.asarray(pooled)
-
-    def _sampler(self, K: int, N: int, beta: float, shared_uncond: bool):
-        key = (K, N, round(beta, 2), shared_uncond)
-        if key not in self._sample_cache:
-            import dataclasses
-            sage = dataclasses.replace(self.sage, share_ratio=beta,
-                                       shared_uncond_cfg=shared_uncond)
-            H = self.cfg.latent_size
-            eps_fn = functools.partial(dit.forward, self.dit_params, self.cfg)
-
-            @jax.jit
-            def run(rng, cond, mask):
-                null = jnp.zeros((self.cfg.cond_len, self.cfg.cond_dim))
-                return shared_sample(
-                    lambda z, t, c: eps_fn(z, t, c), self.sched, sage, rng,
-                    cond, mask, null, (H, H, self.cfg.latent_channels))
-
-            self._sample_cache[key] = run
-        return self._sample_cache[key]
-
-    # ------------------------------------------------------------------
     def step(self, max_batch: int = 32, adaptive: Optional[bool] = None
              ) -> List[Completed]:
         """Serve one engine iteration over up to max_batch queued prompts."""
@@ -111,58 +83,27 @@ class SageServingEngine:
             return []
         prompts = self.queue[:max_batch]
         self.queue = self.queue[max_batch:]
-        cond, pooled = self._embed(prompts)
-        sim = grouping.similarity_matrix(pooled)
-        groups = grouping.greedy_clique_groups(
-            sim, self.sage.tau_min, group_max=self.group_size)
-        idx, mask = grouping.pad_groups(groups, self.group_size)
-        K, N = idx.shape
+        return self.scheduler.run_batch(prompts, adaptive=adaptive)
 
-        adaptive = self.sage.adaptive_branch if adaptive is None else adaptive
-        if adaptive:
-            mins = []
-            for g in groups:
-                if len(g) == 1:
-                    mins.append(1.0)
-                else:
-                    mins.append(min(sim[i, j] for i in g for j in g if i != j))
-            beta_raw = float(np.clip(np.mean(mins), 0.0, 1.0)) * 0.5
-            beta = min(self.branch_buckets, key=lambda b: abs(b - beta_raw))
-        else:
-            beta = self.sage.share_ratio
+    def streaming_scheduler(self, slice_steps: int = 4,
+                            max_wait_ticks: int = 2,
+                            trunk_cache: Optional[TrunkCache] = None,
+                            **kw) -> RequestScheduler:
+        """A fresh continuous-batching scheduler over this engine's model
+        (arrival-driven ticks + optional cross-batch trunk cache); the
+        engine's own synchronous scheduler and stats are untouched."""
+        kw.setdefault("seed", self.seed)
+        return RequestScheduler(
+            self.cfg, self.sage, self.dit_params, self.text_params,
+            self.text_cfg, vae_params=self.vae_params, sched=self.sched,
+            group_size=self.group_size, branch_buckets=self.branch_buckets,
+            slice_steps=slice_steps, max_wait_ticks=max_wait_ticks,
+            trunk_cache=trunk_cache, **kw)
 
-        cond_packed = jnp.asarray(cond)[idx.reshape(-1)].reshape(
-            K, N, *cond.shape[1:])
-        self.key, rng = jax.random.split(self.key)
-        run = self._sampler(K, N, beta, self.sage.shared_uncond_cfg)
-        out = run(rng, cond_packed, jnp.asarray(mask))
-
-        latents = out["latents"]
-        if self.vae_params is not None:
-            imgs = vae_lib.decode(self.vae_params,
-                                  latents.reshape(K * N,
-                                                  *latents.shape[2:]))
-            imgs = np.asarray(imgs).reshape(K, N, *imgs.shape[1:])
-        else:
-            imgs = np.asarray(latents)
-
-        nfe = float(out["nfe"])
-        indep = 2.0 * len(prompts) * self.sage.total_steps
-        self.stats["nfe"] += nfe
-        self.stats["nfe_independent"] += indep
-        self.stats["requests"] += len(prompts)
-
-        done: List[Completed] = []
-        for k, g in enumerate(groups[:K]):
-            for n, m in enumerate(g):
-                if n >= N:
-                    break
-                done.append(Completed(prompt=prompts[m], image=imgs[k, n],
-                                      group_id=k, nfe_share=nfe / len(prompts)))
-        return done
+    @property
+    def stats(self):
+        return self.scheduler.stats
 
     @property
     def cost_saving(self) -> float:
-        if not self.stats["nfe_independent"]:
-            return 0.0
-        return 1.0 - self.stats["nfe"] / self.stats["nfe_independent"]
+        return self.scheduler.cost_saving

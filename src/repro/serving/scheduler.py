@@ -1,0 +1,562 @@
+"""Continuous-batching request scheduler with cross-batch trunk reuse.
+
+``SageServingEngine.step()`` shares work only *within* one synchronous
+batch: drain the queue, group once, run every group to completion.  A
+production engine sees requests arrive *over time*, so this module runs
+the serving loop as repeated **ticks** over in-flight groups:
+
+* **admission** — arriving requests join an *open* group via
+  ``grouping.incremental_assign`` (edge to every member, the same clique
+  invariant as batch grouping) or seed a new one; groups launch when full,
+  when they have waited ``max_wait_ticks``, or under deadline pressure;
+* **advance** — every in-flight group moves ``slice_steps`` sampler steps
+  per tick through the resumable segment API
+  (``core.shared_sampling.shared_phase`` / ``branch_phase`` over an
+  explicit ``SampleCarry``), jit-bucketed by (phase, segment length,
+  shapes) — the start position is traced, so slices at different grid
+  offsets share one compilation;
+* **trunk reuse** — a completed shared phase is stored in a
+  :class:`~repro.serving.trunk_cache.TrunkCache`; a newly launched group
+  whose centroid hits the cache skips its shared phase entirely and forks
+  straight into branching (SAGE's within-batch sharing, extended across
+  batches — the diffusion analogue of ``shared_prefill``'s prefix cache);
+* **completion** — finished groups decode and emit
+  :class:`Completed` records carrying latency and NFE accounting;
+  ``summary()`` reports p50/p95 latency, NFE per request, batch occupancy
+  and queue depth.
+
+The synchronous engine is literally a special case: :meth:`run_batch`
+drains one prompt list through greedy-clique grouping and whole-phase
+segments (slice = phase length, no arrivals, no cache), which is what
+``SageServingEngine.step()`` now delegates to.
+
+Time is injectable: every ``submit``/``tick`` takes ``now`` (any
+monotonically non-decreasing float — wall seconds, or virtual tick counts
+for arrival-trace simulation as in ``examples/serve_shared.py
+--streaming``); it defaults to ``time.monotonic()``.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, SageConfig
+from repro.core import grouping
+from repro.core.schedule import Schedule, make_schedule
+from repro.core.shared_sampling import (SampleCarry, branch_phase,
+                                        branch_phase_nfe, fork_carry,
+                                        group_mean, init_carry, shared_phase,
+                                        shared_phase_nfe)
+from repro.models import dit, vae as vae_lib
+from repro.models import text_encoder as te
+from repro.serving.trunk_cache import TrunkCache, TrunkEntry
+
+
+@dataclass
+class Completed:
+    prompt: str
+    image: np.ndarray
+    group_id: int
+    nfe_share: float
+    latency: float = 0.0          # completion time - arrival time
+    cache_hit: bool = False       # trunk came from the cross-batch cache
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: str
+    t_arrival: float
+    deadline: Optional[float]
+    cond: np.ndarray              # (Lc, dc) projected text features
+    pooled: np.ndarray            # (d,) pooled embedding (similarity space)
+
+
+@dataclass
+class _Group:
+    """One in-flight (or open) group — always a (K=1, N) packing."""
+    gid: int
+    members: List[Request]
+    created_tick: int
+    state: str = "open"           # open | shared | branch | done
+    beta: float = 0.0             # share-ratio bucket
+    n_shared: int = 0
+    steps_done: int = 0
+    carry: Optional[SampleCarry] = None
+    cbar: Any = None              # (1, Lc, dc)
+    cond_flat: Any = None         # (N, Lc, dc)
+    mask: Any = None              # (1, N)
+    centroid: Optional[np.ndarray] = None
+    cache_hit: bool = False
+    nfe: float = 0.0
+    t_launch: float = 0.0
+
+    def earliest_deadline(self) -> float:
+        ds = [r.deadline for r in self.members if r.deadline is not None]
+        return min(ds) if ds else float("inf")
+
+
+class RequestScheduler:
+    """Continuous-batching scheduler over the resumable sampling segments.
+
+    Owns the full request path the synchronous engine used to inline:
+    text-tower embedding, grouping (incremental for streaming, greedy
+    cliques for :meth:`run_batch`), per-(phase, length) jitted segment
+    runners, the trunk cache, VAE decode and the latency/NFE statistics.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, sage: SageConfig,
+                 dit_params, text_params, text_cfg, vae_params=None,
+                 sched: Optional[Schedule] = None, group_size: int = 4,
+                 group_max: Optional[int] = None,
+                 branch_buckets: Sequence[float] = (0.2, 0.3, 0.4),
+                 slice_steps: int = 4, max_wait_ticks: int = 2,
+                 deadline_slack: float = 0.0,
+                 trunk_cache: Optional[TrunkCache] = None,
+                 max_groups_per_tick: Optional[int] = None,
+                 seed: int = 0):
+        """``group_size`` is the packed width N (static sampler shape);
+        ``group_max`` caps clique size during batch grouping and defaults
+        to N — set it larger to let ``pad_groups`` split big cliques over
+        multiple packed rows."""
+        if group_size < 1:
+            raise ValueError(f"group_size must be >= 1, got {group_size}")
+        if slice_steps < 1:
+            raise ValueError(f"slice_steps must be >= 1, got {slice_steps}")
+        self.cfg = model_cfg
+        self.sage = sage
+        self.sched = sched or make_schedule(1000)
+        self.dit_params = dit_params
+        self.text_params = text_params
+        self.text_cfg = text_cfg
+        self.vae_params = vae_params
+        self.group_size = group_size
+        self.group_max = group_size if group_max is None else group_max
+        self.branch_buckets = tuple(branch_buckets)
+        self.slice_steps = slice_steps
+        self.max_wait_ticks = max_wait_ticks
+        self.deadline_slack = deadline_slack
+        self.trunk_cache = trunk_cache
+        self.max_groups_per_tick = max_groups_per_tick
+        self.key = jax.random.PRNGKey(seed)
+
+        self.arrivals: List[Request] = []      # embedded, awaiting admission
+        self.open_groups: List[_Group] = []
+        self.inflight: List[_Group] = []
+        self.ticks = 0
+        self._next_rid = 0
+        self._next_gid = 0
+        self._runners: Dict[Tuple, Any] = {}
+
+        self.stats: Dict[str, float] = {
+            "nfe": 0.0, "nfe_independent": 0.0, "requests": 0,
+            "completed": 0, "nfe_saved_cache": 0.0}
+        # bounded windows: a long-lived server must not grow stat state
+        # without bound; summary() percentiles are over the trailing window
+        stat_window = 65_536
+        self.latencies: "deque[float]" = deque(maxlen=stat_window)
+        self.occupancy: "deque[float]" = deque(maxlen=stat_window)
+        #                                      members/group_size at launch
+        self.queue_depth: "deque[int]" = deque(maxlen=stat_window)
+        #                                      waiting requests per tick
+
+    # -- embedding ------------------------------------------------------
+    def _embed(self, prompts: Sequence[str]):
+        toks = te.tokenize(prompts, max_len=self.cfg.cond_len)
+        feats, pooled = te.encode_text(self.text_params, self.text_cfg, toks)
+        # project per-token features to the DiT cond width if needed
+        if feats.shape[-1] != self.cfg.cond_dim:
+            reps = -(-self.cfg.cond_dim // feats.shape[-1])
+            feats = jnp.tile(feats, (1, 1, reps))[..., :self.cfg.cond_dim]
+        return np.asarray(feats), np.asarray(pooled)
+
+    @property
+    def _latent_shape(self) -> Tuple[int, int, int]:
+        H = self.cfg.latent_size
+        return (H, H, self.cfg.latent_channels)
+
+    def _null_cond(self):
+        return jnp.zeros((self.cfg.cond_len, self.cfg.cond_dim))
+
+    def _cfg_key(self):
+        """Everything (besides the centroid/beta/shape) that must match for
+        a cached trunk to be reusable.  Params are not hashed: the cache
+        lives inside one scheduler, whose params are fixed."""
+        s, c = self.sage, self.cfg
+        return (c.name, c.attn_impl, s.sampler, s.step_impl, s.total_steps,
+                round(s.guidance_scale, 6), round(s.clip_x0, 6),
+                s.shared_uncond_cfg, self.sched.T)
+
+    # -- jit-bucketed segment runners -----------------------------------
+    def _eps_fn(self):
+        params, cfg = self.dit_params, self.cfg
+        return lambda z, t, c: dit.forward(params, cfg, z, t, c)
+
+    def _shared_runner(self, n_steps: int):
+        key = ("shared", n_steps)
+        if key not in self._runners:
+            eps_fn, sched, sage = self._eps_fn(), self.sched, self.sage
+
+            @jax.jit
+            def run(carry, cbar, null):
+                return shared_phase(eps_fn, sched, sage, carry, cbar, null,
+                                    n_steps)
+            self._runners[key] = run
+        return self._runners[key]
+
+    def _branch_runner(self, n_steps: int):
+        key = ("branch", n_steps)
+        if key not in self._runners:
+            eps_fn, sched, sage = self._eps_fn(), self.sched, self.sage
+
+            @jax.jit
+            def run(carry, cond_flat, mask, null, fork_idx):
+                return branch_phase(eps_fn, sched, sage, carry, cond_flat,
+                                    mask, null, n_steps, fork_idx)
+            self._runners[key] = run
+        return self._runners[key]
+
+    # -- submission & admission -----------------------------------------
+    @staticmethod
+    def _now(now: Optional[float]) -> float:
+        return time.monotonic() if now is None else float(now)
+
+    def submit(self, prompts: Sequence[str], now: Optional[float] = None,
+               deadline: Optional[float] = None) -> List[int]:
+        """Queue prompts (one text-tower call per submit batch); they are
+        grouped at the next tick.  Returns request ids."""
+        if not prompts:
+            return []
+        now = self._now(now)
+        conds, pooled = self._embed(prompts)
+        rids = []
+        for p, c, e in zip(prompts, conds, pooled):
+            r = Request(self._next_rid, p, now, deadline, c, e)
+            self._next_rid += 1
+            self.arrivals.append(r)
+            rids.append(r.rid)
+        self.stats["requests"] += len(prompts)
+        return rids
+
+    def _admit(self) -> None:
+        if not self.arrivals:
+            return
+        # member-embedding stacks maintained incrementally: only the group
+        # an arrival joins changes, so a burst of A arrivals over G open
+        # groups costs O(A + G) stacks, not O(A * G)
+        open_embeds = [np.stack([m.pooled for m in g.members])
+                       for g in self.open_groups]
+        for r in self.arrivals:
+            gi = grouping.incremental_assign(
+                r.pooled, open_embeds, self.sage.tau_min,
+                group_max=self.group_size)
+            if gi >= 0:
+                self.open_groups[gi].members.append(r)
+                open_embeds[gi] = np.concatenate(
+                    [open_embeds[gi], r.pooled[None]], 0)
+            else:
+                self.open_groups.append(
+                    _Group(self._next_gid, [r], created_tick=self.ticks))
+                self._next_gid += 1
+                open_embeds.append(np.asarray(r.pooled)[None])
+        self.arrivals = []
+
+    # -- launch ----------------------------------------------------------
+    @staticmethod
+    def _min_sim(sim_sub: np.ndarray) -> float:
+        """Group tightness = min pairwise similarity of a square sim
+        submatrix; singletons pin to 1.0 (they share with nobody, so the
+        bucket choice only affects their own — cost-neutral — split)."""
+        if sim_sub.shape[0] == 1:
+            return 1.0
+        iu = np.triu_indices(sim_sub.shape[0], k=1)
+        return float(sim_sub[iu].min())
+
+    def _beta_bucket(self, min_sim: float, adaptive: bool) -> float:
+        """THE share-ratio bucket rule (used by both the streaming launch
+        path and ``run_batch`` — one copy, so the trunk-cache
+        ``beta_bucket`` key can never diverge between them): tighter
+        groups share more, min_sim in [0, 1] -> beta_raw in [0, 0.5],
+        snapped to the nearest branch bucket."""
+        if not adaptive:
+            return self.sage.share_ratio
+        beta_raw = float(np.clip(min_sim, 0.0, 1.0)) * 0.5
+        return min(self.branch_buckets, key=lambda b: abs(b - beta_raw))
+
+    def _group_beta(self, members: List[Request], adaptive: bool) -> float:
+        """Per-group share-ratio bucket (singletons only drag *their own*
+        bucket — the old batch-mean bug is gone)."""
+        e = np.stack([m.pooled for m in members])
+        return self._beta_bucket(
+            self._min_sim(grouping.similarity_matrix(e)), adaptive)
+
+    def _launch(self, g: _Group, now: float, adaptive: bool) -> None:
+        T = self.sage.total_steps
+        g.beta = self._group_beta(g.members, adaptive)
+        Ts = int(round(T * (1.0 - g.beta)))
+        g.n_shared = T - Ts
+        N = len(g.members)
+        cond = jnp.asarray(np.stack([m.cond for m in g.members]))
+        g.cond_flat = cond                              # (N, Lc, dc)
+        g.mask = jnp.ones((1, N))
+        g.cbar = group_mean(cond[None], g.mask)         # (1, Lc, dc)
+        g.centroid = np.mean(np.stack([m.pooled for m in g.members]), 0)
+        g.t_launch = now
+        self.occupancy.append(N / self.group_size)
+        self.stats["nfe_independent"] += 2.0 * N * T
+
+        entry = None
+        if self.trunk_cache is not None and g.n_shared > 0:
+            entry = self.trunk_cache.lookup(
+                g.centroid, g.beta, self._cfg_key(), self._latent_shape)
+        if entry is not None:
+            # cross-batch trunk hit: skip the shared phase entirely, fork
+            # straight into branching from the cached branch-point latent.
+            trunk = SampleCarry(jnp.asarray(entry.z),
+                                jnp.zeros_like(jnp.asarray(entry.z)),
+                                jnp.int32(entry.step_idx))
+            g.carry = fork_carry(trunk, N)
+            g.steps_done = g.n_shared
+            g.state = "branch"
+            g.cache_hit = True
+            self.stats["nfe_saved_cache"] += shared_phase_nfe(1, g.n_shared)
+        else:
+            self.key, rng = jax.random.split(self.key)
+            rng = jax.random.fold_in(rng, g.gid)
+            g.carry = init_carry(rng, 1, self._latent_shape)
+            if g.n_shared == 0:
+                g.carry = fork_carry(g.carry, N)
+                g.state = "branch"
+            else:
+                g.state = "shared"
+        self.open_groups.remove(g)
+        self.inflight.append(g)
+
+    # -- advance ---------------------------------------------------------
+    def _store_trunk(self, g: _Group) -> None:
+        if self.trunk_cache is None:
+            return
+        self.trunk_cache.insert(TrunkEntry(
+            z=g.carry.z, eps_prev=g.carry.eps_prev, step_idx=g.n_shared,
+            beta_bucket=g.beta, rng_fold=g.gid, centroid=g.centroid,
+            cfg_key=self._cfg_key()), shape=self._latent_shape)
+
+    def _advance(self, g: _Group) -> None:
+        """One segment of at most ``slice_steps`` for one group."""
+        T = self.sage.total_steps
+        null = self._null_cond()
+        if g.state == "shared":
+            s = min(self.slice_steps, g.n_shared - g.steps_done)
+            g.carry = self._shared_runner(s)(g.carry, g.cbar, null)
+            g.steps_done += s
+            g.nfe += shared_phase_nfe(1, s)
+            if g.steps_done == g.n_shared:
+                self._store_trunk(g)
+                g.carry = fork_carry(g.carry, len(g.members))
+                g.state = "branch"
+        elif g.state == "branch":
+            s = min(self.slice_steps, T - g.steps_done)
+            g.carry = self._branch_runner(s)(
+                g.carry, g.cond_flat, g.mask, null, jnp.int32(g.n_shared))
+            g.steps_done += s
+            g.nfe += float(branch_phase_nfe(g.mask, s,
+                                            self.sage.shared_uncond_cfg))
+            if g.steps_done == T:
+                g.state = "done"
+
+    def _decode(self, latents: jnp.ndarray) -> np.ndarray:
+        """latents (B, H, W, C) -> images (or raw latents without a VAE)."""
+        if self.vae_params is not None:
+            return np.asarray(vae_lib.decode(self.vae_params, latents))
+        return np.asarray(latents)
+
+    def _complete(self, g: _Group, now: float) -> List[Completed]:
+        imgs = self._decode(g.carry.z)
+        self.stats["nfe"] += g.nfe
+        self.stats["completed"] += len(g.members)
+        done = []
+        for i, r in enumerate(g.members):
+            lat = now - r.t_arrival
+            self.latencies.append(lat)
+            done.append(Completed(
+                prompt=r.prompt, image=imgs[i], group_id=g.gid,
+                nfe_share=g.nfe / len(g.members), latency=lat,
+                cache_hit=g.cache_hit))
+        return done
+
+    # -- the tick --------------------------------------------------------
+    def tick(self, now: Optional[float] = None,
+             adaptive: Optional[bool] = None) -> List[Completed]:
+        """One engine iteration: admit arrivals, launch ready groups,
+        advance in-flight groups one segment each, emit completions."""
+        now = self._now(now)
+        adaptive = (self.sage.adaptive_branch if adaptive is None
+                    else adaptive)
+        self.ticks += 1
+        self._admit()
+        self.queue_depth.append(
+            sum(len(g.members) for g in self.open_groups))
+
+        for g in list(self.open_groups):
+            full = len(g.members) >= self.group_size
+            waited = self.ticks - g.created_tick >= self.max_wait_ticks
+            urgent = g.earliest_deadline() <= now + self.deadline_slack
+            if full or waited or urgent:
+                self._launch(g, now, adaptive)
+
+        # earliest deadline first, then launch order
+        todo = sorted(self.inflight, key=lambda g: (g.earliest_deadline(),
+                                                    g.gid))
+        if self.max_groups_per_tick is not None:
+            todo = todo[:self.max_groups_per_tick]
+        done: List[Completed] = []
+        for g in todo:
+            self._advance(g)
+            if g.state == "done":
+                done.extend(self._complete(g, now))
+                self.inflight.remove(g)
+        return done
+
+    def drain(self, now: Optional[float] = None,
+              max_ticks: int = 10_000) -> List[Completed]:
+        """Tick until no work remains.  ``now`` is passed to every tick:
+        provide it when driving a virtual clock (the clock then stands
+        still for the whole drain); omit it only under the wall-clock
+        default — mixing virtual-time submits with a wall-clock drain
+        would corrupt the latency stats."""
+        done: List[Completed] = []
+        for _ in range(max_ticks):
+            if not (self.arrivals or self.open_groups or self.inflight):
+                break
+            done.extend(self.tick(now))
+        return done
+
+    @property
+    def pending(self) -> int:
+        return (len(self.arrivals)
+                + sum(len(g.members) for g in self.open_groups)
+                + sum(len(g.members) for g in self.inflight))
+
+    # -- synchronous special case ----------------------------------------
+    def run_batch(self, prompts: Sequence[str],
+                  adaptive: Optional[bool] = None) -> List[Completed]:
+        """Drain one prompt list synchronously — the old engine semantics
+        as a special case of the segment machinery: greedy-clique grouping
+        over the whole batch, per-group beta buckets (one packed sampler
+        call per bucket), whole-phase segments, no arrivals, no trunk
+        cache.  ``SageServingEngine.step()`` delegates here."""
+        if not prompts:
+            return []
+        now = self._now(None)
+        adaptive = (self.sage.adaptive_branch if adaptive is None
+                    else adaptive)
+        T = self.sage.total_steps
+        conds, pooled = self._embed(prompts)
+        sim = grouping.similarity_matrix(pooled)
+        groups = grouping.greedy_clique_groups(
+            sim, self.sage.tau_min, group_max=self.group_max)
+        self.stats["requests"] += len(prompts)
+        self.stats["nfe_independent"] += 2.0 * len(prompts) * T
+
+        # per-group beta bucket (satellite fix: a singleton's pinned 1.0
+        # min-sim no longer drags every other group's bucket), then one
+        # packed sampler call per bucket.
+        def beta_of(g: List[int]) -> float:
+            return self._beta_bucket(self._min_sim(sim[np.ix_(g, g)]),
+                                     adaptive)
+
+        buckets: Dict[float, List[List[int]]] = {}
+        for g in groups:
+            buckets.setdefault(beta_of(g), []).append(g)
+
+        self.key, rng = jax.random.split(self.key)
+        null = self._null_cond()
+        done: List[Completed] = []
+        for bi, (beta, bgroups) in enumerate(sorted(buckets.items())):
+            Ts = int(round(T * (1.0 - beta)))
+            n_shared = T - Ts
+            # flattened packing: a clique larger than N occupies multiple
+            # rows, so completions map from the *flat* rows, not the
+            # original groups (satellite fix)
+            flat = grouping.flatten_groups(bgroups, self.group_size)
+            idx, mask = grouping.pad_groups(bgroups, self.group_size)
+            K, N = idx.shape
+            cond_packed = jnp.asarray(conds)[idx.reshape(-1)].reshape(
+                K, N, *conds.shape[1:])
+            mask_j = jnp.asarray(mask)
+
+            carry = init_carry(jax.random.fold_in(rng, bi), K,
+                               self._latent_shape)
+            cbar = group_mean(cond_packed, mask_j)
+            carry = self._shared_runner(n_shared)(carry, cbar, null) \
+                if n_shared > 0 else carry
+            carry = fork_carry(carry, N)
+            cm = cond_packed.reshape(K * N, *cond_packed.shape[2:])
+            carry = self._branch_runner(Ts)(
+                carry, cm, mask_j, null, jnp.int32(n_shared)) \
+                if Ts > 0 else carry
+
+            nfe = float(shared_phase_nfe(K, n_shared)
+                        + branch_phase_nfe(mask_j, Ts,
+                                           self.sage.shared_uncond_cfg))
+            self.stats["nfe"] += nfe
+            self.stats["completed"] += sum(len(r) for r in flat)
+            imgs = self._decode(carry.z).reshape(K, N, *self._decode_shape())
+            per_req = nfe / sum(len(r) for r in flat)
+            for k, row in enumerate(flat):
+                for n, m in enumerate(row):
+                    done.append(Completed(
+                        prompt=prompts[m], image=imgs[k, n],
+                        group_id=self._next_gid + k, nfe_share=per_req))
+            self._next_gid += K
+        return done
+
+    def _decode_shape(self) -> Tuple[int, ...]:
+        H, _, C = self._latent_shape
+        if self.vae_params is not None:
+            # VAE upsamples the latent grid; probe lazily and cache
+            if not hasattr(self, "_dec_shape"):
+                z = jnp.zeros((1,) + self._latent_shape)
+                self._dec_shape = tuple(
+                    np.asarray(vae_lib.decode(self.vae_params, z)).shape[1:])
+            return self._dec_shape
+        return self._latent_shape
+
+    # -- reporting -------------------------------------------------------
+    @property
+    def cost_saving(self) -> float:
+        if not self.stats["nfe_independent"]:
+            return 0.0
+        return 1.0 - self.stats["nfe"] / self.stats["nfe_independent"]
+
+    def summary(self) -> Dict[str, float]:
+        lat = np.asarray(self.latencies, np.float64)
+        out = {
+            "requests": self.stats["requests"],
+            "completed": self.stats["completed"],
+            "nfe": self.stats["nfe"],
+            "nfe_independent": self.stats["nfe_independent"],
+            "nfe_saved_cache": self.stats["nfe_saved_cache"],
+            "nfe_per_request": (self.stats["nfe"] / self.stats["completed"]
+                                if self.stats["completed"] else 0.0),
+            "cost_saving": self.cost_saving,
+            "latency_p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "latency_p95": float(np.percentile(lat, 95)) if lat.size else 0.0,
+            "occupancy_mean": (float(np.mean(self.occupancy))
+                               if self.occupancy else 0.0),
+            "queue_depth_mean": (float(np.mean(self.queue_depth))
+                                 if self.queue_depth else 0.0),
+            "ticks": self.ticks,
+        }
+        if self.trunk_cache is not None:
+            out["cache_hits"] = self.trunk_cache.stats["hits"]
+            out["cache_hit_rate"] = self.trunk_cache.hit_rate
+            out["cache_entries"] = len(self.trunk_cache)
+            out["cache_bytes"] = self.trunk_cache.bytes
+        return out

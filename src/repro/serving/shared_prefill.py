@@ -33,7 +33,11 @@ def common_prefix_len(token_rows: np.ndarray) -> int:
 
 def group_requests(embeds: np.ndarray, tau: float, group_max: int = 8
                    ) -> List[List[int]]:
-    """Semantic grouping of pending requests (paper §2.2, greedy cliques)."""
+    """Semantic grouping of pending requests (paper §2.2, greedy cliques).
+
+    Edge semantics — which similarities count as "similar enough" — are
+    defined once in ``core.grouping.edge_mask`` ((tau, tau_max] with the
+    duplicate-friendly ``DEFAULT_TAU_MAX``), not re-encoded here."""
     sim = grouping.similarity_matrix(embeds)
     return grouping.greedy_clique_groups(sim, tau, group_max=group_max)
 

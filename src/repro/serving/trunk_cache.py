@@ -1,0 +1,160 @@
+"""Cross-batch semantic trunk cache (the serving analogue of
+``shared_prefill``'s prefix cache, applied to diffusion trajectories).
+
+SAGE shares the early, semantically-coarse sampling phase *within* a
+group; this cache extends the sharing *across time*: when a group finishes
+its shared phase, the trunk state — the :class:`SampleCarry` at the branch
+point — is stored under the group's mean prompt embedding.  A later group
+whose centroid is close enough (cosine >= ``tau_trunk``) skips its shared
+phase entirely and forks straight into branching ("Reusing Computation in
+Text-to-Image Diffusion", arXiv 2508.21032, finds this cross-query reuse
+of early denoising the dominant lever for image-set workloads).
+
+Correctness note: branch trajectories forked from a cached trunk are
+*exact* for the cached centroid's conditioning and approximate for the new
+group's (the trunk was denoised under the cached group's c̄) — the same
+kind of approximation as the paper's within-group sharing, governed by the
+same similarity-threshold logic, so ``tau_trunk`` should sit well above
+``tau_min``.  Hits additionally require an exact match of everything else
+that shapes the trunk: sampler config, schedule bucket (beta) and latent
+shape are all part of the compatibility key.  (The RNG fold that drew the
+trunk's init noise is stored as provenance metadata only — reusing a
+trunk deliberately replaces the hitting group's own noise stream.)
+
+Keying is two-level, like a prefix cache with fuzzy tags:
+
+* a *quantized* centroid (rounded to ``quant_decimals``) gives an O(1)
+  exact-hit dict key for repeated themes;
+* a linear cosine scan over the (small, byte-budgeted) entry set catches
+  near-duplicates under ``tau_trunk``.
+
+Eviction is LRU under a byte budget, accounted with
+``kvcache.cache_bytes`` over the stored arrays.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Hashable, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.kvcache import cache_bytes
+
+
+@dataclass
+class TrunkEntry:
+    """One completed shared phase: the carry at the branch point."""
+    z: Any                       # (K=1, H, W, C) trunk latent at T*
+    eps_prev: Any                # solver history at T*, or None (the branch
+    #                              fork restarts history — see fork_carry —
+    #                              so TrunkCache(store_history=False) drops
+    #                              it to double capacity per byte)
+    step_idx: int                # grid position of z (== n_shared)
+    beta_bucket: float           # share-ratio bucket the trunk ran under
+    rng_fold: int                # fold of the engine key that drew the noise
+    centroid: np.ndarray         # unit-norm mean prompt embedding
+    cfg_key: Hashable            # sampler/schedule compatibility fingerprint
+    nbytes: int = 0
+
+    def __post_init__(self):
+        if not self.nbytes:
+            self.nbytes = cache_bytes((self.z, self.eps_prev))
+
+
+def _unit(v: np.ndarray) -> np.ndarray:
+    v = np.asarray(v, np.float32).reshape(-1)
+    return v / max(float(np.linalg.norm(v)), 1e-8)
+
+
+class TrunkCache:
+    """LRU map: quantized group centroid -> :class:`TrunkEntry`.
+
+    ``lookup`` is exact-key first (quantized centroid), cosine scan second;
+    both paths require ``cfg_key``/``beta_bucket``/latent-shape equality.
+    """
+
+    def __init__(self, tau_trunk: float = 0.95,
+                 max_bytes: int = 64 * 1024 * 1024,
+                 quant_decimals: int = 2, store_history: bool = True):
+        """``store_history=False`` drops the ``eps_prev`` array from stored
+        entries (halving bytes per trunk, doubling capacity under the
+        budget): the restore path *forks* — solver history restarts at the
+        branch point — so the history is only needed if trunks are later
+        resumed mid-shared-phase rather than forked."""
+        if not 0.0 < tau_trunk <= 1.0:
+            raise ValueError(f"tau_trunk must be in (0, 1], got {tau_trunk}")
+        self.tau_trunk = tau_trunk
+        self.max_bytes = max_bytes
+        self.quant_decimals = quant_decimals
+        self.store_history = store_history
+        self._entries: "OrderedDict[Tuple, TrunkEntry]" = OrderedDict()
+        self.bytes = 0
+        self.stats = {"hits": 0, "exact_hits": 0, "misses": 0,
+                      "inserts": 0, "evictions": 0}
+
+    # ------------------------------------------------------------------
+    def _quant_key(self, centroid: np.ndarray, beta_bucket: float,
+                   cfg_key: Hashable, shape: Tuple[int, ...]) -> Tuple:
+        q = np.round(_unit(centroid), self.quant_decimals)
+        # -0.0 and 0.0 quantize to different bytes; canonicalise
+        q = q + 0.0
+        return (q.tobytes(), round(beta_bucket, 4), cfg_key, shape)
+
+    def lookup(self, centroid: np.ndarray, beta_bucket: float,
+               cfg_key: Hashable, shape: Tuple[int, ...]
+               ) -> Optional[TrunkEntry]:
+        """Best compatible entry with cosine >= tau_trunk, else None."""
+        c = _unit(centroid)
+        key = self._quant_key(centroid, beta_bucket, cfg_key, shape)
+        hit = self._entries.get(key)
+        # quantization is coarser than tau_trunk can be (each component
+        # rounds by up to 0.5 * 10^-quant_decimals), so an exact-key hit
+        # must still clear the cosine threshold
+        if hit is not None and float(hit.centroid @ c) >= self.tau_trunk:
+            self._entries.move_to_end(key)
+            self.stats["hits"] += 1
+            self.stats["exact_hits"] += 1
+            return hit
+        best_key, best_sim = None, self.tau_trunk
+        for k, e in self._entries.items():
+            if (k[1], k[2], k[3]) != (round(beta_bucket, 4), cfg_key, shape):
+                continue
+            sim = float(e.centroid @ c)
+            if sim >= best_sim:
+                best_key, best_sim = k, sim
+        if best_key is None:
+            self.stats["misses"] += 1
+            return None
+        self._entries.move_to_end(best_key)
+        self.stats["hits"] += 1
+        return self._entries[best_key]
+
+    def insert(self, entry: TrunkEntry,
+               shape: Optional[Tuple[int, ...]] = None) -> None:
+        entry.centroid = _unit(entry.centroid)
+        shape = shape if shape is not None else tuple(np.shape(entry.z))
+        if not self.store_history and entry.eps_prev is not None:
+            entry.eps_prev = None
+            entry.nbytes = cache_bytes((entry.z,))
+        key = self._quant_key(entry.centroid, entry.beta_bucket,
+                              entry.cfg_key, shape)
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.bytes -= old.nbytes
+        self._entries[key] = entry
+        self.bytes += entry.nbytes
+        self.stats["inserts"] += 1
+        while self.bytes > self.max_bytes and len(self._entries) > 1:
+            _, evicted = self._entries.popitem(last=False)   # LRU end
+            self.bytes -= evicted.nbytes
+            self.stats["evictions"] += 1
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.stats["hits"] + self.stats["misses"]
+        return self.stats["hits"] / n if n else 0.0
