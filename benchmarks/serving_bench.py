@@ -13,7 +13,17 @@ latency-percentile / occupancy derived stats — NFE is the
 backend-independent number (wall us off-TPU prices the interpret-mode
 call graph, see benchmarks/README.md).
 
-Rows: serving/{sync,stream,stream_cache}/<trace>.
+The packed-vs-per-group pair runs a concurrent BURST trace instead (all
+themes in flight at once, >= 3 concurrent groups): identical results and
+NFE by construction (the packing parity bar), so the rows isolate the
+dispatch economics — denoiser launches/tick (the packed win) and
+us-per-tick wall time, plus pad_waste (the price of the static branch
+width).  Launch counts are backend-independent; off-TPU the us-per-tick
+gap underestimates the compiled gap, since interpret mode inflates
+per-call compute cost relative to launch overhead.
+
+Rows: serving/{sync,stream,stream_cache}/<trace>,
+      serving/{pergroup,packed}/<burst trace>.
 """
 from __future__ import annotations
 
@@ -34,6 +44,7 @@ WAVE_SIZE = 4
 WAVES = 3
 STEPS = 6
 SLICE = 3
+BURST = 12           # one burst of BURST prompts over THEMES themes
 
 
 def _trace(seed=0):
@@ -80,6 +91,40 @@ def _run_stream(waves, cache):
     return us, len(done), dict(sched.stats), sched.summary()
 
 
+def _run_burst(packed):
+    """All prompts arrive at t=0 (>= THEMES groups in flight together).
+    The SAME scheduler drives the burst twice — jit runner caches are
+    per-scheduler-instance, so only a same-instance warm pass lets the
+    timed pass price steady-state ticks rather than trace+compile; stats
+    are deltas over the timed pass."""
+    _, base = ShapesDataset(res=16).batch(0, THEMES)
+    rng = np.random.RandomState(7)
+    prompts = [base[rng.randint(THEMES)] for _ in range(BURST)]
+    sched = _engine().streaming_scheduler(
+        slice_steps=SLICE, max_wait_ticks=1, packed=packed)
+
+    def drive(now):
+        sched.submit(prompts, now=now)
+        done = []
+        while sched.pending:
+            now += 1.0
+            done.extend(sched.tick(now=now))
+        return done
+
+    drive(0.0)                            # warm pass
+    before, ticks0 = dict(sched.stats), sched.ticks
+    t0 = time.time()
+    done = drive(100.0)
+    us = (time.time() - t0) * 1e6
+    ticks = sched.ticks - ticks0
+    stats = {k: v - before.get(k, 0) for k, v in sched.stats.items()}
+    s = dict(sched.summary(), ticks=ticks,
+             launches_per_tick=stats["launches"] / ticks,
+             pad_waste=(stats["pack_pad_rows"] / stats["pack_rows"]
+                        if stats["pack_rows"] else 0.0))
+    return us, len(done), stats, s
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     waves = _trace()
@@ -108,7 +153,28 @@ def main(rows=None):
                  f"hits={s['cache_hits']:.0f} "
                  f"p50={s['latency_p50']:.1f} p95={s['latency_p95']:.1f}"))
 
-    for r in rows[-3:]:
+    # packed vs per-group dispatch economics on a concurrent burst
+    btrace = f"burst{BURST}x{THEMES}T{STEPS}"
+    us_g, n_g, stats_g, s_g = _run_burst(packed=False)
+    rows.append((f"serving/pergroup/{btrace}", us_g / s_g["ticks"],
+                 f"launches_per_tick={s_g['launches_per_tick']:.2f} "
+                 f"launches={stats_g['launches']:.0f} "
+                 f"nfe={stats_g['nfe']:.0f}"))
+    us_p, n_p, stats_p, s_p = _run_burst(packed=True)
+    assert n_p == n_g == BURST
+    assert stats_p["nfe"] == stats_g["nfe"], "packing must not change NFE"
+    assert s_p["launches_per_tick"] < s_g["launches_per_tick"], (
+        f"packed must reduce launches/tick: {s_p['launches_per_tick']} vs "
+        f"{s_g['launches_per_tick']}")
+    rows.append((f"serving/packed/{btrace}", us_p / s_p["ticks"],
+                 f"launches_per_tick={s_p['launches_per_tick']:.2f} "
+                 f"launches={stats_p['launches']:.0f} "
+                 f"pad_waste={s_p['pad_waste']:.3f} "
+                 f"vs_pergroup_launches="
+                 f"{stats_p['launches'] / stats_g['launches']:.2f}x "
+                 f"nfe={stats_p['nfe']:.0f}"))
+
+    for r in rows[-5:]:
         print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
     return rows
 

@@ -74,7 +74,7 @@ def run_streaming(engine, prompts, args):
     cache = TrunkCache(tau_trunk=args.tau_trunk) if args.trunk_cache else None
     sched = engine.streaming_scheduler(
         slice_steps=args.slice_steps, max_wait_ticks=args.max_wait_ticks,
-        trunk_cache=cache)
+        trunk_cache=cache, packed=not args.per_group)
 
     t0 = time.time()
     done, now, i = [], 0.0, 0
@@ -100,6 +100,9 @@ def run_streaming(engine, prompts, args):
           f"{s['latency_p95']:.1f} ticks")
     print(f"occupancy / queue  = {s['occupancy_mean']:.2f} / "
           f"{s['queue_depth_mean']:.1f}")
+    print(f"launches per tick  = {s['launches_per_tick']:.2f} "
+          f"({'per-group' if args.per_group else 'packed'}, "
+          f"pad waste {s['pad_waste']:.1%})")
     if cache is not None:
         print(f"trunk cache        = {hits} hit requests, "
               f"{s['cache_hits']:.0f} group hits "
@@ -130,6 +133,10 @@ def main():
                          "per tick")
     ap.add_argument("--max-wait-ticks", type=int, default=2,
                     help="ticks an underfull group waits before launching")
+    ap.add_argument("--per-group", action="store_true",
+                    help="disable packed tick execution (one denoiser "
+                         "launch per group per tick instead of one per "
+                         "pack bucket; streaming mode)")
     ap.add_argument("--trunk-cache", action="store_true",
                     help="cross-batch semantic trunk cache")
     ap.add_argument("--tau-trunk", type=float, default=0.95,

@@ -3,6 +3,12 @@ DPM-Solver++(2M) as a faster alternative.
 
 Both expose a per-step ``step(z, t_cur, t_next, eps)`` so the shared/branch
 driver (core.shared_sampling) controls conditioning and step sharing.
+
+``t``/``t_next`` may be scalars (every batch row at the same grid
+position — the original contract) or (B,) vectors (rows at different
+positions, the packed serving path): gathered schedule values broadcast
+along the batch axis via ``bcast_rows``, so the per-row update applies
+exactly the same arithmetic per element as the scalar one.
 """
 from __future__ import annotations
 
@@ -11,6 +17,7 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.core.schedule import Schedule
+from repro.kernels._tiles import bcast_rows
 
 
 def ddim_scalars(sched: Schedule, t: jnp.ndarray, t_next: jnp.ndarray):
@@ -57,6 +64,8 @@ def ddim_step(sched: Schedule, z: jnp.ndarray, t: jnp.ndarray,
     """
     a_t, s_t = sched.alpha(t), sched.sigma(t)
     a_n, s_n = sched.alpha(t_next), sched.sigma(t_next)
+    a_t, s_t, a_n, s_n = (bcast_rows(v, z.ndim) for v in (a_t, s_t,
+                                                          a_n, s_n))
     z0 = (z - s_t * eps) / jnp.maximum(a_t, 1e-6)
     if clip_x0:
         z0 = jnp.clip(z0, -clip_x0, clip_x0)
@@ -75,6 +84,8 @@ def dpmpp_2m_step(sched: Schedule, z: jnp.ndarray, t: jnp.ndarray,
     """
     a_t, s_t = sched.alpha(t), sched.sigma(t)
     a_n, s_n = sched.alpha(t_next), sched.sigma(t_next)
+    a_t, s_t, a_n, s_n = (bcast_rows(v, z.ndim) for v in (a_t, s_t,
+                                                          a_n, s_n))
     lam = jnp.log(jnp.maximum(a_t, 1e-6) / jnp.maximum(s_t, 1e-8))
     lam_n = jnp.log(jnp.maximum(a_n, 1e-6) / jnp.maximum(s_n, 1e-8))
     h = lam_n - lam
@@ -88,6 +99,7 @@ def dpmpp_2m_step(sched: Schedule, z: jnp.ndarray, t: jnp.ndarray,
         d = x0
     else:
         a_p, s_p = sched.alpha(t_prev), sched.sigma(t_prev)
+        a_p, s_p = bcast_rows(a_p, z.ndim), bcast_rows(s_p, z.ndim)
         lam_p = jnp.log(jnp.maximum(a_p, 1e-6) / jnp.maximum(s_p, 1e-8))
         # 2M: linear extrapolation of the data prediction in lambda space
         r = (lam - lam_p) / jnp.where(jnp.abs(h) > 1e-8, h, 1e-8)

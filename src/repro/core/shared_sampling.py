@@ -26,6 +26,15 @@ one jit compilation covers every slice position of the same length — and
 ``shared_sample`` is a thin wrapper (segment sizes = whole phases), so the
 one-shot path and the sliced path run the identical per-step graph.
 
+Stacked carries (packed serving support): ``step_idx`` may instead be a
+per-row (B,) vector — and ``branch_phase``'s ``fork_idx`` a matching
+per-row vector — so several groups sitting at *different* positions on
+the DDIM grid can ride ONE phase call as one super-batch
+(``repro.serving.packing`` builds/unpacks these).  Every schedule gather
+then returns per-row values which broadcast along the batch axis; the
+per-element arithmetic is unchanged, so packed rows reproduce the
+per-group results exactly.
+
 Kernel routing: ``sage.step_impl == "fused"`` sends the per-step CFG+solver
 update — DDIM *and* DPM-Solver++(2M) — plus the shared-uncond group mean
 through the Pallas kernels via ``repro.kernels.dispatch``: one HBM pass
@@ -47,6 +56,7 @@ from repro.core import samplers
 from repro.core.guidance import cfg_combine
 from repro.core.schedule import Schedule, ddim_timesteps
 from repro.kernels import dispatch
+from repro.kernels._tiles import bcast_rows
 
 # eps_fn(z, t, cond) -> eps ; z (B,H,W,C), t (B,), cond (B,Lc,dc)
 EpsFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
@@ -81,7 +91,7 @@ def _sampler_update(sched: Schedule, sage: SageConfig, z, t, t_next, eps,
     the whole thing stays scannable (first step falls back to 1st order
     by aliasing eps_prev = eps)."""
     if sage.sampler == "dpmpp":
-        ep = jnp.where(is_first, eps, eps_prev)
+        ep = jnp.where(bcast_rows(is_first, z.ndim), eps, eps_prev)
         return samplers.dpmpp_2m_step(sched, z, t, t_next, eps, ep, t_prev,
                                       clip_x0=sage.clip_x0)
     return samplers.ddim_step(sched, z, t, t_next, eps,
@@ -128,7 +138,9 @@ class SampleCarry(NamedTuple):
     DPM-Solver++(2M) history (never read on the DDIM path); ``step_idx``
     is the *global* position on the DDIM grid — a traced int32 scalar, so
     segments of the same length share one compilation regardless of where
-    on the grid they start.
+    on the grid they start.  In a packed super-batch (several groups
+    stacked into one carry) ``step_idx`` is instead a per-row (B,) int32
+    vector: each row advances from its own grid position.
     """
     z: jnp.ndarray
     eps_prev: jnp.ndarray
@@ -165,8 +177,10 @@ def shared_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
 
     carry.z (K, H, W, C); cbar (K, Lc, dc) group-mean text features.
     ``n_steps`` is static (one jit bucket per segment length); the start
-    position rides in ``carry.step_idx``.  History warm-up fires at global
-    step 0 only, so resuming mid-phase is exact.
+    position rides in ``carry.step_idx`` — a scalar, or a per-row (K,)
+    vector when the rows are a packed stack of groups at different grid
+    positions.  History warm-up fires at global step 0 only, so resuming
+    mid-phase is exact.
     """
     if n_steps <= 0:
         return carry
@@ -177,7 +191,7 @@ def shared_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
     def body(c: SampleCarry, _):
         z, eps_prev, i = c
         t, t_next = grid[i], grid[i + 1]
-        tb = jnp.full((K,), t)
+        tb = jnp.broadcast_to(t, (K,))
         eps_u, eps_c = _eps_pair(eps_fn, z, tb, cbar, null_cond)
         z, eps = _step_update(sched, sage, z, t, t_next, eps_u, eps_c,
                               eps_prev, grid[jnp.maximum(i - 1, 0)], i == 0)
@@ -197,7 +211,10 @@ def branch_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
     (K*N, Lc, dc) per-member text features; mask (K, N).  ``fork_idx`` is
     the global step at which this trajectory forked — the solver history
     warm-up fires exactly there (it may be traced: groups with different
-    branch points share one compilation per segment length).
+    branch points share one compilation per segment length).  For a
+    packed stack of groups, ``carry.step_idx`` and ``fork_idx`` are
+    per-row (K*N,) vectors — one super-batch can mix a group at its fork
+    (warming up) with groups mid-branch.
     """
     if n_steps <= 0:
         return carry
@@ -222,7 +239,12 @@ def branch_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
                                      impl=gm_impl,
                                      interpret=sage.kernel_interpret)
             zz = jnp.concatenate([zg, z], 0)            # (K + K*N, H, W, C)
-            tt = jnp.full((K + K * N,), t)
+            if jnp.ndim(t):
+                # per-row t: members of a group share a step, so the
+                # group-mean rows take their group's (first member's) t
+                tt = jnp.concatenate([t.reshape(K, N)[:, 0], t], 0)
+            else:
+                tt = jnp.full((K + K * N,), t)
             null_shape = (K,) + null_cond.shape
             cc = jnp.concatenate(
                 [jnp.broadcast_to(null_cond, null_shape), cond_flat], 0)
@@ -232,7 +254,7 @@ def branch_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
                                      ).reshape(z.shape)
             eps_c = eps[K:]
         else:
-            tb = jnp.full((K * N,), t)
+            tb = jnp.broadcast_to(t, (K * N,))
             eps_u, eps_c = _eps_pair(eps_fn, z, tb, cond_flat, null_cond)
         z, eps = _step_update(sched, sage, z, t, t_next, eps_u, eps_c,
                               eps_prev, grid[jnp.maximum(i - 1, 0)],

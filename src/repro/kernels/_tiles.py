@@ -1,7 +1,18 @@
 """Shared plumbing for the elementwise step kernels: flatten arbitrary
 latent shapes to padded (rows, BLOCK_C) tiles and pack per-step scalars
 into one small fp32 block.  Used by ddim_step/ops.py and dpmpp_step/ops.py
-so the tiling scheme can't drift between the two fused-step kernels."""
+so the tiling scheme can't drift between the two fused-step kernels.
+
+Two tiling regimes:
+
+* :func:`tile_2d` — the whole batch flattened into one (rows_p, block_c)
+  grid, for steps where every batch row shares ONE scalar set (the
+  original per-group execution model);
+* :func:`tile_rows` + :func:`scalar_rows` — each batch element tiled
+  separately to (B, rows_p, block_c) with a (B, width) scalar block, for
+  the packed serving path where rows belong to different groups at
+  different grid positions and therefore carry different step scalars.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -27,6 +38,74 @@ def tile_2d(block_r: int, block_c: int, *arrays):
         return x.reshape(-1)[:n].reshape(orig_shape)
 
     return [to2d(x) for x in arrays], untile
+
+
+def per_row_scalars(*scalars) -> bool:
+    """True if any step scalar carries a batch axis — the routing
+    predicate both fused-step ops use to choose the per-row tiling
+    regime over the broadcast one."""
+    return any(jnp.ndim(s) >= 1 for s in scalars)
+
+
+def bcast_rows(s, ndim: int):
+    """Align a per-row step scalar for broadcasting against a (B, ...)
+    latent of rank ``ndim``: a (B,) vector gains trailing singleton axes,
+    a plain scalar passes through untouched.  One home for the rule so the
+    reference step math and the sampler twins broadcast identically."""
+    s = jnp.asarray(s)
+    if s.ndim == 0:
+        return s
+    return s.reshape(s.shape + (1,) * (ndim - s.ndim))
+
+
+def row_block(n_per_row: int, block_c: int, block_r_max: int) -> int:
+    """Row-tile height for per-row tiling: enough BLOCK_C-lanes rows to
+    hold one batch element, rounded up to the fp32 sublane quantum (8),
+    capped at the kernel's max block height.  Keeping the block close to
+    the element size avoids the 2-D scheme's worst case (a tiny element
+    padded to a full 256-row tile *per batch row*)."""
+    rows = -(-n_per_row // block_c)
+    return min(block_r_max, -(-rows // 8) * 8)
+
+
+def tile_rows(block_r: int, block_c: int, *arrays):
+    """Flatten each (B, ...) array to a zero-padded (B, rows_p, block_c)
+    per-element tile grid (the per-row twin of :func:`tile_2d`).
+
+    All arrays must share a shape.  Returns ``(tiles, untile)`` where
+    ``untile`` maps a (B, rows_p, block_c) result back to the original
+    shape.
+    """
+    orig_shape = arrays[0].shape
+    B = orig_shape[0]
+    n = 1
+    for d in orig_shape[1:]:
+        n *= d
+    rows = -(-n // block_c)
+    rows_p = -(-rows // block_r) * block_r
+    pad = rows_p * block_c - n
+
+    def to3d(x):
+        assert x.shape == orig_shape, (x.shape, orig_shape)
+        return jnp.pad(x.reshape(B, -1), ((0, 0), (0, pad))
+                       ).reshape(B, rows_p, block_c)
+
+    def untile(x):
+        return x.reshape(B, -1)[:, :n].reshape(orig_shape)
+
+    return [to3d(x) for x in arrays], untile
+
+
+def scalar_rows(values, width: int, rows: int):
+    """Pack per-row step scalars into a (rows, width) fp32 block — one
+    scalar row per batch element (the per-row twin of
+    :func:`scalar_block`).  Each value may be a python float, a traced
+    scalar (broadcast to every row) or a (rows,) vector."""
+    assert len(values) <= width, (len(values), width)
+    cols = [jnp.broadcast_to(jnp.asarray(v, jnp.float32), (rows,))
+            for v in values]
+    block = jnp.zeros((rows, width), jnp.float32)
+    return block.at[:, :len(values)].set(jnp.stack(cols, axis=1))
 
 
 def scalar_block(values, width: int):

@@ -12,6 +12,16 @@ read 3 tiles, write 1.  Latents are flattened to (rows, lanes) tiles
 (lane dim a multiple of 128 for the VPU); the 5 step scalars ride in a
 (1, 8)-padded block mapped to every grid point.
 
+Two launch shapes share the same kernel body:
+
+* :func:`ddim_step_2d` — whole batch as one (rows, lanes) grid, ONE
+  scalar row broadcast to every tile (per-group execution: all rows sit
+  at the same grid position);
+* :func:`ddim_step_rows` — (B, rows, lanes) grid with a (B, 8) scalar
+  block indexed by the batch grid axis, so every row carries its OWN
+  (a_t, s_t, a_n, s_n) — the packed serving path, where one super-batch
+  mixes groups at different positions on the DDIM grid.
+
 VMEM budget: 4 tiles x block(256, 256) x 4B = 1 MB  << 16 MB/core.
 """
 from __future__ import annotations
@@ -49,6 +59,28 @@ def ddim_step_2d(scalars, z, eps_u, eps_c, interpret: bool = True):
     grid = (R // BLOCK_R, C // BLOCK_C)
     tile = pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j))
     scal = pl.BlockSpec((1, 8), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[scal, tile, tile, tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct(z.shape, z.dtype),
+        interpret=interpret,
+    )(scalars, z, eps_u, eps_c)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def ddim_step_rows(scalars, z, eps_u, eps_c, block_r: int,
+                   interpret: bool = True):
+    """Per-row-scalar variant: z/eps_u/eps_c (B, R, C) with
+    R % block_r == 0 and C % BLOCK_C == 0; scalars (B, 8) f32, one
+    [guidance, a_t, s_t, a_n, s_n, clip_x0, 0, 0] row per batch element.
+    Same kernel body as :func:`ddim_step_2d` — the batch grid axis selects
+    both the latent tile and its scalar row."""
+    B, R, C = z.shape
+    grid = (B, R // block_r, C // BLOCK_C)
+    tile = pl.BlockSpec((1, block_r, BLOCK_C), lambda b, i, j: (b, i, j))
+    scal = pl.BlockSpec((1, 8), lambda b, i, j: (b, 0))
     return pl.pallas_call(
         _kernel,
         grid=grid,

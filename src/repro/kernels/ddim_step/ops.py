@@ -1,8 +1,15 @@
-"""Public wrapper: arbitrary latent shapes -> padded 2-D tiles -> kernel."""
+"""Public wrapper: arbitrary latent shapes -> padded tiles -> kernel.
+
+Scalars with a batch axis ((B,) vectors, as produced by gathering the
+schedule at a per-row timestep) select the per-row kernel launch; plain
+scalars keep the original broadcast launch.  Both run the same kernel
+body, so the two paths cannot drift numerically."""
 from __future__ import annotations
 
-from repro.kernels._tiles import scalar_block, tile_2d
-from repro.kernels.ddim_step.ddim_step import (BLOCK_C, BLOCK_R, ddim_step_2d)
+from repro.kernels._tiles import (per_row_scalars, row_block, scalar_block,
+                                  scalar_rows, tile_2d, tile_rows)
+from repro.kernels.ddim_step.ddim_step import (BLOCK_C, BLOCK_R,
+                                               ddim_step_2d, ddim_step_rows)
 
 
 def fused_cfg_ddim_step(z, eps_u, eps_c, guidance, a_t, s_t, a_n, s_n,
@@ -12,15 +19,26 @@ def fused_cfg_ddim_step(z, eps_u, eps_c, guidance, a_t, s_t, a_n, s_n,
 
     The step scalars (guidance, a_t, s_t, a_n, s_n, clip_x0) may be python
     floats or traced jnp scalars — e.g. ``schedule.alpha(t)`` gathered per
-    scan step — and ride to the kernel in one (1, 8) block.  clip_x0 > 0
-    enables the sampler's x0-thresholding; ``interpret=None`` resolves via
-    dispatch (env override, else compiled only on TPU).
+    scan step — and ride to the kernel in one (1, 8) block.  Any of them
+    may instead be a (B,) vector (rows at different grid positions, the
+    packed serving path): the update then launches the per-row variant
+    with a (B, 8) scalar block.  clip_x0 > 0 enables the sampler's
+    x0-thresholding; ``interpret=None`` resolves via dispatch (env
+    override, else compiled only on TPU).
     """
     assert z.shape == eps_u.shape == eps_c.shape
     if interpret is None:
         from repro.kernels.dispatch import resolve_interpret
         interpret = resolve_interpret()
-    tiles, untile = tile_2d(BLOCK_R, BLOCK_C, z, eps_u, eps_c)
     # layout must match the kernel's scal_ref reads (see ddim_step.py)
-    scal = scalar_block((guidance, a_t, s_t, a_n, s_n, clip_x0), 8)
+    values = (guidance, a_t, s_t, a_n, s_n, clip_x0)
+    if per_row_scalars(*values):
+        n = z[0].size
+        br = row_block(n, BLOCK_C, BLOCK_R)
+        tiles, untile = tile_rows(br, BLOCK_C, z, eps_u, eps_c)
+        scal = scalar_rows(values, 8, z.shape[0])
+        return untile(ddim_step_rows(scal, *tiles, block_r=br,
+                                     interpret=interpret))
+    tiles, untile = tile_2d(BLOCK_R, BLOCK_C, z, eps_u, eps_c)
+    scal = scalar_block(values, 8)
     return untile(ddim_step_2d(scal, *tiles, interpret=interpret))

@@ -1,12 +1,19 @@
-"""Pure-jnp oracle for the fused CFG+DDIM kernel."""
+"""Pure-jnp oracle for the fused CFG+DDIM kernel.
+
+Step scalars may be plain scalars or (B,) per-row vectors (the packed
+serving path) — vectors broadcast along the batch axis via ``bcast_rows``.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels._tiles import bcast_rows
 
-def fused_cfg_ddim_step_ref(z, eps_u, eps_c, guidance: float,
-                            a_t: float, s_t: float, a_n: float, s_n: float,
-                            clip_x0: float = 0.0):
+
+def fused_cfg_ddim_step_ref(z, eps_u, eps_c, guidance,
+                            a_t, s_t, a_n, s_n, clip_x0: float = 0.0):
+    a_t, s_t, a_n, s_n = (bcast_rows(v, z.ndim) for v in (a_t, s_t,
+                                                          a_n, s_n))
     zf = z.astype(jnp.float32)
     eps = (eps_u + guidance * (eps_c - eps_u)).astype(jnp.float32)
     z0 = (zf - s_t * eps) / jnp.maximum(a_t, 1e-6)

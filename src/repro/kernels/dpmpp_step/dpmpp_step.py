@@ -24,6 +24,13 @@ a separate warm-up launch.  All per-step scalars — guidance, the four
 schedule gathers, clip, the three lambdas, the flag — ride in one (1, 16)
 block mapped to every grid point.
 
+Two launch shapes share the same kernel body (see ddim_step.py for the
+rationale): :func:`dpmpp_step_2d` broadcasts ONE scalar row to the whole
+batch; :func:`dpmpp_step_rows` indexes a (B, 16) scalar block by the
+batch grid axis so every row carries its own schedule gathers, lambdas
+AND warm-up flag — in a packed serving super-batch, one group can sit at
+its branch fork (history warm-up) while another is mid-phase.
+
 VMEM budget: 6 tiles x block(256, 256) x 4B = 1.5 MB  << 16 MB/core.
 """
 from __future__ import annotations
@@ -83,6 +90,27 @@ def dpmpp_step_2d(scalars, z, eps_u, eps_c, eps_prev, interpret: bool = True):
     grid = (R // BLOCK_R, C // BLOCK_C)
     tile = pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j))
     scal = pl.BlockSpec((1, SCAL_WIDTH), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[scal, tile, tile, tile, tile],
+        out_specs=(tile, tile),
+        out_shape=(jax.ShapeDtypeStruct(z.shape, z.dtype),
+                   jax.ShapeDtypeStruct(z.shape, z.dtype)),
+        interpret=interpret,
+    )(scalars, z, eps_u, eps_c, eps_prev)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def dpmpp_step_rows(scalars, z, eps_u, eps_c, eps_prev, block_r: int,
+                    interpret: bool = True):
+    """Per-row-scalar variant: tensors (B, R, C) with R % block_r == 0 and
+    C % BLOCK_C == 0; scalars (B, SCAL_WIDTH) f32, one row per batch
+    element (layout above).  Returns (z_next, eps_combined)."""
+    B, R, C = z.shape
+    grid = (B, R // block_r, C // BLOCK_C)
+    tile = pl.BlockSpec((1, block_r, BLOCK_C), lambda b, i, j: (b, i, j))
+    scal = pl.BlockSpec((1, SCAL_WIDTH), lambda b, i, j: (b, 0))
     return pl.pallas_call(
         _kernel,
         grid=grid,

@@ -2,16 +2,23 @@
 
 Mirrors ``guidance.cfg_combine`` + ``samplers.dpmpp_2m_step`` exactly, but
 from the per-step scalars the kernel receives (``samplers.dpmpp_scalars``)
-rather than the full schedule."""
+rather than the full schedule.  Step scalars (including ``is_first``) may
+be plain scalars or (B,) per-row vectors (the packed serving path) —
+vectors broadcast along the batch axis via ``bcast_rows``."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from repro.kernels._tiles import bcast_rows
 
 
 def fused_cfg_dpmpp_step_ref(z, eps_u, eps_c, eps_prev, guidance,
                              a_t, s_t, a_n, s_n, lam, lam_p, lam_n,
                              is_first, clip_x0: float = 0.0):
     """Returns (z_next, eps_combined); eps_combined is the history carry."""
+    a_t, s_t, a_n, s_n, lam, lam_p, lam_n, is_first = (
+        bcast_rows(v, z.ndim)
+        for v in (a_t, s_t, a_n, s_n, lam, lam_p, lam_n, is_first))
     zf = z.astype(jnp.float32)
     eps = (eps_u.astype(jnp.float32)
            + guidance * (eps_c.astype(jnp.float32)

@@ -1,4 +1,5 @@
 from repro.serving.engine import Completed, SageServingEngine
+from repro.serving.packing import PackKey, build_packs
 from repro.serving.scheduler import RequestScheduler
 from repro.serving.shared_prefill import group_requests, shared_prefix_prefill
 from repro.serving.trunk_cache import TrunkCache, TrunkEntry

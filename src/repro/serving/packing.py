@@ -1,0 +1,161 @@
+"""Packed multi-group tick execution — gather, advance, scatter.
+
+PR 3's tick loop advanced every in-flight group with its own ``(1, N)``
+denoiser call, so a tick over G concurrent groups paid G launches of a
+small batch each: under concurrent load the hot path is *launch*-bound,
+not FLOP-bound, and SAGE's shared-trunk savings drown in dispatch
+overhead (the serving gap surveyed in "Efficient Diffusion Models: A
+Survey"; the same cross-query batching lever as set-generation
+computation reuse, arXiv 2508.21032).
+
+This module inverts that execution model: groups no longer own their
+launches.  Each tick, in-flight groups are bucketed by a **pack
+signature** — everything that must agree for their rows to ride one
+phase call:
+
+* ``phase``   — ``shared`` rows advance under the group-mean conditioning,
+  ``branch`` rows under per-member conditioning (different call graphs);
+* ``sampler`` — constant per scheduler, kept in the key as documentation
+  (a multi-config front-end would shard on it);
+* ``beta``    — the share-ratio bucket (schedule bucket identity; also
+  constant-folds the remaining-step arithmetic below);
+* ``shape``   — the latent shape (constant per scheduler, as above);
+* ``n_steps`` — the segment length every row advances this tick,
+  ``min(slice_steps, steps remaining in the phase)``, so no group is
+  dragged past its phase boundary by a pack-mate.
+
+One bucket becomes ONE ``shared_phase``/``branch_phase`` call over a
+stacked :class:`~repro.core.shared_sampling.SampleCarry`: per-row
+``step_idx`` (and per-row ``fork_idx`` for branch) carry each group's
+grid position as traced values, so buckets with the same (phase,
+n_steps, row count) hit the same jit cache entry regardless of where on
+the grid their groups sit.  Branch rows are padded to the scheduler's
+static width N (mask 0, member-0 replicas — the ``pad_groups``
+convention), which buys a fixed launch shape at the price of **pad
+waste**; :func:`pad_stats` reports that tradeoff and the scheduler
+surfaces it in ``summary()``.
+
+Parity contract (enforced by ``tests/test_conformance.py``): packing is
+bitwise-invisible — packed rows reproduce the per-group segment results
+EXACTLY for ddim+dpmpp × reference+fused across slice boundaries.  The
+ingredients: the denoiser treats batch rows independently, masked group
+means ignore appended pad rows exactly, and the per-row step kernels
+(``kernels/*_step``) apply the same per-element arithmetic as the
+broadcast-scalar launches.
+
+Groups are duck-typed: anything with ``carry`` / ``cbar`` / ``cond_flat``
+/ ``members`` / ``steps_done`` / ``n_shared`` / ``beta`` / ``state``
+(see ``scheduler._Group``) packs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.shared_sampling import SampleCarry
+
+
+class PackKey(NamedTuple):
+    """Pack-compatibility signature (see module docstring for the rules)."""
+    phase: str                  # "shared" | "branch"
+    sampler: str
+    beta: float                 # share-ratio bucket, rounded
+    shape: Tuple[int, ...]      # latent (H, W, C)
+    n_steps: int                # segment length this tick
+
+
+def pack_signature(g, slice_steps: int, total_steps: int, sampler: str,
+                   shape: Tuple[int, ...]) -> PackKey:
+    """The signature under which group ``g`` may share a launch this tick."""
+    limit = g.n_shared if g.state == "shared" else total_steps
+    s = min(slice_steps, limit - g.steps_done)
+    return PackKey(g.state, sampler, round(g.beta, 4), tuple(shape), s)
+
+
+def build_packs(groups: Sequence, slice_steps: int, total_steps: int,
+                sampler: str, shape: Tuple[int, ...]
+                ) -> List[Tuple[PackKey, List]]:
+    """Bucket in-flight groups by pack signature (insertion-ordered, so
+    the earliest-deadline-first sort of the caller is preserved within
+    and across buckets)."""
+    packs: Dict[PackKey, List] = {}
+    for g in groups:
+        packs.setdefault(
+            pack_signature(g, slice_steps, total_steps, sampler, shape),
+            []).append(g)
+    return list(packs.items())
+
+
+def _pad_rows(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Pad the leading axis to ``width`` with member-0 replicas (masked
+    out of every reduction — same convention as ``grouping.pad_groups``)."""
+    n = x.shape[0]
+    if n == width:
+        return x
+    return jnp.concatenate(
+        [x, jnp.broadcast_to(x[:1], (width - n,) + x.shape[1:])], 0)
+
+
+# -- shared phase ------------------------------------------------------------
+
+def pack_shared(groups: Sequence) -> Tuple[SampleCarry, jnp.ndarray]:
+    """Stack G shared-phase groups (one trunk row each) into a (G, ...)
+    carry with per-row step_idx, plus the stacked (G, Lc, dc) c̄."""
+    z = jnp.concatenate([g.carry.z for g in groups], 0)
+    ep = jnp.concatenate([g.carry.eps_prev for g in groups], 0)
+    step = jnp.asarray([g.steps_done for g in groups], jnp.int32)
+    cbar = jnp.concatenate([g.cbar for g in groups], 0)
+    return SampleCarry(z, ep, step), cbar
+
+
+def unpack_shared(carry: SampleCarry, groups: Sequence) -> None:
+    """Scatter a packed shared-phase result back into per-group carries."""
+    for j, g in enumerate(groups):
+        g.carry = SampleCarry(carry.z[j:j + 1], carry.eps_prev[j:j + 1],
+                              carry.step_idx[j])
+
+
+# -- branch phase ------------------------------------------------------------
+
+def pack_branch(groups: Sequence, width: int
+                ) -> Tuple[SampleCarry, jnp.ndarray, jnp.ndarray,
+                           jnp.ndarray]:
+    """Stack G branch-phase groups into a (G*width, ...) carry.
+
+    Every group is padded to the static member width (pad rows replicate
+    member 0 and are masked); returns ``(carry, cond_flat, mask,
+    fork_idx)`` ready for one ``branch_phase`` call — ``step_idx`` and
+    ``fork_idx`` are per-row (G*width,) vectors.
+    """
+    z = jnp.concatenate([_pad_rows(g.carry.z, width) for g in groups], 0)
+    ep = jnp.concatenate([_pad_rows(g.carry.eps_prev, width)
+                          for g in groups], 0)
+    cond = jnp.concatenate([_pad_rows(g.cond_flat, width) for g in groups],
+                           0)
+    mask = np.zeros((len(groups), width), np.float32)
+    for j, g in enumerate(groups):
+        mask[j, :len(g.members)] = 1.0
+    step = jnp.asarray(np.repeat([g.steps_done for g in groups], width),
+                       jnp.int32)
+    fork = jnp.asarray(np.repeat([g.n_shared for g in groups], width),
+                       jnp.int32)
+    return (SampleCarry(z, ep, step), cond, jnp.asarray(mask), fork)
+
+
+def unpack_branch(carry: SampleCarry, groups: Sequence, width: int) -> None:
+    """Scatter a packed branch-phase result back into per-group carries,
+    dropping the pad rows."""
+    for j, g in enumerate(groups):
+        lo, n = j * width, len(g.members)
+        g.carry = SampleCarry(carry.z[lo:lo + n],
+                              carry.eps_prev[lo:lo + n],
+                              carry.step_idx[lo])
+
+
+def pad_stats(groups: Sequence, width: int) -> Tuple[int, int]:
+    """(rows launched, pad rows among them) for a branch pack — the
+    pad-waste numerator/denominator ``summary()`` aggregates."""
+    rows = len(groups) * width
+    return rows, rows - sum(len(g.members) for g in groups)

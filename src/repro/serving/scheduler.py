@@ -14,7 +14,15 @@ the serving loop as repeated **ticks** over in-flight groups:
   (``core.shared_sampling.shared_phase`` / ``branch_phase`` over an
   explicit ``SampleCarry``), jit-bucketed by (phase, segment length,
   shapes) — the start position is traced, so slices at different grid
-  offsets share one compilation;
+  offsets share one compilation.  By default ticks run **packed**
+  (``packed=True``): groups sharing a pack signature (phase, sampler,
+  beta bucket, shape, segment length — see ``serving.packing``) are
+  gathered into ONE padded super-batch and advanced by a single phase
+  call with per-row step/fork indices, collapsing G per-group launches
+  into one per bucket; ``packed=False`` keeps the per-group launches (the
+  conformance oracle).  Packing is bitwise-invisible to results; the cost
+  is pad waste on partially-filled branch rows, reported by
+  ``summary()['pad_waste']`` next to ``launches_per_tick``;
 * **trunk reuse** — a completed shared phase is stored in a
   :class:`~repro.serving.trunk_cache.TrunkCache`; a newly launched group
   whose centroid hits the cache skips its shared phase entirely and forks
@@ -55,6 +63,7 @@ from repro.core.shared_sampling import (SampleCarry, branch_phase,
                                         shared_phase_nfe)
 from repro.models import dit, vae as vae_lib
 from repro.models import text_encoder as te
+from repro.serving import packing
 from repro.serving.trunk_cache import TrunkCache, TrunkEntry
 
 
@@ -120,11 +129,15 @@ class RequestScheduler:
                  deadline_slack: float = 0.0,
                  trunk_cache: Optional[TrunkCache] = None,
                  max_groups_per_tick: Optional[int] = None,
+                 packed: bool = True,
                  seed: int = 0):
         """``group_size`` is the packed width N (static sampler shape);
         ``group_max`` caps clique size during batch grouping and defaults
         to N — set it larger to let ``pad_groups`` split big cliques over
-        multiple packed rows."""
+        multiple packed rows.  ``packed`` gathers pack-compatible
+        in-flight groups into one denoiser launch per tick (see
+        ``serving.packing``); ``packed=False`` advances each group with
+        its own launch — same results bitwise, G× the launches."""
         if group_size < 1:
             raise ValueError(f"group_size must be >= 1, got {group_size}")
         if slice_steps < 1:
@@ -144,6 +157,7 @@ class RequestScheduler:
         self.deadline_slack = deadline_slack
         self.trunk_cache = trunk_cache
         self.max_groups_per_tick = max_groups_per_tick
+        self.packed = packed
         self.key = jax.random.PRNGKey(seed)
 
         self.arrivals: List[Request] = []      # embedded, awaiting admission
@@ -156,7 +170,10 @@ class RequestScheduler:
 
         self.stats: Dict[str, float] = {
             "nfe": 0.0, "nfe_independent": 0.0, "requests": 0,
-            "completed": 0, "nfe_saved_cache": 0.0}
+            "completed": 0, "nfe_saved_cache": 0.0,
+            # packed-execution accounting: segment launches, latent rows
+            # those launches carried, and how many of the rows were pads
+            "launches": 0, "pack_rows": 0, "pack_pad_rows": 0}
         # bounded windows: a long-lived server must not grow stat state
         # without bound; summary() percentiles are over the trailing window
         stat_window = 65_536
@@ -347,28 +364,76 @@ class RequestScheduler:
             beta_bucket=g.beta, rng_fold=g.gid, centroid=g.centroid,
             cfg_key=self._cfg_key()), shape=self._latent_shape)
 
-    def _advance(self, g: _Group) -> None:
-        """One segment of at most ``slice_steps`` for one group."""
-        T = self.sage.total_steps
-        null = self._null_cond()
+    def _count_launch(self, rows: int, pad_rows: int) -> None:
+        self.stats["launches"] += 1
+        self.stats["pack_rows"] += rows
+        self.stats["pack_pad_rows"] += pad_rows
+
+    def _after_segment(self, g: _Group, s: int) -> None:
+        """Post-advance accounting + phase transitions, shared by the
+        packed and per-group paths (NFE counts the *logical* per-group
+        evals — pad rows are real compute but ride the pad-waste stat,
+        keeping NFE comparable between modes and with the sync engine)."""
+        g.steps_done += s
         if g.state == "shared":
-            s = min(self.slice_steps, g.n_shared - g.steps_done)
-            g.carry = self._shared_runner(s)(g.carry, g.cbar, null)
-            g.steps_done += s
             g.nfe += shared_phase_nfe(1, s)
             if g.steps_done == g.n_shared:
                 self._store_trunk(g)
                 g.carry = fork_carry(g.carry, len(g.members))
                 g.state = "branch"
-        elif g.state == "branch":
-            s = min(self.slice_steps, T - g.steps_done)
-            g.carry = self._branch_runner(s)(
-                g.carry, g.cond_flat, g.mask, null, jnp.int32(g.n_shared))
-            g.steps_done += s
+        else:
             g.nfe += float(branch_phase_nfe(g.mask, s,
                                             self.sage.shared_uncond_cfg))
-            if g.steps_done == T:
+            if g.steps_done == self.sage.total_steps:
                 g.state = "done"
+
+    def _advance(self, g: _Group) -> None:
+        """One segment of at most ``slice_steps`` for ONE group — the
+        ``packed=False`` oracle path (one launch per group per tick)."""
+        null = self._null_cond()
+        if g.state == "shared":
+            s = min(self.slice_steps, g.n_shared - g.steps_done)
+            g.carry = self._shared_runner(s)(g.carry, g.cbar, null)
+            self._count_launch(1, 0)
+        else:
+            s = min(self.slice_steps, self.sage.total_steps - g.steps_done)
+            g.carry = self._branch_runner(s)(
+                g.carry, g.cond_flat, g.mask, null, jnp.int32(g.n_shared))
+            self._count_launch(len(g.members), 0)
+        self._after_segment(g, s)
+
+    def _advance_packed(self, todo: List[_Group]) -> None:
+        """One tick of packed execution: bucket the in-flight groups by
+        pack signature, advance each bucket with ONE phase call over a
+        stacked carry (per-row step/fork indices), scatter back.  Buckets
+        are built from pre-tick states, so a group forking shared->branch
+        this tick joins branch packs only from the next tick — exactly
+        the per-group ordering.  Transitions (trunk-cache stores, forks,
+        completions) run AFTER all buckets, in ``todo`` order, so the
+        cache's insert/LRU-recency order is identical to per-group mode
+        even when a byte budget forces evictions."""
+        null = self._null_cond()
+        seg_len: Dict[int, int] = {}
+        for key, groups in packing.build_packs(
+                todo, self.slice_steps, self.sage.total_steps,
+                self.sage.sampler, self._latent_shape):
+            s = key.n_steps
+            if key.phase == "shared":
+                carry, cbar = packing.pack_shared(groups)
+                out = self._shared_runner(s)(carry, cbar, null)
+                packing.unpack_shared(out, groups)
+                self._count_launch(len(groups), 0)
+            else:
+                carry, cond, mask, fork = packing.pack_branch(
+                    groups, self.group_size)
+                out = self._branch_runner(s)(carry, cond, mask, null, fork)
+                packing.unpack_branch(out, groups, self.group_size)
+                self._count_launch(*packing.pad_stats(groups,
+                                                      self.group_size))
+            for g in groups:
+                seg_len[g.gid] = s
+        for g in todo:
+            self._after_segment(g, seg_len[g.gid])
 
     def _decode(self, latents: jnp.ndarray) -> np.ndarray:
         """latents (B, H, W, C) -> images (or raw latents without a VAE)."""
@@ -415,9 +480,14 @@ class RequestScheduler:
                                                     g.gid))
         if self.max_groups_per_tick is not None:
             todo = todo[:self.max_groups_per_tick]
+        if self.packed:
+            if todo:
+                self._advance_packed(todo)
+        else:
+            for g in todo:
+                self._advance(g)
         done: List[Completed] = []
         for g in todo:
-            self._advance(g)
             if g.state == "done":
                 done.extend(self._complete(g, now))
                 self.inflight.remove(g)
@@ -494,13 +564,16 @@ class RequestScheduler:
             carry = init_carry(jax.random.fold_in(rng, bi), K,
                                self._latent_shape)
             cbar = group_mean(cond_packed, mask_j)
-            carry = self._shared_runner(n_shared)(carry, cbar, null) \
-                if n_shared > 0 else carry
+            if n_shared > 0:
+                carry = self._shared_runner(n_shared)(carry, cbar, null)
+                self._count_launch(K, 0)
             carry = fork_carry(carry, N)
             cm = cond_packed.reshape(K * N, *cond_packed.shape[2:])
-            carry = self._branch_runner(Ts)(
-                carry, cm, mask_j, null, jnp.int32(n_shared)) \
-                if Ts > 0 else carry
+            if Ts > 0:
+                carry = self._branch_runner(Ts)(
+                    carry, cm, mask_j, null, jnp.int32(n_shared))
+                self._count_launch(K * N,
+                                   K * N - sum(len(r) for r in flat))
 
             nfe = float(shared_phase_nfe(K, n_shared)
                         + branch_phase_nfe(mask_j, Ts,
@@ -553,6 +626,16 @@ class RequestScheduler:
             "queue_depth_mean": (float(np.mean(self.queue_depth))
                                  if self.queue_depth else 0.0),
             "ticks": self.ticks,
+            # packed-execution economics: launches_per_tick is the
+            # dispatch pressure packing exists to collapse; pad_waste is
+            # what it pays (fraction of launched latent rows that were
+            # mask-0 padding)
+            "launches": self.stats["launches"],
+            "launches_per_tick": (self.stats["launches"] / self.ticks
+                                  if self.ticks else 0.0),
+            "pad_waste": (self.stats["pack_pad_rows"]
+                          / self.stats["pack_rows"]
+                          if self.stats["pack_rows"] else 0.0),
         }
         if self.trunk_cache is not None:
             out["cache_hits"] = self.trunk_cache.stats["hits"]

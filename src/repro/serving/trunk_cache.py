@@ -91,7 +91,7 @@ class TrunkCache:
         self._entries: "OrderedDict[Tuple, TrunkEntry]" = OrderedDict()
         self.bytes = 0
         self.stats = {"hits": 0, "exact_hits": 0, "misses": 0,
-                      "inserts": 0, "evictions": 0}
+                      "inserts": 0, "evictions": 0, "overwrites": 0}
 
     # ------------------------------------------------------------------
     def _quant_key(self, centroid: np.ndarray, beta_bucket: float,
@@ -139,9 +139,14 @@ class TrunkCache:
             entry.nbytes = cache_bytes((entry.z,))
         key = self._quant_key(entry.centroid, entry.beta_bucket,
                               entry.cfg_key, shape)
+        # overwrite of an existing exact key is evict-then-insert: the old
+        # entry's bytes leave the ledger before the new entry's arrive, so
+        # cache_bytes can never double-count a key (regression:
+        # tests/test_serving_scheduler.py::test_trunk_cache_overwrite_*)
         old = self._entries.pop(key, None)
         if old is not None:
             self.bytes -= old.nbytes
+            self.stats["overwrites"] += 1
         self._entries[key] = entry
         self.bytes += entry.nbytes
         self.stats["inserts"] += 1
@@ -151,6 +156,11 @@ class TrunkCache:
             self.stats["evictions"] += 1
 
     # ------------------------------------------------------------------
+    def ledger_bytes(self) -> int:
+        """Recount ``bytes`` from the stored entries (invariant probe:
+        must always equal the incrementally-maintained ``self.bytes``)."""
+        return sum(e.nbytes for e in self._entries.values())
+
     def __len__(self) -> int:
         return len(self._entries)
 

@@ -1,0 +1,137 @@
+"""Golden-file conformance suite: tiny-config end-to-end samples.
+
+For every sampler × step_impl the same fixed arrival trace runs through
+the streaming scheduler twice — packed tick execution and the per-group
+oracle — and must produce byte-identical completions (the packing parity
+bar).  The packed result is additionally fingerprinted (shape + dtype +
+sha256 + first-k values) against ``tests/golden/conformance.json``, so a
+future kernel or scheduler refactor that shifts numerics diffs against a
+stable committed oracle instead of only against itself.
+
+Regenerating the goldens (after an *intentional* numerics change):
+
+    REPRO_GOLDEN_REGEN=1 PYTHONPATH=src python -m pytest -q \
+        tests/test_conformance.py
+
+Environment gates:
+
+* goldens were generated on the CPU backend — on other backends the
+  hash/value comparison is skipped (packed-vs-per-group parity still
+  runs, it is backend-independent);
+* ``step_impl="fused"`` needs the Pallas kernels, which off-TPU only run
+  in interpret mode — under ``REPRO_KERNEL_INTERPRET=off`` on a non-TPU
+  backend the fused cases skip (CI runs the suite in BOTH modes; the
+  reference cases prove mode-independence, since their jnp math never
+  touches the interpret flag).
+"""
+import hashlib
+import json
+import os
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import SageConfig, get_config
+from repro.data.synthetic import ShapesDataset
+from repro.kernels.dispatch import resolve_interpret
+from repro.models import dit
+from repro.models import text_encoder as te
+from repro.serving.scheduler import RequestScheduler
+
+CFG = get_config("sage-dit", smoke=True)
+PARAMS = dit.init_params(CFG, jax.random.PRNGKey(0))
+TC = te.text_cfg(dim=CFG.cond_dim, layers=2)
+TEXT_PARAMS = te.init_text(jax.random.PRNGKey(1), TC)
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "conformance.json"
+FIRST_K = 8
+CASES = [("ddim", "reference"), ("ddim", "fused"),
+         ("dpmpp", "reference"), ("dpmpp", "fused")]
+
+
+def _skip_unavailable(step_impl):
+    if (step_impl == "fused" and not resolve_interpret("auto")
+            and jax.default_backend() != "tpu"):
+        pytest.skip("fused step kernels need interpret mode off-TPU "
+                    "(REPRO_KERNEL_INTERPRET=off)")
+
+
+def _run(sampler, step_impl, packed):
+    """The fixed conformance trace: two waves of three themed prompts,
+    grouped at tau_min=0.2, T=4 sliced in 2-step segments."""
+    sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                      tau_min=0.2, sampler=sampler, step_impl=step_impl)
+    sched = RequestScheduler(CFG, sage, PARAMS, TEXT_PARAMS, TC,
+                             group_size=3, slice_steps=2, max_wait_ticks=1,
+                             packed=packed, seed=0)
+    _, prompts = ShapesDataset(res=16).batch(0, 3)
+    done, t = [], 0.0
+    for _ in range(2):
+        sched.submit(prompts, now=t)
+        while sched.pending:
+            t += 1.0
+            done.extend(sched.tick(now=t))
+    assert len(done) == 2 * len(prompts)
+    return done
+
+
+def _fingerprint(done):
+    imgs = np.stack([c.image for c in done])
+    flat = imgs.reshape(-1)
+    return {
+        "shape": list(imgs.shape),
+        "dtype": str(imgs.dtype),
+        "sha256": hashlib.sha256(np.ascontiguousarray(imgs).tobytes()
+                                 ).hexdigest(),
+        "first_k": [float(v) for v in flat[:FIRST_K]],
+    }
+
+
+@pytest.mark.parametrize("sampler,step_impl", CASES)
+def test_packed_matches_per_group_bitwise(sampler, step_impl):
+    """The acceptance bar: packed == per-group, exact, same dtype, for
+    every sampler × step_impl, across segment boundaries."""
+    _skip_unavailable(step_impl)
+    dp = _run(sampler, step_impl, packed=True)
+    dg = _run(sampler, step_impl, packed=False)
+    assert [c.prompt for c in dp] == [c.prompt for c in dg]
+    for a, b in zip(dp, dg):
+        assert a.image.dtype == b.image.dtype
+        np.testing.assert_array_equal(a.image, b.image)
+        assert a.group_id == b.group_id and a.nfe_share == b.nfe_share
+
+
+@pytest.mark.parametrize("sampler,step_impl", CASES)
+def test_golden_fingerprint(sampler, step_impl):
+    """End-to-end output vs the committed fingerprint (CPU backend)."""
+    _skip_unavailable(step_impl)
+    if jax.default_backend() != "cpu":
+        pytest.skip("goldens were generated on the CPU backend")
+    case = f"{sampler}-{step_impl}"
+    fp = _fingerprint(_run(sampler, step_impl, packed=True))
+
+    if os.environ.get("REPRO_GOLDEN_REGEN"):
+        GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+        golden = (json.loads(GOLDEN_PATH.read_text())
+                  if GOLDEN_PATH.exists() else {})
+        golden[case] = fp
+        GOLDEN_PATH.write_text(json.dumps(golden, indent=1, sort_keys=True)
+                               + "\n")
+        pytest.skip(f"regenerated golden for {case}")
+
+    assert GOLDEN_PATH.exists(), (
+        "tests/golden/conformance.json missing — regenerate with "
+        "REPRO_GOLDEN_REGEN=1")
+    golden = json.loads(GOLDEN_PATH.read_text())
+    assert case in golden, f"no golden entry for {case} — regenerate"
+    want = golden[case]
+    assert fp["shape"] == want["shape"]
+    assert fp["dtype"] == want["dtype"]
+    np.testing.assert_allclose(fp["first_k"], want["first_k"],
+                               rtol=0, atol=1e-6)
+    assert fp["sha256"] == want["sha256"], (
+        f"{case}: end-to-end bytes diverged from the committed oracle "
+        "(first-8 values still within 1e-6). If the numerics change is "
+        "intentional, regenerate with REPRO_GOLDEN_REGEN=1.")

@@ -1,0 +1,331 @@
+"""Packed multi-group tick execution.
+
+Covers: the per-row scalar-block kernel launches (ddim + dpmpp rows
+variants vs the broadcast-scalar launches and per-element singles), the
+pack/unpack round-trip, pack-signature bucketing rules, packed
+shared/branch phase parity against per-group segment calls, and the
+scheduler-level packed-vs-per-group streaming equivalence (results,
+NFE, launch accounting) with and without the trunk cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SageConfig, get_config
+from repro.core import shared_sampling as ss
+from repro.core.schedule import make_schedule
+from repro.data.synthetic import ShapesDataset
+from repro.kernels._tiles import (per_row_scalars, row_block, scalar_rows,
+                                  tile_rows)
+from repro.kernels.ddim_step.ops import fused_cfg_ddim_step
+from repro.kernels.dpmpp_step.ops import fused_cfg_dpmpp_step
+from repro.models import dit
+from repro.models import text_encoder as te
+from repro.serving import packing
+from repro.serving.scheduler import RequestScheduler
+from repro.serving.trunk_cache import TrunkCache
+
+SCHED = make_schedule(1000)
+CFG = get_config("sage-dit", smoke=True)
+PARAMS = dit.init_params(CFG, jax.random.PRNGKey(0))
+TC = te.text_cfg(dim=CFG.cond_dim, layers=2)
+TEXT_PARAMS = te.init_text(jax.random.PRNGKey(1), TC)
+H = CFG.latent_size
+SHAPE = (H, H, CFG.latent_channels)
+
+
+def _eps_fn(z, t, c):
+    return dit.forward(PARAMS, CFG, z, t, c)
+
+
+NULL = jnp.zeros((CFG.cond_len, CFG.cond_dim))
+
+
+# ---------------------------------------------------------------------------
+# per-row kernel launches
+# ---------------------------------------------------------------------------
+
+def test_tile_rows_round_trip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 7, 2))
+    br = row_block(x[0].size, 256, 256)
+    assert br % 8 == 0
+    (t,), untile = tile_rows(br, 256, x)
+    assert t.shape[0] == 3 and t.shape[2] == 256 and t.shape[1] % br == 0
+    np.testing.assert_array_equal(np.asarray(untile(t)), np.asarray(x))
+
+
+def test_scalar_rows_mixes_vectors_and_scalars():
+    blk = scalar_rows((2.0, jnp.array([1.0, 2.0, 3.0]),
+                       jnp.array([True, False, True])), 8, 3)
+    assert blk.shape == (3, 8) and blk.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(blk[:, 0]), 2.0)
+    np.testing.assert_array_equal(np.asarray(blk[:, 1]), [1.0, 2.0, 3.0])
+    np.testing.assert_array_equal(np.asarray(blk[:, 2]), [1.0, 0.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(blk[:, 3:]), 0.0)
+    assert per_row_scalars(2.0, jnp.array([1.0, 2.0]))
+    assert not per_row_scalars(2.0, jnp.float32(3.0))
+
+
+def _row_scalars(B, key):
+    a_t = jax.random.uniform(key, (B,), minval=0.5, maxval=0.95)
+    s_t = jnp.sqrt(1.0 - a_t ** 2)
+    a_n = jnp.minimum(a_t + 0.04, 0.99)
+    s_n = jnp.sqrt(1.0 - a_n ** 2)
+    return a_t, s_t, a_n, s_n
+
+
+def test_ddim_rows_kernel_matches_single_launches():
+    """Per-row-scalar launch == one broadcast-scalar launch per element,
+    bitwise (the packed path's kernel-level parity contract)."""
+    B = 5
+    k = jax.random.PRNGKey(7)
+    z, eu, ec = (jax.random.normal(jax.random.fold_in(k, i), (B,) + SHAPE)
+                 for i in range(3))
+    a_t, s_t, a_n, s_n = _row_scalars(B, jax.random.fold_in(k, 9))
+    rows = fused_cfg_ddim_step(z, eu, ec, 3.0, a_t, s_t, a_n, s_n,
+                               interpret=True, clip_x0=1.5)
+    for i in range(B):
+        one = fused_cfg_ddim_step(
+            z[i:i + 1], eu[i:i + 1], ec[i:i + 1], 3.0, float(a_t[i]),
+            float(s_t[i]), float(a_n[i]), float(s_n[i]), interpret=True,
+            clip_x0=1.5)
+        np.testing.assert_array_equal(np.asarray(rows[i]), np.asarray(one[0]))
+
+
+def test_dpmpp_rows_kernel_matches_single_launches():
+    """Same contract for the 2M kernel — including rows whose warm-up
+    flag differs (one group at its fork, others mid-phase)."""
+    B = 4
+    k = jax.random.PRNGKey(11)
+    z, eu, ec, ep = (jax.random.normal(jax.random.fold_in(k, i),
+                                       (B,) + SHAPE) for i in range(4))
+    a_t, s_t, a_n, s_n = _row_scalars(B, jax.random.fold_in(k, 9))
+    lam = jnp.log(a_t / s_t)
+    lam_p = lam - 0.25
+    lam_n = jnp.log(a_n / s_n)
+    first = jnp.array([True, False, False, True])
+    zr, er = fused_cfg_dpmpp_step(z, eu, ec, ep, 3.0, a_t, s_t, a_n, s_n,
+                                  lam, lam_p, lam_n, first, clip_x0=1.5,
+                                  interpret=True)
+    for i in range(B):
+        zo, eo = fused_cfg_dpmpp_step(
+            z[i:i + 1], eu[i:i + 1], ec[i:i + 1], ep[i:i + 1], 3.0,
+            float(a_t[i]), float(s_t[i]), float(a_n[i]), float(s_n[i]),
+            float(lam[i]), float(lam_p[i]), float(lam_n[i]),
+            bool(first[i]), clip_x0=1.5, interpret=True)
+        np.testing.assert_array_equal(np.asarray(zr[i]), np.asarray(zo[0]))
+        np.testing.assert_array_equal(np.asarray(er[i]), np.asarray(eo[0]))
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack plumbing
+# ---------------------------------------------------------------------------
+
+class _FakeGroup:
+    def __init__(self, n_members, steps_done, n_shared, beta, state,
+                 key, width=None):
+        rows = 1 if state == "shared" else n_members
+        self.members = list(range(n_members))
+        self.steps_done = steps_done
+        self.n_shared = n_shared
+        self.beta = beta
+        self.state = state
+        z = jax.random.normal(key, (rows,) + SHAPE)
+        self.carry = ss.SampleCarry(z, z * 0.5, jnp.int32(steps_done))
+        self.cbar = jax.random.normal(key, (1, CFG.cond_len, CFG.cond_dim))
+        self.cond_flat = jax.random.normal(
+            key, (n_members, CFG.cond_len, CFG.cond_dim))
+        self.mask = jnp.ones((1, n_members))
+
+
+def test_pack_signature_and_build_packs():
+    k = jax.random.PRNGKey(0)
+    gs = [
+        _FakeGroup(2, 0, 2, 0.3, "shared", k),   # 2 shared steps left
+        _FakeGroup(3, 1, 2, 0.3, "shared", k),   # 1 shared step left
+        _FakeGroup(1, 0, 2, 0.3, "shared", k),   # 2 left -> packs with [0]
+        _FakeGroup(2, 2, 2, 0.3, "branch", k),   # branch
+        _FakeGroup(2, 2, 3, 0.4, "branch", k),   # other beta bucket
+    ]
+    packs = packing.build_packs(gs, slice_steps=4, total_steps=6,
+                                sampler="ddim", shape=SHAPE)
+    keyed = {key: groups for key, groups in packs}
+    assert len(packs) == 4
+    assert keyed[packing.PackKey("shared", "ddim", 0.3, SHAPE, 2)] \
+        == [gs[0], gs[2]]
+    assert keyed[packing.PackKey("shared", "ddim", 0.3, SHAPE, 1)] == [gs[1]]
+    assert keyed[packing.PackKey("branch", "ddim", 0.3, SHAPE, 4)] == [gs[3]]
+    assert keyed[packing.PackKey("branch", "ddim", 0.4, SHAPE, 4)] == [gs[4]]
+    # segment length is clamped by steps remaining in the phase
+    assert packing.pack_signature(gs[1], 4, 6, "ddim", SHAPE).n_steps == 1
+
+
+def test_pack_unpack_round_trip_preserves_rows():
+    k = jax.random.PRNGKey(1)
+    shared = [_FakeGroup(2, 1, 3, 0.3, "shared", jax.random.fold_in(k, 0)),
+              _FakeGroup(1, 2, 3, 0.3, "shared", jax.random.fold_in(k, 1))]
+    carry, cbar = packing.pack_shared(shared)
+    assert carry.z.shape == (2,) + SHAPE and cbar.shape[0] == 2
+    np.testing.assert_array_equal(np.asarray(carry.step_idx), [1, 2])
+    before = [np.asarray(g.carry.z) for g in shared]
+    packing.unpack_shared(carry, shared)
+    for g, b in zip(shared, before):
+        np.testing.assert_array_equal(np.asarray(g.carry.z), b)
+
+    branch = [_FakeGroup(2, 3, 3, 0.3, "branch", jax.random.fold_in(k, 2)),
+              _FakeGroup(3, 4, 2, 0.3, "branch", jax.random.fold_in(k, 3))]
+    width = 3
+    carry, cond, mask, fork = packing.pack_branch(branch, width)
+    assert carry.z.shape == (2 * width,) + SHAPE
+    assert cond.shape[0] == 2 * width
+    np.testing.assert_array_equal(np.asarray(mask), [[1, 1, 0], [1, 1, 1]])
+    np.testing.assert_array_equal(np.asarray(fork), [3, 3, 3, 2, 2, 2])
+    np.testing.assert_array_equal(np.asarray(carry.step_idx),
+                                  [3, 3, 3, 4, 4, 4])
+    # pad rows replicate member 0
+    np.testing.assert_array_equal(np.asarray(carry.z[2]),
+                                  np.asarray(carry.z[0]))
+    before = [np.asarray(g.carry.z) for g in branch]
+    packing.unpack_branch(carry, branch, width)
+    for g, b in zip(branch, before):
+        assert g.carry.z.shape[0] == len(g.members)
+        np.testing.assert_array_equal(np.asarray(g.carry.z), b)
+    assert packing.pad_stats(branch, width) == (6, 1)
+
+
+# ---------------------------------------------------------------------------
+# packed phase calls == per-group phase calls (segment-level parity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sampler,step_impl",
+                         [("ddim", "reference"), ("dpmpp", "fused")])
+def test_packed_phases_match_per_group(sampler, step_impl):
+    """Stacked carries with per-row step/fork indices reproduce the
+    per-group segment results bitwise — groups at different grid offsets,
+    different widths (padded) and different fork points in one call."""
+    sage = SageConfig(total_steps=6, share_ratio=0.33, guidance_scale=3.0,
+                      sampler=sampler, step_impl=step_impl)
+    k = jax.random.PRNGKey(5)
+    cbarA = jax.random.normal(jax.random.fold_in(k, 0),
+                              (1, CFG.cond_len, CFG.cond_dim))
+    cbarB = jax.random.normal(jax.random.fold_in(k, 1),
+                              (1, CFG.cond_len, CFG.cond_dim))
+    # --- shared phase: A two steps in, B at the start ------------------
+    cA = ss.shared_phase(_eps_fn, SCHED, sage,
+                         ss.init_carry(jax.random.fold_in(k, 2), 1, SHAPE),
+                         cbarA, NULL, 2)
+    cB = ss.init_carry(jax.random.fold_in(k, 3), 1, SHAPE)
+    a_ref = ss.shared_phase(_eps_fn, SCHED, sage, cA, cbarA, NULL, 2)
+    b_ref = ss.shared_phase(_eps_fn, SCHED, sage, cB, cbarB, NULL, 2)
+    packed = ss.SampleCarry(jnp.concatenate([cA.z, cB.z], 0),
+                            jnp.concatenate([cA.eps_prev, cB.eps_prev], 0),
+                            jnp.array([2, 0], jnp.int32))
+    out = ss.shared_phase(_eps_fn, SCHED, sage, packed,
+                          jnp.concatenate([cbarA, cbarB], 0), NULL, 2)
+    np.testing.assert_array_equal(np.asarray(out.z[:1]), np.asarray(a_ref.z))
+    np.testing.assert_array_equal(np.asarray(out.z[1:]), np.asarray(b_ref.z))
+    np.testing.assert_array_equal(np.asarray(out.eps_prev[:1]),
+                                  np.asarray(a_ref.eps_prev))
+
+    # --- branch phase: A (2 members, forked @2, one step in), B (3
+    # members, at its fork @3) — packed to width 3 with a masked pad row
+    condA = jax.random.normal(jax.random.fold_in(k, 6),
+                              (2, CFG.cond_len, CFG.cond_dim))
+    condB = jax.random.normal(jax.random.fold_in(k, 7),
+                              (3, CFG.cond_len, CFG.cond_dim))
+    fA = ss.fork_carry(cA, 2)              # A forked at global step 2
+    maskA = jnp.ones((1, 2))
+    fA = ss.branch_phase(_eps_fn, SCHED, sage, fA, condA, maskA, NULL, 1,
+                         fork_idx=2)
+    cB3 = ss.shared_phase(_eps_fn, SCHED, sage, b_ref, cbarB, NULL, 1)
+    fB = ss.fork_carry(cB3, 3)
+    maskB = jnp.ones((1, 3))
+    a2 = ss.branch_phase(_eps_fn, SCHED, sage, fA, condA, maskA, NULL, 2,
+                         fork_idx=2)
+    b2 = ss.branch_phase(_eps_fn, SCHED, sage, fB, condB, maskB, NULL, 2,
+                         fork_idx=3)
+
+    def pad(x):
+        return jnp.concatenate([x, x[:1]], 0)
+
+    packed = ss.SampleCarry(
+        jnp.concatenate([pad(fA.z), fB.z], 0),
+        jnp.concatenate([pad(fA.eps_prev), fB.eps_prev], 0),
+        jnp.array([3, 3, 3, 3, 3, 3], jnp.int32))
+    out = ss.branch_phase(
+        _eps_fn, SCHED, sage, packed,
+        jnp.concatenate([pad(condA), condB], 0),
+        jnp.array([[1.0, 1.0, 0.0], [1.0, 1.0, 1.0]]), NULL, 2,
+        fork_idx=jnp.array([2, 2, 2, 3, 3, 3], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out.z[:2]), np.asarray(a2.z))
+    np.testing.assert_array_equal(np.asarray(out.z[3:]), np.asarray(b2.z))
+    np.testing.assert_array_equal(np.asarray(out.eps_prev[3:]),
+                                  np.asarray(b2.eps_prev))
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level equivalence
+# ---------------------------------------------------------------------------
+
+def _stream(packed, cache=None, sampler="ddim", step_impl="reference"):
+    sage = SageConfig(total_steps=6, share_ratio=0.33, guidance_scale=2.0,
+                      tau_min=0.2, sampler=sampler, step_impl=step_impl)
+    sched = RequestScheduler(CFG, sage, PARAMS, TEXT_PARAMS, TC,
+                             group_size=3, slice_steps=2, max_wait_ticks=1,
+                             packed=packed, trunk_cache=cache)
+    _, prompts = ShapesDataset(res=16).batch(0, 6)
+    done, t = [], 0.0
+    for _ in range(2):
+        sched.submit(prompts, now=t)
+        while sched.pending:
+            t += 1.0
+            done.extend(sched.tick(now=t))
+    return sched, done
+
+
+def test_scheduler_packed_matches_per_group():
+    """The packed tick loop must be invisible: same completions in the
+    same order, bitwise-identical images, identical NFE — with strictly
+    fewer launches."""
+    sp, dp = _stream(packed=True)
+    sg, dg = _stream(packed=False)
+    assert [c.prompt for c in dp] == [c.prompt for c in dg]
+    for a, b in zip(dp, dg):
+        assert a.image.dtype == b.image.dtype
+        np.testing.assert_array_equal(a.image, b.image)
+    assert sp.stats["nfe"] == sg.stats["nfe"]
+    assert sp.stats["launches"] < sg.stats["launches"]
+    s = sp.summary()
+    assert s["launches_per_tick"] < sg.summary()["launches_per_tick"]
+    assert 0.0 <= s["pad_waste"] < 1.0
+
+
+def test_scheduler_packed_with_trunk_cache_interleaves():
+    """Cache fills/hits must interleave identically with packed groups:
+    same hit pattern, same outputs, same NFE savings as per-group."""
+    sp, dp = _stream(packed=True, cache=TrunkCache(tau_trunk=0.9))
+    sg, dg = _stream(packed=False, cache=TrunkCache(tau_trunk=0.9))
+    assert sp.trunk_cache.stats["hits"] == sg.trunk_cache.stats["hits"] > 0
+    assert sp.stats["nfe_saved_cache"] == sg.stats["nfe_saved_cache"] > 0
+    assert [c.cache_hit for c in dp] == [c.cache_hit for c in dg]
+    for a, b in zip(dp, dg):
+        np.testing.assert_array_equal(a.image, b.image)
+    assert sp.stats["launches"] < sg.stats["launches"]
+
+
+def test_scheduler_packed_cache_parity_under_eviction_pressure():
+    """Trunk stores run in todo order (not pack-bucket order), so the
+    cache's insert/LRU sequence — and therefore WHICH entry a byte
+    budget evicts — must match per-group mode exactly.  A one-entry
+    budget makes any ordering divergence flip a later hit/miss."""
+    one_entry = 2 * 4 * int(np.prod((1,) + SHAPE))    # z + eps_prev bytes
+    sp, dp = _stream(packed=True,
+                     cache=TrunkCache(tau_trunk=0.9, max_bytes=one_entry))
+    sg, dg = _stream(packed=False,
+                     cache=TrunkCache(tau_trunk=0.9, max_bytes=one_entry))
+    assert sp.trunk_cache.stats == sg.trunk_cache.stats
+    assert sp.stats["nfe"] == sg.stats["nfe"]
+    assert [c.cache_hit for c in dp] == [c.cache_hit for c in dg]
+    for a, b in zip(dp, dg):
+        np.testing.assert_array_equal(a.image, b.image)

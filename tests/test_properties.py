@@ -1,0 +1,160 @@
+"""Property-based grouping invariants (the optional-hypothesis path).
+
+``tests/hypothesis_compat.py`` keeps collection clean without hypothesis
+installed: the ``@given`` cases below then skip, while the deterministic
+twins (same checker functions, fixed seeds) always run — so the
+invariants are exercised everywhere and *fuzzed* where hypothesis is
+available (CI's tier1 job installs it).
+
+Invariants under test:
+
+* ``grouping.incremental_assign`` — arrival-order admission yields a
+  partition whose every group is a clique of the (tau_min, tau_max]
+  threshold graph, within the size cap, regardless of embedding
+  distribution or arrival order;
+* ``grouping.greedy_clique_groups`` — batch grouping satisfies the same
+  pairwise invariant;
+* ``grouping.flatten_groups`` — row splitting round-trips: members are
+  preserved in order, rows respect the width, and the row layout matches
+  ``pad_groups``'s packing exactly.
+"""
+import numpy as np
+
+from repro.core import grouping
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# checkers (shared by the property cases and the deterministic twins)
+# ---------------------------------------------------------------------------
+
+def check_incremental_clique(embeds: np.ndarray, order, tau: float,
+                             gmax: int) -> None:
+    """Feed ``embeds`` in ``order`` through incremental_assign and verify
+    the partition + pairwise-clique + size invariants."""
+    groups = []                              # member-index lists, arrival
+    for i in order:
+        gi = grouping.incremental_assign(
+            embeds[i], [embeds[g] for g in groups], tau, group_max=gmax)
+        if gi >= 0:
+            groups[gi].append(i)
+        else:
+            groups.append([i])
+    assert sorted(i for g in groups for i in g) == sorted(order)
+    sim = grouping.similarity_matrix(embeds)
+    for g in groups:
+        assert 1 <= len(g) <= gmax
+        for a in g:
+            for b in g:
+                if a != b:
+                    assert grouping.edge_mask(
+                        np.asarray(sim[a, b]), tau).all(), (a, b, sim[a, b])
+
+
+def check_greedy_clique(embeds: np.ndarray, tau: float, gmax: int) -> None:
+    sim = grouping.similarity_matrix(embeds)
+    groups = grouping.greedy_clique_groups(sim, tau, group_max=gmax)
+    assert sorted(i for g in groups for i in g) == list(range(len(embeds)))
+    for g in groups:
+        assert 1 <= len(g) <= gmax
+        for a in g:
+            for b in g:
+                if a != b:
+                    assert grouping.edge_mask(
+                        np.asarray(sim[a, b]), tau).all(), (a, b, sim[a, b])
+
+
+def check_flatten_round_trip(groups, width: int) -> None:
+    flat = grouping.flatten_groups(groups, width)
+    # round-trip: concatenating the rows reproduces the unsplit members
+    # in order, nothing lost or duplicated
+    assert [m for row in flat for m in row] == [m for g in groups
+                                                for m in g]
+    assert all(1 <= len(row) <= width for row in flat)
+    # and the rows are exactly pad_groups's packing layout
+    idx, mask = grouping.pad_groups(groups, width)
+    assert idx.shape == (len(flat), width)
+    for k, row in enumerate(flat):
+        assert idx[k, :len(row)].tolist() == row
+        assert idx[k, len(row):].tolist() == [row[0]] * (width - len(row))
+        assert mask[k].sum() == len(row)
+
+
+def _embeds_and_order(n: int, d: int, seed: int, clustered: bool):
+    rng = np.random.RandomState(seed)
+    if clustered:
+        # a few tight clusters — exercises full groups and the size cap
+        centers = rng.randn(max(1, n // 3), d)
+        e = (centers[rng.randint(len(centers), size=n)]
+             + 0.05 * rng.randn(n, d))
+    else:
+        e = rng.randn(n, d)
+    return np.asarray(e, np.float32), rng.permutation(n).tolist()
+
+
+# ---------------------------------------------------------------------------
+# property cases (skip without hypothesis)
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 24), d=st.integers(2, 8),
+       seed=st.integers(0, 2 ** 31 - 1),
+       tau=st.floats(-0.9, 0.95), gmax=st.integers(1, 6),
+       clustered=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_incremental_assign_clique_property(n, d, seed, tau, gmax,
+                                            clustered):
+    embeds, order = _embeds_and_order(n, d, seed, clustered)
+    check_incremental_clique(embeds, order, tau, gmax)
+
+
+@given(n=st.integers(1, 24), d=st.integers(2, 8),
+       seed=st.integers(0, 2 ** 31 - 1),
+       tau=st.floats(-0.9, 0.95), gmax=st.integers(1, 6),
+       clustered=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_greedy_clique_property(n, d, seed, tau, gmax, clustered):
+    embeds, _ = _embeds_and_order(n, d, seed, clustered)
+    check_greedy_clique(embeds, tau, gmax)
+
+
+@given(sizes=st.lists(st.integers(1, 9), min_size=0, max_size=8),
+       width=st.integers(1, 5))
+@settings(max_examples=60, deadline=None)
+def test_flatten_groups_round_trip_property(sizes, width):
+    start, groups = 0, []
+    for s in sizes:
+        groups.append(list(range(start, start + s)))
+        start += s
+    check_flatten_round_trip(groups, width)
+
+
+# ---------------------------------------------------------------------------
+# deterministic twins (always run — including without hypothesis)
+# ---------------------------------------------------------------------------
+
+def test_incremental_assign_clique_deterministic():
+    for seed, clustered in ((0, False), (1, True), (2, True)):
+        embeds, order = _embeds_and_order(20, 6, seed, clustered)
+        check_incremental_clique(embeds, order, tau=0.3, gmax=4)
+    # degenerate sizes
+    embeds, order = _embeds_and_order(1, 2, 3, False)
+    check_incremental_clique(embeds, order, tau=0.0, gmax=1)
+
+
+def test_greedy_clique_deterministic():
+    for seed, clustered in ((0, False), (1, True)):
+        embeds, _ = _embeds_and_order(18, 5, seed, clustered)
+        check_greedy_clique(embeds, tau=0.2, gmax=5)
+
+
+def test_flatten_groups_round_trip_deterministic():
+    check_flatten_round_trip([[0, 1, 2, 3, 4, 5, 6], [7, 8], [9]], 4)
+    check_flatten_round_trip([], 3)
+    check_flatten_round_trip([[0]], 1)
+
+
+def test_hypothesis_path_active_when_installed():
+    """Documents which mode this environment runs the suite in (and makes
+    the optional dependency's state visible in -v output)."""
+    assert HAVE_HYPOTHESIS in (True, False)

@@ -1,0 +1,139 @@
+"""Scheduler fuzz: randomized Poisson arrival traces, global invariants.
+
+Seeded traces drive the packed streaming scheduler for N ticks (then a
+drain) and assert the invariants that must hold for ANY arrival pattern:
+
+* conservation — no request lost or duplicated (every submitted prompt
+  comes back exactly once), and the pending gauge closes to zero once
+  the arrival rate drops to zero;
+* deadline pressure — after any tick, no still-open group's earliest
+  deadline lies in the past (an overdue group must have been launched
+  that tick, however empty it is);
+* NFE accounting — per-completion ``nfe_share`` totals reproduce the
+  scheduler's global NFE ledger, and the packed-execution launch ledger
+  stays consistent (every launch carries rows; pads only ever on top of
+  real rows);
+* clique admission — co-grouped completions always satisfy the pairwise
+  (tau_min, tau_max] similarity invariant (checked end-to-end here, on
+  real text-tower embeddings rather than synthetic vectors).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import SageConfig, get_config
+from repro.core import grouping
+from repro.models import dit
+from repro.models import text_encoder as te
+from repro.serving.scheduler import RequestScheduler
+from repro.serving.trunk_cache import TrunkCache
+
+CFG = get_config("sage-dit", smoke=True)
+PARAMS = dit.init_params(CFG, jax.random.PRNGKey(0))
+TC = te.text_cfg(dim=CFG.cond_dim, layers=2)
+TEXT_PARAMS = te.init_text(jax.random.PRNGKey(1), TC)
+
+THEME_WORDS = ["red circle", "blue square", "green triangle"]
+
+
+def _trace(seed, ticks, rate):
+    """Poisson(rate) arrivals per tick from a small theme pool; every
+    prompt is unique so conservation is checkable by identity."""
+    rng = np.random.RandomState(seed)
+    trace, uid = [], 0
+    for _ in range(ticks):
+        k = rng.poisson(rate)
+        wave = []
+        for _ in range(k):
+            theme = THEME_WORDS[rng.randint(len(THEME_WORDS))]
+            wave.append(f"a {theme} variant {uid}")
+            uid += 1
+        trace.append(wave)
+    return trace
+
+
+@pytest.mark.parametrize("seed,rate,use_cache,deadlines",
+                         [(0, 1.5, False, False),
+                          (1, 2.5, True, True),
+                          (2, 0.8, False, True)])
+def test_fuzz_invariants(seed, rate, use_cache, deadlines):
+    rng = np.random.RandomState(1000 + seed)
+    sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                      tau_min=0.2)
+    sched = RequestScheduler(
+        CFG, sage, PARAMS, TEXT_PARAMS, TC, group_size=3, slice_steps=2,
+        max_wait_ticks=2, packed=True,
+        trunk_cache=TrunkCache(tau_trunk=0.9) if use_cache else None)
+
+    trace = _trace(seed, ticks=6, rate=rate)
+    submitted, done, t = [], [], 0.0
+    for wave in trace:
+        t += 1.0
+        if wave:
+            dl = t + rng.randint(2, 8) if deadlines and rng.rand() < 0.5 \
+                else None
+            sched.submit(wave, now=t, deadline=dl)
+            submitted.extend(wave)
+        done.extend(sched.tick(now=t))
+        # deadline invariant: anything overdue launched this tick
+        for g in sched.open_groups:
+            assert g.earliest_deadline() > t, (
+                f"overdue group still open at t={t}")
+    # zero arrival rate from here on: the queue must fully drain
+    done.extend(sched.drain(now=t))
+    assert sched.pending == 0
+    assert not (sched.arrivals or sched.open_groups or sched.inflight)
+
+    # conservation: each submitted prompt exactly once, none invented
+    assert sorted(c.prompt for c in done) == sorted(submitted)
+    assert sched.stats["requests"] == len(submitted)
+    assert sched.stats["completed"] == len(done)
+
+    # NFE ledger closes: nfe_share was split evenly inside each group, so
+    # summing it over completions reproduces the global spend
+    assert np.isclose(sum(c.nfe_share for c in done), sched.stats["nfe"])
+    if use_cache:
+        assert (sched.stats["nfe"] + sched.stats["nfe_saved_cache"]
+                <= sched.stats["nfe_independent"] + 1e-6)
+    # launch ledger: rows only from real launches, pads a strict subset
+    assert sched.stats["launches"] <= sched.ticks * 2 * max(
+        1, len(THEME_WORDS))
+    assert 0 <= sched.stats["pack_pad_rows"] < sched.stats["pack_rows"] \
+        or sched.stats["pack_rows"] == 0
+    if done:
+        assert sched.stats["launches"] > 0
+
+    # clique admission end-to-end: co-grouped completions are pairwise
+    # similar enough under the engine's own embeddings
+    by_gid = {}
+    for c in done:
+        by_gid.setdefault(c.group_id, []).append(c.prompt)
+    toks = te.tokenize(submitted, max_len=CFG.cond_len)
+    _, pooled = te.encode_text(TEXT_PARAMS, TC, toks)
+    emb = {p: np.asarray(v) for p, v in zip(submitted, pooled)}
+    for gid, prompts in by_gid.items():
+        assert len(prompts) <= sched.group_size
+        e = np.stack([emb[p] for p in prompts])
+        sim = grouping.similarity_matrix(e)
+        for i in range(len(prompts)):
+            for j in range(len(prompts)):
+                if i != j:
+                    assert sim[i, j] > sage.tau_min, (gid, prompts)
+
+    # summary() stays self-consistent on an arbitrary trace
+    s = sched.summary()
+    assert s["completed"] == len(done)
+    assert s["launches"] == sched.stats["launches"]
+    assert 0.0 <= s["pad_waste"] < 1.0
+    if done:
+        assert s["latency_p50"] > 0 and s["latency_p95"] >= s["latency_p50"]
+
+
+def test_fuzz_empty_trace_is_a_noop():
+    sage = SageConfig(total_steps=4, share_ratio=0.25, tau_min=0.2)
+    sched = RequestScheduler(CFG, sage, PARAMS, TEXT_PARAMS, TC,
+                             group_size=3, packed=True)
+    for t in range(3):
+        assert sched.tick(now=float(t)) == []
+    assert sched.pending == 0 and sched.stats["launches"] == 0
+    assert sched.summary()["launches_per_tick"] == 0.0

@@ -279,6 +279,52 @@ def test_trunk_cache_lru_byte_budget():
     assert cache.bytes == 3 * nbytes
 
 
+def test_trunk_cache_overwrite_byte_accounting():
+    """Overwriting an existing exact key must be evict-then-insert: the
+    ledger ``bytes`` always equals the recount over stored entries — no
+    double-count, under budget pressure, across store_history modes, and
+    for same-object re-inserts."""
+    shape = (1, 4, 4, 3)
+    nbytes = int(np.prod(shape)) * 4 * 2
+    c = TrunkCache(tau_trunk=0.9, max_bytes=2 * nbytes)
+    c.insert(_entry([1.0, 0.0], fill=1.0), shape=shape)
+    for fill in (2.0, 3.0, 4.0):              # repeated same-key overwrite
+        c.insert(_entry([1.0, 0.0], fill=fill), shape=shape)
+        assert c.bytes == c.ledger_bytes() == nbytes
+    assert len(c) == 1 and c.stats["overwrites"] == 3
+    assert c.stats["evictions"] == 0          # overwrite is not an eviction
+    # overwrite while a second entry sits at the budget edge
+    c.insert(_entry([0.0, 1.0], fill=5.0), shape=shape)
+    c.insert(_entry([1.0, 0.0], fill=6.0), shape=shape)
+    assert len(c) == 2 and c.bytes == c.ledger_bytes() == 2 * nbytes
+    # same-object re-insert must not double-count either
+    e = _entry([0.7071, 0.7071], fill=7.0)
+    slim = TrunkCache(tau_trunk=0.9, store_history=False)
+    slim.insert(e, shape=shape)
+    slim.insert(e, shape=shape)
+    assert len(slim) == 1
+    assert slim.bytes == slim.ledger_bytes() == nbytes // 2
+
+
+def test_trunk_cache_overwrite_fuzz_ledger():
+    """Randomized insert/lookup/overwrite sequence: the incremental byte
+    ledger must track the recount exactly at every step."""
+    rng = np.random.RandomState(0)
+    dirs = rng.randn(6, 8)
+    for store_history in (True, False):
+        c = TrunkCache(tau_trunk=0.9, max_bytes=5 * 384,
+                       store_history=store_history)
+        for step in range(200):
+            d = dirs[rng.randint(6)]
+            if rng.rand() < 0.7:
+                c.insert(_entry(d, fill=float(step)), shape=(1, 4, 4, 3))
+            else:
+                c.lookup(d, 0.3, ("k",), (1, 4, 4, 3))
+            assert c.bytes == c.ledger_bytes(), (step, store_history)
+        assert (c.stats["inserts"]
+                == len(c) + c.stats["evictions"] + c.stats["overwrites"])
+
+
 def test_trunk_cache_validates_tau():
     with pytest.raises(ValueError):
         TrunkCache(tau_trunk=0.0)
