@@ -22,8 +22,21 @@ width).  Launch counts are backend-independent; off-TPU the us-per-tick
 gap underestimates the compiled gap, since interpret mode inflates
 per-call compute cost relative to launch overhead.
 
+The eager-vs-pad_aware pair runs a STAGGERED trace (half-group-size
+waves with an idle tick between them, so groups sit sub-full exactly
+when the wait deadline fires): under the eager launch policy every group
+goes out half-full — branch rows padded to the static width, each
+sub-full group opening its own pack bucket — while ``pad_aware`` holds
+sub-full groups inside a deadline-safe window until the next wave fills
+them.  The rows report the
+padding economics (``pad_waste``, ``launches_per_tick`` — both must drop
+under pad_aware) plus NFE (asserted no worse: holds merge arrivals into
+fuller groups, they never split work) and latency p95 (the price of the
+hold, in virtual ticks).
+
 Rows: serving/{sync,stream,stream_cache}/<trace>,
-      serving/{pergroup,packed}/<burst trace>.
+      serving/{pergroup,packed}/<burst trace>,
+      serving/{eager,pad_aware}/<staggered trace>.
 """
 from __future__ import annotations
 
@@ -45,6 +58,8 @@ WAVES = 3
 STEPS = 6
 SLICE = 3
 BURST = 12           # one burst of BURST prompts over THEMES themes
+STAG_WAVES = 8       # staggered trace: STAG_WAVES half-size waves ...
+STAG_GAP = 2         # ... arriving one wave every STAG_GAP ticks
 
 
 def _trace(seed=0):
@@ -125,6 +140,48 @@ def _run_burst(packed):
     return us, len(done), stats, s
 
 
+def _run_stagger(policy):
+    """STAG_WAVES waves of group_size/2 prompts, one wave every STAG_GAP
+    ticks, then drain — the workload where eager admission pays pure pad
+    waste: with 1-tick patience a group is half-full exactly when its
+    wait deadline fires, so eager launches it padded and the next wave
+    must seed a fresh group, while pad_aware holds it one more wave and
+    launches full.  Same warm-pass convention as :func:`_run_burst`."""
+    _, base = ShapesDataset(res=16).batch(0, THEMES)
+    sched = _engine().streaming_scheduler(
+        slice_steps=SLICE, max_wait_ticks=1, packed=True, policy=policy)
+    wave_size = sched.group_size // 2
+
+    def drive(now):
+        done = []
+        for w in range(STAG_WAVES * STAG_GAP):
+            now += 1.0
+            if w % STAG_GAP == 0:
+                wave = [base[(w // STAG_GAP) % THEMES]] * wave_size
+                sched.submit(wave, now=now)
+            done.extend(sched.tick(now=now))
+        while sched.pending:
+            now += 1.0
+            done.extend(sched.tick(now=now))
+        return done
+
+    drive(0.0)                            # warm pass
+    before, ticks0 = dict(sched.stats), sched.ticks
+    t0 = time.time()
+    done = drive(100.0)
+    us = (time.time() - t0) * 1e6
+    assert len(done) == STAG_WAVES * wave_size, (
+        f"stagger trace conservation: {len(done)} completions "
+        f"!= {STAG_WAVES} waves x {wave_size}")
+    ticks = sched.ticks - ticks0
+    stats = {k: v - before.get(k, 0) for k, v in sched.stats.items()}
+    s = dict(sched.summary(), ticks=ticks,
+             launches_per_tick=stats["launches"] / ticks,
+             pad_waste=(stats["pack_pad_rows"] / stats["pack_rows"]
+                        if stats["pack_rows"] else 0.0))
+    return us, len(done), stats, s
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     waves = _trace()
@@ -174,7 +231,33 @@ def main(rows=None):
                  f"{stats_p['launches'] / stats_g['launches']:.2f}x "
                  f"nfe={stats_p['nfe']:.0f}"))
 
-    for r in rows[-5:]:
+    # eager vs pad-aware launch policy on a staggered-arrival trace
+    strace = f"stag{STAG_WAVES}w2g{STAG_GAP}T{STEPS}"
+    us_e, n_e, stats_e, s_e = _run_stagger("eager")
+    rows.append((f"serving/eager/{strace}", us_e / s_e["ticks"],
+                 f"launches_per_tick={s_e['launches_per_tick']:.2f} "
+                 f"pad_waste={s_e['pad_waste']:.3f} "
+                 f"nfe={stats_e['nfe']:.0f} "
+                 f"p95={s_e['latency_p95']:.1f}"))
+    us_a, n_a, stats_a, s_a = _run_stagger("pad_aware")
+    assert n_a == n_e
+    assert stats_a["nfe"] <= stats_e["nfe"], (
+        f"pad_aware must not spend more NFE: {stats_a['nfe']} vs "
+        f"{stats_e['nfe']}")
+    assert s_a["pad_waste"] < s_e["pad_waste"], (
+        f"pad_aware must reduce pad waste: {s_a['pad_waste']} vs "
+        f"{s_e['pad_waste']}")
+    assert s_a["launches_per_tick"] < s_e["launches_per_tick"], (
+        f"pad_aware must reduce launches/tick: {s_a['launches_per_tick']} "
+        f"vs {s_e['launches_per_tick']}")
+    rows.append((f"serving/pad_aware/{strace}", us_a / s_a["ticks"],
+                 f"launches_per_tick={s_a['launches_per_tick']:.2f} "
+                 f"pad_waste={s_a['pad_waste']:.3f} "
+                 f"nfe={stats_a['nfe']:.0f} "
+                 f"p95={s_a['latency_p95']:.1f} "
+                 f"vs_eager_pad={s_a['pad_waste'] - s_e['pad_waste']:+.3f}"))
+
+    for r in rows[-7:]:
         print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
     return rows
 

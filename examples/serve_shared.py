@@ -24,6 +24,7 @@ from repro.data.synthetic import ShapesDataset
 from repro.models import dit
 from repro.models import text_encoder as te
 from repro.serving.engine import SageServingEngine
+from repro.serving.policies import PadAwarePolicy, make_cache_admission
 from repro.serving.trunk_cache import TrunkCache
 
 
@@ -71,10 +72,18 @@ def run_streaming(engine, prompts, args):
     gaps = rng.exponential(1.0 / max(args.arrival_rate, 1e-6), len(prompts))
     arrival_t = np.cumsum(gaps)
 
-    cache = TrunkCache(tau_trunk=args.tau_trunk) if args.trunk_cache else None
+    cache = None
+    if args.trunk_cache:
+        kw = ({"threshold": args.popularity_threshold}
+              if args.cache_admission == "popularity" else {})
+        cache = TrunkCache(
+            tau_trunk=args.tau_trunk,
+            admission=make_cache_admission(args.cache_admission, **kw))
+    policy = (PadAwarePolicy(hold_ticks=args.hold_ticks)
+              if args.policy == "pad_aware" else args.policy)
     sched = engine.streaming_scheduler(
         slice_steps=args.slice_steps, max_wait_ticks=args.max_wait_ticks,
-        trunk_cache=cache, packed=not args.per_group)
+        trunk_cache=cache, packed=not args.per_group, policy=policy)
 
     t0 = time.time()
     done, now, i = [], 0.0, 0
@@ -102,13 +111,16 @@ def run_streaming(engine, prompts, args):
           f"{s['queue_depth_mean']:.1f}")
     print(f"launches per tick  = {s['launches_per_tick']:.2f} "
           f"({'per-group' if args.per_group else 'packed'}, "
-          f"pad waste {s['pad_waste']:.1%})")
+          f"policy {args.policy}, pad waste {s['pad_waste']:.1%})")
     if cache is not None:
         print(f"trunk cache        = {hits} hit requests, "
               f"{s['cache_hits']:.0f} group hits "
-              f"(rate {s['cache_hit_rate']:.0%}), "
+              f"({s['cache_exact_hits']:.0f} exact, "
+              f"rate {s['cache_hit_rate']:.0%}), "
               f"NFE saved {s['nfe_saved_cache']:.0f}, "
               f"{s['cache_entries']:.0f} entries / {s['cache_bytes']:.0f} B")
+        print(f"cache admission    = {args.cache_admission}, "
+              f"{s['cache_admission_rejects']:.0f} store rejects")
 
 
 def main():
@@ -137,10 +149,27 @@ def main():
                     help="disable packed tick execution (one denoiser "
                          "launch per group per tick instead of one per "
                          "pack bucket; streaming mode)")
+    ap.add_argument("--policy", choices=["eager", "pad_aware"],
+                    default="eager",
+                    help="launch policy (streaming mode): eager launches "
+                         "sub-full groups at max-wait; pad_aware holds "
+                         "them inside a deadline-safe window to fill "
+                         "branch rows before padding them")
+    ap.add_argument("--hold-ticks", type=int, default=2,
+                    help="extra ticks pad_aware may hold a sub-full "
+                         "group past max-wait")
     ap.add_argument("--trunk-cache", action="store_true",
                     help="cross-batch semantic trunk cache")
     ap.add_argument("--tau-trunk", type=float, default=0.95,
                     help="cosine threshold for trunk-cache hits")
+    ap.add_argument("--cache-admission", choices=["always", "popularity"],
+                    default="always",
+                    help="trunk-cache store policy: always (LRU) or "
+                         "popularity (store on Nth demand hit, evict "
+                         "cold entries first)")
+    ap.add_argument("--popularity-threshold", type=int, default=2,
+                    help="demand hits a centroid key needs before its "
+                         "trunk earns cache bytes (popularity admission)")
     ap.add_argument("--themes", type=int, default=0,
                     help="draw prompts from this many repeated themes "
                          "(0 = all distinct) — repeated themes are what "

@@ -265,6 +265,18 @@ def branch_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
     return carry
 
 
+def phase_split(total_steps: int, beta: float) -> Tuple[int, int]:
+    """THE branch-point rule, in one place: share-ratio bucket ``beta``
+    splits ``total_steps`` into ``(n_shared, n_branch)`` with
+    ``n_branch = round(T * (1 - beta))``.  Every consumer — the streaming
+    launch path, ``run_batch``'s beta buckets, and the trunk-cache
+    ``beta_bucket`` compatibility key — derives its phase lengths here,
+    so the split can never diverge between them (it is the bucket
+    signature the packed ``run_batch`` path keys its segments on)."""
+    n_branch = int(round(total_steps * (1.0 - beta)))
+    return total_steps - n_branch, n_branch
+
+
 def shared_phase_nfe(K: int, n_steps: int) -> float:
     """Denoiser evals for ``n_steps`` shared steps: the CFG pair per group."""
     return 2.0 * K * n_steps

@@ -1,5 +1,9 @@
 from repro.serving.engine import Completed, SageServingEngine
 from repro.serving.packing import PackKey, build_packs
+from repro.serving.policies import (AdmitAll, CacheAdmission, EagerPolicy,
+                                    LaunchContext, LaunchPolicy,
+                                    PadAwarePolicy, PopularityAdmission,
+                                    make_cache_admission, make_launch_policy)
 from repro.serving.scheduler import RequestScheduler
 from repro.serving.shared_prefill import group_requests, shared_prefix_prefill
 from repro.serving.trunk_cache import TrunkCache, TrunkEntry

@@ -43,11 +43,15 @@ class SageServingEngine:
                  branch_buckets: Sequence[float] = (0.2, 0.3, 0.4),
                  seed: int = 0, attn_impl: Optional[str] = None,
                  step_impl: Optional[str] = None,
-                 kernel_interpret: Optional[str] = None):
+                 kernel_interpret: Optional[str] = None,
+                 policy: str = "eager"):
         """attn_impl / step_impl / kernel_interpret override the kernel
         backend knobs of model_cfg / sage (see repro.kernels.dispatch):
         attn_impl="pallas" + step_impl="fused" runs the whole sampling hot
-        path on the Pallas kernels."""
+        path on the Pallas kernels.  ``policy`` is the launch policy
+        (``serving.policies``) inherited by :meth:`streaming_scheduler`;
+        the synchronous :meth:`step` path has no arrivals to hold for, so
+        the policy only matters for streaming."""
         if attn_impl is not None:
             model_cfg = config_replace(model_cfg, attn_impl=attn_impl)
         if kernel_interpret is not None:
@@ -66,11 +70,12 @@ class SageServingEngine:
         self.group_size = group_size
         self.branch_buckets = branch_buckets
         self.seed = seed
+        self.policy = policy
         self.queue: List[str] = []
         self.scheduler = RequestScheduler(
             model_cfg, sage, dit_params, text_params, text_cfg,
             vae_params=vae_params, sched=self.sched, group_size=group_size,
-            branch_buckets=branch_buckets, seed=seed)
+            branch_buckets=branch_buckets, policy=policy, seed=seed)
 
     # ------------------------------------------------------------------
     def submit(self, prompts: Sequence[str]) -> None:
@@ -93,6 +98,7 @@ class SageServingEngine:
         (arrival-driven ticks + optional cross-batch trunk cache); the
         engine's own synchronous scheduler and stats are untouched."""
         kw.setdefault("seed", self.seed)
+        kw.setdefault("policy", self.policy)
         return RequestScheduler(
             self.cfg, self.sage, self.dit_params, self.text_params,
             self.text_cfg, vae_params=self.vae_params, sched=self.sched,

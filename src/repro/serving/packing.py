@@ -17,12 +17,25 @@ phase call:
   ``branch`` rows under per-member conditioning (different call graphs);
 * ``sampler`` — constant per scheduler, kept in the key as documentation
   (a multi-config front-end would shard on it);
-* ``beta``    — the share-ratio bucket (schedule bucket identity; also
-  constant-folds the remaining-step arithmetic below);
 * ``shape``   — the latent shape (constant per scheduler, as above);
 * ``n_steps`` — the segment length every row advances this tick,
   ``min(slice_steps, steps remaining in the phase)``, so no group is
   dragged past its phase boundary by a pack-mate.
+
+The share-ratio bucket (beta) is deliberately NOT part of the signature:
+it only determines a group's branch point, which already rides in the
+per-row ``step_idx``/``fork_idx`` vectors — groups from different beta
+buckets whose segments line up share one launch (this is what lets
+``RequestScheduler.run_batch`` issue ONE stacked launch per phase per
+tick across its beta buckets instead of one per bucket).
+
+``build_packs(..., align_phases=True)`` additionally aligns the segment
+length *within each phase* to the minimum steps remaining among that
+phase's groups, collapsing the signature space to at most one bucket per
+phase per tick — the synchronous ``run_batch`` drain uses this (it has no
+arrival latency to protect, so maximal stacking is free); the streaming
+tick loop keeps fixed ``slice_steps`` segments so a long phase cannot
+starve the tick cadence.
 
 One bucket becomes ONE ``shared_phase``/``branch_phase`` call over a
 stacked :class:`~repro.core.shared_sampling.SampleCarry`: per-row
@@ -49,7 +62,7 @@ Groups are duck-typed: anything with ``carry`` / ``cbar`` / ``cond_flat``
 """
 from __future__ import annotations
 
-from typing import Dict, List, NamedTuple, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -61,29 +74,53 @@ class PackKey(NamedTuple):
     """Pack-compatibility signature (see module docstring for the rules)."""
     phase: str                  # "shared" | "branch"
     sampler: str
-    beta: float                 # share-ratio bucket, rounded
     shape: Tuple[int, ...]      # latent (H, W, C)
     n_steps: int                # segment length this tick
 
 
-def pack_signature(g, slice_steps: int, total_steps: int, sampler: str,
-                   shape: Tuple[int, ...]) -> PackKey:
-    """The signature under which group ``g`` may share a launch this tick."""
+def phase_remaining(g, total_steps: int) -> int:
+    """Steps left in group ``g``'s current phase."""
     limit = g.n_shared if g.state == "shared" else total_steps
-    s = min(slice_steps, limit - g.steps_done)
-    return PackKey(g.state, sampler, round(g.beta, 4), tuple(shape), s)
+    return limit - g.steps_done
+
+
+def pack_signature(g, slice_steps: int, total_steps: int, sampler: str,
+                   shape: Tuple[int, ...],
+                   n_steps: Optional[int] = None) -> PackKey:
+    """The signature under which group ``g`` may share a launch this tick.
+
+    ``n_steps`` overrides the per-group ``min(slice_steps, remaining)``
+    segment rule — :func:`build_packs` passes the phase-aligned length
+    under ``align_phases``."""
+    if n_steps is None:
+        n_steps = min(slice_steps, phase_remaining(g, total_steps))
+    return PackKey(g.state, sampler, tuple(shape), n_steps)
 
 
 def build_packs(groups: Sequence, slice_steps: int, total_steps: int,
-                sampler: str, shape: Tuple[int, ...]
-                ) -> List[Tuple[PackKey, List]]:
+                sampler: str, shape: Tuple[int, ...],
+                align_phases: bool = False) -> List[Tuple[PackKey, List]]:
     """Bucket in-flight groups by pack signature (insertion-ordered, so
     the earliest-deadline-first sort of the caller is preserved within
-    and across buckets)."""
+    and across buckets).
+
+    ``align_phases=True`` sets every group's segment length to the
+    minimum steps remaining among its phase-mates (still capped by
+    ``slice_steps``), so each phase collapses to ONE bucket — no group is
+    dragged past its phase boundary, groups merely stop together at the
+    earliest one.  The synchronous ``run_batch`` drain uses this to issue
+    one stacked launch per phase per tick across beta buckets.
+    """
+    phase_steps: Dict[str, int] = {}
+    if align_phases:
+        for g in groups:
+            r = min(slice_steps, phase_remaining(g, total_steps))
+            phase_steps[g.state] = min(phase_steps.get(g.state, r), r)
     packs: Dict[PackKey, List] = {}
     for g in groups:
         packs.setdefault(
-            pack_signature(g, slice_steps, total_steps, sampler, shape),
+            pack_signature(g, slice_steps, total_steps, sampler, shape,
+                           n_steps=phase_steps.get(g.state)),
             []).append(g)
     return list(packs.items())
 

@@ -1,0 +1,296 @@
+"""Admission & launch policies — WHEN work enters the engine, in one place.
+
+PR 4 made packed ticks bitwise-exact but left launch order naive: a group
+launches the moment it is full, has waited ``max_wait_ticks``, or is under
+deadline pressure, regardless of what that does to pack shape.  Under
+staggered arrivals that eagerness is exactly wrong — branch rows go out
+padded to the static width N while compatible requests sit in the queue,
+so ``summary()['pad_waste']`` is pure overhead and every sub-full group
+opens a fresh pack bucket (one more denoiser launch per tick).  "Reusing
+Computation in Text-to-Image Diffusion for Efficient Generation of Image
+Sets" (arXiv 2508.21032) makes the same observation for cross-query
+reuse: the wins only compound when admission is batch-aware.
+
+This module concentrates those decisions behind two small interfaces so
+the scheduler and the trunk cache stay mechanism, not policy:
+
+* :class:`LaunchPolicy` — which *open* groups launch this tick, and in
+  what order.  :class:`EagerPolicy` is the PR-4 behavior, kept as the
+  conformance oracle; :class:`PadAwarePolicy` delays sub-full launches up
+  to a deadline-safe hold window and orders releases so rows fill
+  *existing* :class:`~repro.serving.packing.PackKey` buckets before
+  opening new ones.
+* :class:`CacheAdmission` — which completed trunks a
+  :class:`~repro.serving.trunk_cache.TrunkCache` stores, and which entry
+  it evicts first.  :class:`AdmitAll` is the PR-3 behavior (store
+  everything, evict LRU); :class:`PopularityAdmission` only stores trunks
+  whose quantized-centroid popularity count has crossed a threshold, and
+  evicts cold entries first — a one-hit-wonder filter, the same shape as
+  TinyLFU-style admission in front of an LRU.
+
+Policies see the scheduler only through :class:`LaunchContext` (and the
+cache only through quantized keys), so they are testable in isolation and
+a new policy cannot reach into engine state.
+
+Invariants every launch policy must preserve (enforced by
+``tests/test_scheduler_fuzz.py`` and the conformance equivalence case):
+
+* conservation — a policy chooses *when*, never *whether*: every open
+  group must eventually launch once its hold budget or deadline window is
+  exhausted;
+* deadline safety — a hold may never cause a deadline miss: holding is
+  only allowed while ``earliest_deadline > now + deadline_slack +
+  ticks_to_finish`` (the conservative segment count a group needs to
+  finish, assuming the virtual-time convention of ~1 ``now`` unit per
+  tick — with a wall clock the eager urgency rule still backstops);
+* NFE accounting is policy-invariant — launching later can merge arrivals
+  into fuller groups (that is the point: fewer padded rows, fewer
+  buckets, and never *more* NFE than eager), but the per-group accounting
+  rules are identical, so with equal group compositions the completions
+  are bitwise identical to eager.
+"""
+from __future__ import annotations
+
+from typing import (Any, Callable, Dict, FrozenSet, List, NamedTuple,
+                    Optional, Protocol, Sequence, Tuple, Union,
+                    runtime_checkable)
+
+from repro.serving.packing import PackKey
+
+
+class LaunchContext(NamedTuple):
+    """Read-only tick snapshot a :class:`LaunchPolicy` decides from.
+
+    ``signature_of`` maps an *open* group to the :class:`PackKey` it would
+    occupy if launched this tick (the scheduler computes it from the
+    group's would-be beta bucket); ``inflight_signatures`` are the buckets
+    the already-in-flight groups occupy this tick — a launch whose
+    signature is in that set rides an existing launch for free.
+    ``ticks_to_finish`` is the conservative number of ticks a freshly
+    launched group needs to complete (``ceil(T / slice_steps) + 1``, the
+    fork boundary can cost one extra segment).
+    """
+    now: float
+    tick: int
+    group_size: int
+    max_wait_ticks: int
+    deadline_slack: float
+    ticks_to_finish: int
+    inflight_signatures: FrozenSet[PackKey]
+    signature_of: Callable[[Any], PackKey]
+
+
+# -- per-group predicates (shared by every policy) ---------------------------
+
+def is_full(g, ctx: LaunchContext) -> bool:
+    return len(g.members) >= ctx.group_size
+
+
+def wait_ticks(g, ctx: LaunchContext) -> int:
+    return ctx.tick - g.created_tick
+
+
+def is_urgent(g, ctx: LaunchContext) -> bool:
+    """The eager deadline trigger: already inside the slack window."""
+    return g.earliest_deadline() <= ctx.now + ctx.deadline_slack
+
+
+def deadline_safe_to_hold(g, ctx: LaunchContext) -> bool:
+    """A hold is safe iff the group can still launch next tick and finish
+    before its earliest deadline (1 tick per ``now`` unit)."""
+    return (g.earliest_deadline()
+            > ctx.now + ctx.deadline_slack + ctx.ticks_to_finish)
+
+
+@runtime_checkable
+class LaunchPolicy(Protocol):
+    """Which open groups launch this tick, in launch order."""
+
+    name: str
+
+    def launches(self, open_groups: Sequence[Any],
+                 ctx: LaunchContext) -> List[Any]:
+        ...
+
+
+class EagerPolicy:
+    """PR-4 behavior, kept as the oracle: launch the moment a group is
+    full, has waited ``max_wait_ticks``, or is under deadline pressure —
+    in open-group (creation) order."""
+
+    name = "eager"
+
+    def launches(self, open_groups: Sequence[Any],
+                 ctx: LaunchContext) -> List[Any]:
+        return [g for g in open_groups
+                if is_full(g, ctx)
+                or wait_ticks(g, ctx) >= ctx.max_wait_ticks
+                or is_urgent(g, ctx)]
+
+
+class PadAwarePolicy:
+    """Hold sub-full groups, fill existing pack buckets first.
+
+    Relative to :class:`EagerPolicy`, only the ``max_wait_ticks`` trigger
+    changes — full and deadline-urgent groups launch identically.  A
+    sub-full group that has exhausted ``max_wait_ticks`` is *held* for up
+    to ``hold_ticks`` extra ticks so late theme-mates can still join (the
+    rows it would otherwise pad), unless one of three releases fires
+    first:
+
+    * **deadline-unsafe** — holding one more tick could miss the earliest
+      member deadline (see :func:`deadline_safe_to_hold`); launch now;
+    * **bucket fill** — the group's would-be :class:`PackKey` matches a
+      bucket the in-flight groups already occupy this tick, so launching
+      adds rows to an existing denoiser launch instead of opening a new
+      one; holding buys nothing on the launch axis, so release;
+    * **hold expiry** — ``wait_ticks >= max_wait_ticks + hold_ticks``.
+
+    Returned launch order: full / urgent groups first (they were never
+    held), then bucket-filling releases, then expiry releases — existing
+    buckets fill before new ones open.
+    """
+
+    def __init__(self, hold_ticks: int = 2):
+        if hold_ticks < 0:
+            raise ValueError(f"hold_ticks must be >= 0, got {hold_ticks}")
+        self.hold_ticks = hold_ticks
+
+    name = "pad_aware"
+
+    def launches(self, open_groups: Sequence[Any],
+                 ctx: LaunchContext) -> List[Any]:
+        now, fills, expired = [], [], []
+        for g in open_groups:
+            if is_full(g, ctx) or is_urgent(g, ctx):
+                now.append(g)
+            elif wait_ticks(g, ctx) >= ctx.max_wait_ticks:
+                if not deadline_safe_to_hold(g, ctx):
+                    now.append(g)
+                elif ctx.signature_of(g) in ctx.inflight_signatures:
+                    fills.append(g)
+                elif (wait_ticks(g, ctx)
+                      >= ctx.max_wait_ticks + self.hold_ticks):
+                    expired.append(g)
+        return now + fills + expired
+
+
+_LAUNCH_POLICIES: Dict[str, Callable[[], LaunchPolicy]] = {
+    "eager": EagerPolicy,
+    "pad_aware": PadAwarePolicy,
+}
+
+
+def make_launch_policy(spec: Union[str, LaunchPolicy, None],
+                       **kw) -> LaunchPolicy:
+    """Resolve a policy name (``"eager"`` / ``"pad_aware"``) or pass an
+    instance through; ``kw`` goes to the named constructor."""
+    if spec is None:
+        return EagerPolicy()
+    if isinstance(spec, str):
+        if spec not in _LAUNCH_POLICIES:
+            raise ValueError(f"unknown launch policy {spec!r}; "
+                             f"have {sorted(_LAUNCH_POLICIES)}")
+        return _LAUNCH_POLICIES[spec](**kw)
+    return spec
+
+
+# -- trunk-cache admission ---------------------------------------------------
+
+@runtime_checkable
+class CacheAdmission(Protocol):
+    """Store/evict policy for :class:`~repro.serving.trunk_cache.TrunkCache`.
+
+    ``on_lookup`` is called once per cache lookup with the requester's
+    quantized key — BOTH the exact-key path and the cosine-scan path, hit
+    or miss — so popularity counts measure *demand*, not residency.
+    ``admit`` gates ``insert``; ``victim`` picks which key the byte budget
+    evicts first (``keys`` iterates in LRU → MRU order).
+    """
+
+    name: str
+
+    def on_lookup(self, key: Tuple) -> None: ...
+
+    def admit(self, key: Tuple) -> bool: ...
+
+    def victim(self, keys: Sequence[Tuple]) -> Optional[Tuple]: ...
+
+
+class AdmitAll:
+    """PR-3 behavior: store every completed trunk, evict plain LRU."""
+
+    name = "always"
+
+    def on_lookup(self, key: Tuple) -> None:
+        pass
+
+    def admit(self, key: Tuple) -> bool:
+        return True
+
+    def victim(self, keys: Sequence[Tuple]) -> Optional[Tuple]:
+        for k in keys:                      # first = least recently used
+            return k
+        return None
+
+
+class PopularityAdmission:
+    """Only store trunks whose quantized-centroid key has been *asked for*
+    at least ``threshold`` times; evict cold entries first.
+
+    The count is demand-side: every :meth:`TrunkCache.lookup` ticks the
+    requester's key (the satellite fix routes the exact-key hit path
+    through this counter too), so a theme must recur before its trunk
+    earns bytes — one-hit wonders never displace hot entries.  Eviction
+    inverts the same signal: the victim is the stored key with the lowest
+    popularity, ties broken LRU-first.  Counts survive eviction (they
+    measure the *stream*, not the cache), bounded by ``max_keys`` with
+    drop-coldest-half pruning so a long-lived server cannot grow counter
+    state without bound.
+    """
+
+    def __init__(self, threshold: int = 2, max_keys: int = 65_536):
+        if threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {threshold}")
+        self.threshold = threshold
+        self.max_keys = max_keys
+        self.counts: Dict[Tuple, int] = {}
+
+    name = "popularity"
+
+    def on_lookup(self, key: Tuple) -> None:
+        self.counts[key] = self.counts.get(key, 0) + 1
+        if len(self.counts) > self.max_keys:
+            keep = sorted(self.counts.items(), key=lambda kv: -kv[1])
+            self.counts = dict(keep[:self.max_keys // 2])
+
+    def admit(self, key: Tuple) -> bool:
+        return self.counts.get(key, 0) >= self.threshold
+
+    def victim(self, keys: Sequence[Tuple]) -> Optional[Tuple]:
+        best, best_count = None, None
+        for k in keys:                      # LRU -> MRU: ties stay LRU
+            c = self.counts.get(k, 0)
+            if best is None or c < best_count:
+                best, best_count = k, c
+        return best
+
+
+_CACHE_ADMISSIONS: Dict[str, Callable[..., CacheAdmission]] = {
+    "always": AdmitAll,
+    "popularity": PopularityAdmission,
+}
+
+
+def make_cache_admission(spec: Union[str, CacheAdmission, None],
+                         **kw) -> CacheAdmission:
+    """Resolve an admission name (``"always"`` / ``"popularity"``) or pass
+    an instance through; ``kw`` goes to the named constructor."""
+    if spec is None:
+        return AdmitAll()
+    if isinstance(spec, str):
+        if spec not in _CACHE_ADMISSIONS:
+            raise ValueError(f"unknown cache admission {spec!r}; "
+                             f"have {sorted(_CACHE_ADMISSIONS)}")
+        return _CACHE_ADMISSIONS[spec](**kw)
+    return spec

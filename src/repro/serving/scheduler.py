@@ -7,8 +7,13 @@ the serving loop as repeated **ticks** over in-flight groups:
 
 * **admission** — arriving requests join an *open* group via
   ``grouping.incremental_assign`` (edge to every member, the same clique
-  invariant as batch grouping) or seed a new one; groups launch when full,
-  when they have waited ``max_wait_ticks``, or under deadline pressure;
+  invariant as batch grouping) or seed a new one; WHEN an open group
+  launches is delegated to a pluggable ``serving.policies.LaunchPolicy``
+  — ``"eager"`` (default oracle: full / ``max_wait_ticks`` / deadline
+  pressure) or ``"pad_aware"`` (holds sub-full groups inside a
+  deadline-safe window and fills existing pack buckets before opening new
+  ones, trading a bounded launch delay for less pad waste and fewer
+  launches per tick);
 * **advance** — every in-flight group moves ``slice_steps`` sampler steps
   per tick through the resumable segment API
   (``core.shared_sampling.shared_phase`` / ``branch_phase`` over an
@@ -34,8 +39,9 @@ the serving loop as repeated **ticks** over in-flight groups:
   and queue depth.
 
 The synchronous engine is literally a special case: :meth:`run_batch`
-drains one prompt list through greedy-clique grouping and whole-phase
-segments (slice = phase length, no arrivals, no cache), which is what
+drains one prompt list through greedy-clique grouping and phase-aligned
+packed segments (ONE stacked launch per phase per tick across all beta
+buckets, no arrivals, no cache), which is what
 ``SageServingEngine.step()`` now delegates to.
 
 Time is injectable: every ``submit``/``tick`` takes ``now`` (any
@@ -48,7 +54,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -59,11 +65,13 @@ from repro.core import grouping
 from repro.core.schedule import Schedule, make_schedule
 from repro.core.shared_sampling import (SampleCarry, branch_phase,
                                         branch_phase_nfe, fork_carry,
-                                        group_mean, init_carry, shared_phase,
-                                        shared_phase_nfe)
+                                        group_mean, init_carry, phase_split,
+                                        shared_phase, shared_phase_nfe)
 from repro.models import dit, vae as vae_lib
 from repro.models import text_encoder as te
 from repro.serving import packing
+from repro.serving.policies import (LaunchContext, LaunchPolicy,
+                                    make_launch_policy)
 from repro.serving.trunk_cache import TrunkCache, TrunkEntry
 
 
@@ -130,6 +138,7 @@ class RequestScheduler:
                  trunk_cache: Optional[TrunkCache] = None,
                  max_groups_per_tick: Optional[int] = None,
                  packed: bool = True,
+                 policy: Union[str, LaunchPolicy, None] = "eager",
                  seed: int = 0):
         """``group_size`` is the packed width N (static sampler shape);
         ``group_max`` caps clique size during batch grouping and defaults
@@ -137,7 +146,14 @@ class RequestScheduler:
         multiple packed rows.  ``packed`` gathers pack-compatible
         in-flight groups into one denoiser launch per tick (see
         ``serving.packing``); ``packed=False`` advances each group with
-        its own launch — same results bitwise, G× the launches."""
+        its own launch — same results bitwise, G× the launches.
+        ``policy`` picks the launch policy (``serving.policies``):
+        ``"eager"`` (default, the PR-4 oracle) launches a group the moment
+        it is full / has waited ``max_wait_ticks`` / is deadline-urgent;
+        ``"pad_aware"`` holds sub-full groups up to a deadline-safe window
+        and fills existing pack buckets before opening new ones (a
+        :class:`~repro.serving.policies.LaunchPolicy` instance also
+        works, e.g. ``PadAwarePolicy(hold_ticks=4)``)."""
         if group_size < 1:
             raise ValueError(f"group_size must be >= 1, got {group_size}")
         if slice_steps < 1:
@@ -158,7 +174,13 @@ class RequestScheduler:
         self.trunk_cache = trunk_cache
         self.max_groups_per_tick = max_groups_per_tick
         self.packed = packed
+        self.policy = make_launch_policy(policy)
         self.key = jax.random.PRNGKey(seed)
+        # init noise is drawn per-gid from a fixed key, NOT from a key that
+        # advances per launch: a group's trajectory then depends only on
+        # its identity, never on launch order or timing — which is what
+        # makes launch *policies* output-invariant for equal compositions
+        self._launch_key = jax.random.fold_in(self.key, 0x5A9E)
 
         self.arrivals: List[Request] = []      # embedded, awaiting admission
         self.open_groups: List[_Group] = []
@@ -313,11 +335,12 @@ class RequestScheduler:
         return self._beta_bucket(
             self._min_sim(grouping.similarity_matrix(e)), adaptive)
 
-    def _launch(self, g: _Group, now: float, adaptive: bool) -> None:
+    def _launch(self, g: _Group, now: float, adaptive: bool,
+                beta: Optional[float] = None) -> None:
         T = self.sage.total_steps
-        g.beta = self._group_beta(g.members, adaptive)
-        Ts = int(round(T * (1.0 - g.beta)))
-        g.n_shared = T - Ts
+        g.beta = self._group_beta(g.members, adaptive) if beta is None \
+            else beta
+        g.n_shared, _ = phase_split(T, g.beta)
         N = len(g.members)
         cond = jnp.asarray(np.stack([m.cond for m in g.members]))
         g.cond_flat = cond                              # (N, Lc, dc)
@@ -344,8 +367,7 @@ class RequestScheduler:
             g.cache_hit = True
             self.stats["nfe_saved_cache"] += shared_phase_nfe(1, g.n_shared)
         else:
-            self.key, rng = jax.random.split(self.key)
-            rng = jax.random.fold_in(rng, g.gid)
+            rng = jax.random.fold_in(self._launch_key, g.gid)
             g.carry = init_carry(rng, 1, self._latent_shape)
             if g.n_shared == 0:
                 g.carry = fork_carry(g.carry, N)
@@ -402,7 +424,9 @@ class RequestScheduler:
             self._count_launch(len(g.members), 0)
         self._after_segment(g, s)
 
-    def _advance_packed(self, todo: List[_Group]) -> None:
+    def _advance_packed(self, todo: List[_Group],
+                        slice_steps: Optional[int] = None,
+                        align_phases: bool = False) -> None:
         """One tick of packed execution: bucket the in-flight groups by
         pack signature, advance each bucket with ONE phase call over a
         stacked carry (per-row step/fork indices), scatter back.  Buckets
@@ -411,12 +435,18 @@ class RequestScheduler:
         the per-group ordering.  Transitions (trunk-cache stores, forks,
         completions) run AFTER all buckets, in ``todo`` order, so the
         cache's insert/LRU-recency order is identical to per-group mode
-        even when a byte budget forces evictions."""
+        even when a byte budget forces evictions.
+
+        ``align_phases=True`` (the ``run_batch`` drain) aligns segment
+        lengths within each phase so every tick issues at most one
+        stacked launch per phase — see ``packing.build_packs``."""
         null = self._null_cond()
         seg_len: Dict[int, int] = {}
         for key, groups in packing.build_packs(
-                todo, self.slice_steps, self.sage.total_steps,
-                self.sage.sampler, self._latent_shape):
+                todo, self.slice_steps if slice_steps is None else
+                slice_steps, self.sage.total_steps,
+                self.sage.sampler, self._latent_shape,
+                align_phases=align_phases):
             s = key.n_steps
             if key.phase == "shared":
                 carry, cbar = packing.pack_shared(groups)
@@ -441,25 +471,57 @@ class RequestScheduler:
             return np.asarray(vae_lib.decode(self.vae_params, latents))
         return np.asarray(latents)
 
-    def _complete(self, g: _Group, now: float) -> List[Completed]:
+    def _complete(self, g: _Group, now: float,
+                  record_latency: bool = True) -> List[Completed]:
         imgs = self._decode(g.carry.z)
         self.stats["nfe"] += g.nfe
         self.stats["completed"] += len(g.members)
         done = []
         for i, r in enumerate(g.members):
-            lat = now - r.t_arrival
-            self.latencies.append(lat)
+            lat = now - r.t_arrival if record_latency else 0.0
+            if record_latency:
+                self.latencies.append(lat)
             done.append(Completed(
                 prompt=r.prompt, image=imgs[i], group_id=g.gid,
                 nfe_share=g.nfe / len(g.members), latency=lat,
                 cache_hit=g.cache_hit))
         return done
 
+    # -- launch-policy context -------------------------------------------
+    def _ticks_to_finish(self) -> int:
+        """Conservative ticks a freshly launched group needs to complete:
+        one segment per tick, plus one for the shared->branch boundary."""
+        return -(-self.sage.total_steps // self.slice_steps) + 1
+
+    def _open_signature(self, g: _Group, adaptive: bool) -> packing.PackKey:
+        """The pack bucket an OPEN group would occupy if launched this
+        tick (``policies.LaunchContext.signature_of``)."""
+        n_shared, _ = phase_split(self.sage.total_steps,
+                                  self._group_beta(g.members, adaptive))
+        limit = n_shared if n_shared > 0 else self.sage.total_steps
+        return packing.PackKey(
+            "shared" if n_shared > 0 else "branch", self.sage.sampler,
+            tuple(self._latent_shape), min(self.slice_steps, limit))
+
+    def _launch_context(self, now: float, adaptive: bool) -> LaunchContext:
+        return LaunchContext(
+            now=now, tick=self.ticks, group_size=self.group_size,
+            max_wait_ticks=self.max_wait_ticks,
+            deadline_slack=self.deadline_slack,
+            ticks_to_finish=self._ticks_to_finish(),
+            inflight_signatures=frozenset(
+                packing.pack_signature(
+                    g, self.slice_steps, self.sage.total_steps,
+                    self.sage.sampler, self._latent_shape)
+                for g in self.inflight),
+            signature_of=lambda g: self._open_signature(g, adaptive))
+
     # -- the tick --------------------------------------------------------
     def tick(self, now: Optional[float] = None,
              adaptive: Optional[bool] = None) -> List[Completed]:
-        """One engine iteration: admit arrivals, launch ready groups,
-        advance in-flight groups one segment each, emit completions."""
+        """One engine iteration: admit arrivals, launch the groups the
+        launch policy selects, advance in-flight groups one segment each,
+        emit completions."""
         now = self._now(now)
         adaptive = (self.sage.adaptive_branch if adaptive is None
                     else adaptive)
@@ -468,12 +530,9 @@ class RequestScheduler:
         self.queue_depth.append(
             sum(len(g.members) for g in self.open_groups))
 
-        for g in list(self.open_groups):
-            full = len(g.members) >= self.group_size
-            waited = self.ticks - g.created_tick >= self.max_wait_ticks
-            urgent = g.earliest_deadline() <= now + self.deadline_slack
-            if full or waited or urgent:
-                self._launch(g, now, adaptive)
+        ctx = self._launch_context(now, adaptive)
+        for g in self.policy.launches(list(self.open_groups), ctx):
+            self._launch(g, now, adaptive)
 
         # earliest deadline first, then launch order
         todo = sorted(self.inflight, key=lambda g: (g.earliest_deadline(),
@@ -518,88 +577,70 @@ class RequestScheduler:
                   adaptive: Optional[bool] = None) -> List[Completed]:
         """Drain one prompt list synchronously — the old engine semantics
         as a special case of the segment machinery: greedy-clique grouping
-        over the whole batch, per-group beta buckets (one packed sampler
-        call per bucket), whole-phase segments, no arrivals, no trunk
-        cache.  ``SageServingEngine.step()`` delegates here."""
+        over the whole batch, per-group beta buckets, no arrivals, no
+        trunk cache.  ``SageServingEngine.step()`` delegates here.
+
+        Execution routes through ``serving.packing`` with phase-aligned
+        segments: every drain tick issues ONE stacked launch per phase
+        across ALL beta buckets (beta is per-row data — ``step_idx`` /
+        ``fork_idx`` — not a pack-compatibility axis), instead of the old
+        one-shared-plus-one-branch launch *per bucket*.  NFE accounting is
+        unchanged: pad rows ride the pad-waste ledger, never NFE."""
         if not prompts:
             return []
         now = self._now(None)
         adaptive = (self.sage.adaptive_branch if adaptive is None
                     else adaptive)
-        T = self.sage.total_steps
         conds, pooled = self._embed(prompts)
         sim = grouping.similarity_matrix(pooled)
-        groups = grouping.greedy_clique_groups(
+        cliques = grouping.greedy_clique_groups(
             sim, self.sage.tau_min, group_max=self.group_max)
         self.stats["requests"] += len(prompts)
-        self.stats["nfe_independent"] += 2.0 * len(prompts) * T
 
-        # per-group beta bucket (satellite fix: a singleton's pinned 1.0
-        # min-sim no longer drags every other group's bucket), then one
-        # packed sampler call per bucket.
-        def beta_of(g: List[int]) -> float:
-            return self._beta_bucket(self._min_sim(sim[np.ix_(g, g)]),
-                                     adaptive)
+        # one _Group per packed row (a clique larger than N occupies
+        # multiple rows in flatten_groups order); every row inherits its
+        # clique's beta bucket — per-clique, not batch-mean (a singleton's
+        # pinned 1.0 min-sim must not drag other cliques' buckets)
+        batch: List[_Group] = []
+        cache, self.trunk_cache = self.trunk_cache, None   # sync: no cache
+        try:
+            for clique in cliques:
+                beta = self._beta_bucket(
+                    self._min_sim(sim[np.ix_(clique, clique)]), adaptive)
+                for row in grouping.flatten_groups([clique],
+                                                   self.group_size):
+                    members = []
+                    for m in row:
+                        members.append(Request(self._next_rid, prompts[m],
+                                               now, None, conds[m],
+                                               pooled[m]))
+                        self._next_rid += 1
+                    g = _Group(self._next_gid, members,
+                               created_tick=self.ticks)
+                    self._next_gid += 1
+                    self.open_groups.append(g)
+                    self._launch(g, now, adaptive, beta=beta)
+                    batch.append(g)
 
-        buckets: Dict[float, List[List[int]]] = {}
-        for g in groups:
-            buckets.setdefault(beta_of(g), []).append(g)
-
-        self.key, rng = jax.random.split(self.key)
-        null = self._null_cond()
-        done: List[Completed] = []
-        for bi, (beta, bgroups) in enumerate(sorted(buckets.items())):
-            Ts = int(round(T * (1.0 - beta)))
-            n_shared = T - Ts
-            # flattened packing: a clique larger than N occupies multiple
-            # rows, so completions map from the *flat* rows, not the
-            # original groups (satellite fix)
-            flat = grouping.flatten_groups(bgroups, self.group_size)
-            idx, mask = grouping.pad_groups(bgroups, self.group_size)
-            K, N = idx.shape
-            cond_packed = jnp.asarray(conds)[idx.reshape(-1)].reshape(
-                K, N, *conds.shape[1:])
-            mask_j = jnp.asarray(mask)
-
-            carry = init_carry(jax.random.fold_in(rng, bi), K,
-                               self._latent_shape)
-            cbar = group_mean(cond_packed, mask_j)
-            if n_shared > 0:
-                carry = self._shared_runner(n_shared)(carry, cbar, null)
-                self._count_launch(K, 0)
-            carry = fork_carry(carry, N)
-            cm = cond_packed.reshape(K * N, *cond_packed.shape[2:])
-            if Ts > 0:
-                carry = self._branch_runner(Ts)(
-                    carry, cm, mask_j, null, jnp.int32(n_shared))
-                self._count_launch(K * N,
-                                   K * N - sum(len(r) for r in flat))
-
-            nfe = float(shared_phase_nfe(K, n_shared)
-                        + branch_phase_nfe(mask_j, Ts,
-                                           self.sage.shared_uncond_cfg))
-            self.stats["nfe"] += nfe
-            self.stats["completed"] += sum(len(r) for r in flat)
-            imgs = self._decode(carry.z).reshape(K, N, *self._decode_shape())
-            per_req = nfe / sum(len(r) for r in flat)
-            for k, row in enumerate(flat):
-                for n, m in enumerate(row):
-                    done.append(Completed(
-                        prompt=prompts[m], image=imgs[k, n],
-                        group_id=self._next_gid + k, nfe_share=per_req))
-            self._next_gid += K
+            done: List[Completed] = []
+            live = list(batch)
+            # NOTE: the drain deliberately does NOT advance self.ticks —
+            # wait counters of any STREAMING open groups on this
+            # scheduler are measured in ticks, and a sync drain must not
+            # age them toward a padded force-launch
+            while live:
+                self._advance_packed(live,
+                                     slice_steps=self.sage.total_steps,
+                                     align_phases=True)
+                for g in list(live):
+                    if g.state == "done":
+                        done.extend(self._complete(g, now,
+                                                   record_latency=False))
+                        live.remove(g)
+                        self.inflight.remove(g)
+        finally:
+            self.trunk_cache = cache
         return done
-
-    def _decode_shape(self) -> Tuple[int, ...]:
-        H, _, C = self._latent_shape
-        if self.vae_params is not None:
-            # VAE upsamples the latent grid; probe lazily and cache
-            if not hasattr(self, "_dec_shape"):
-                z = jnp.zeros((1,) + self._latent_shape)
-                self._dec_shape = tuple(
-                    np.asarray(vae_lib.decode(self.vae_params, z)).shape[1:])
-            return self._dec_shape
-        return self._latent_shape
 
     # -- reporting -------------------------------------------------------
     @property
@@ -638,7 +679,14 @@ class RequestScheduler:
                           if self.stats["pack_rows"] else 0.0),
         }
         if self.trunk_cache is not None:
+            # hit accounting is policy-visible: exact-key hits and
+            # admission rejections surface next to the hit rate so a
+            # mis-tuned PopularityAdmission threshold shows up here
+            # instead of as a silent hit-rate collapse
             out["cache_hits"] = self.trunk_cache.stats["hits"]
+            out["cache_exact_hits"] = self.trunk_cache.stats["exact_hits"]
+            out["cache_admission_rejects"] = \
+                self.trunk_cache.stats["admission_rejects"]
             out["cache_hit_rate"] = self.trunk_cache.hit_rate
             out["cache_entries"] = len(self.trunk_cache)
             out["cache_bytes"] = self.trunk_cache.bytes

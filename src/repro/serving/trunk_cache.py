@@ -28,18 +28,28 @@ Keying is two-level, like a prefix cache with fuzzy tags:
 * a linear cosine scan over the (small, byte-budgeted) entry set catches
   near-duplicates under ``tau_trunk``.
 
-Eviction is LRU under a byte budget, accounted with
-``kvcache.cache_bytes`` over the stored arrays.
+Storage and eviction are policy-driven (``serving.policies``): a
+:class:`~repro.serving.policies.CacheAdmission` object decides whether a
+completed trunk earns bytes at all (``PopularityAdmission`` only stores
+keys whose demand count crossed a threshold; rejections are counted in
+``stats['admission_rejects']``) and which entry the byte budget evicts
+first (cold-first under popularity, plain LRU under the default
+:class:`~repro.serving.policies.AdmitAll`).  Every ``lookup`` — exact-key
+hit, scan hit, or miss — ticks the requester's quantized key through
+``admission.on_lookup`` so the popularity signal measures demand, not
+residency (the exact-key path bypassing the counter was a bug).  Bytes
+are accounted with ``kvcache.cache_bytes`` over the stored arrays.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Hashable, Optional, Tuple
+from typing import Any, Hashable, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.serving.kvcache import cache_bytes
+from repro.serving.policies import CacheAdmission, make_cache_admission
 
 
 @dataclass
@@ -76,22 +86,30 @@ class TrunkCache:
 
     def __init__(self, tau_trunk: float = 0.95,
                  max_bytes: int = 64 * 1024 * 1024,
-                 quant_decimals: int = 2, store_history: bool = True):
+                 quant_decimals: int = 2, store_history: bool = True,
+                 admission: Union[str, CacheAdmission, None] = None):
         """``store_history=False`` drops the ``eps_prev`` array from stored
         entries (halving bytes per trunk, doubling capacity under the
         budget): the restore path *forks* — solver history restarts at the
         branch point — so the history is only needed if trunks are later
-        resumed mid-shared-phase rather than forked."""
+        resumed mid-shared-phase rather than forked.
+
+        ``admission`` is a :class:`~repro.serving.policies.CacheAdmission`
+        instance or name (``"always"`` — the default store-everything LRU,
+        or ``"popularity"`` — threshold admission + cold-first eviction).
+        """
         if not 0.0 < tau_trunk <= 1.0:
             raise ValueError(f"tau_trunk must be in (0, 1], got {tau_trunk}")
         self.tau_trunk = tau_trunk
         self.max_bytes = max_bytes
         self.quant_decimals = quant_decimals
         self.store_history = store_history
+        self.admission = make_cache_admission(admission)
         self._entries: "OrderedDict[Tuple, TrunkEntry]" = OrderedDict()
         self.bytes = 0
         self.stats = {"hits": 0, "exact_hits": 0, "misses": 0,
-                      "inserts": 0, "evictions": 0, "overwrites": 0}
+                      "inserts": 0, "evictions": 0, "overwrites": 0,
+                      "admission_rejects": 0}
 
     # ------------------------------------------------------------------
     def _quant_key(self, centroid: np.ndarray, beta_bucket: float,
@@ -107,6 +125,10 @@ class TrunkCache:
         """Best compatible entry with cosine >= tau_trunk, else None."""
         c = _unit(centroid)
         key = self._quant_key(centroid, beta_bucket, cfg_key, shape)
+        # demand signal first, on EVERY lookup path — the exact-key hit
+        # below must not bypass the popularity counter (hit accounting is
+        # policy-visible: see stats['admission_rejects'] / summary())
+        self.admission.on_lookup(key)
         hit = self._entries.get(key)
         # quantization is coarser than tau_trunk can be (each component
         # rounds by up to 0.5 * 10^-quant_decimals), so an exact-key hit
@@ -131,14 +153,19 @@ class TrunkCache:
         return self._entries[best_key]
 
     def insert(self, entry: TrunkEntry,
-               shape: Optional[Tuple[int, ...]] = None) -> None:
+               shape: Optional[Tuple[int, ...]] = None) -> bool:
+        """Store a completed trunk if the admission policy admits its key;
+        returns whether the entry was stored."""
         entry.centroid = _unit(entry.centroid)
         shape = shape if shape is not None else tuple(np.shape(entry.z))
+        key = self._quant_key(entry.centroid, entry.beta_bucket,
+                              entry.cfg_key, shape)
+        if not self.admission.admit(key):
+            self.stats["admission_rejects"] += 1
+            return False
         if not self.store_history and entry.eps_prev is not None:
             entry.eps_prev = None
             entry.nbytes = cache_bytes((entry.z,))
-        key = self._quant_key(entry.centroid, entry.beta_bucket,
-                              entry.cfg_key, shape)
         # overwrite of an existing exact key is evict-then-insert: the old
         # entry's bytes leave the ledger before the new entry's arrive, so
         # cache_bytes can never double-count a key (regression:
@@ -151,9 +178,11 @@ class TrunkCache:
         self.bytes += entry.nbytes
         self.stats["inserts"] += 1
         while self.bytes > self.max_bytes and len(self._entries) > 1:
-            _, evicted = self._entries.popitem(last=False)   # LRU end
+            victim = self.admission.victim(self._entries.keys())
+            evicted = self._entries.pop(victim)    # cold-first, or LRU end
             self.bytes -= evicted.nbytes
             self.stats["evictions"] += 1
+        return True
 
     # ------------------------------------------------------------------
     def ledger_bytes(self) -> int:

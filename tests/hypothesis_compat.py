@@ -1,16 +1,44 @@
-"""Soft hypothesis dependency for the test suite.
+"""Soft hypothesis dependency + example-budget profiles for the suite.
 
 A bare ``from hypothesis import ...`` fails collection of the whole module
 when hypothesis is absent (and module-scope ``pytest.importorskip`` would
 skip every test in it, deterministic ones included).  This shim keeps the
 deterministic cases runnable everywhere: when hypothesis is missing, only
 the ``@given`` property tests are skipped.
+
+Profiles (``HYPOTHESIS_PROFILE`` env var, used by ``nightly.yml``):
+
+* ``default`` — per-test ``@settings`` budgets as written;
+* ``nightly`` — every per-test ``max_examples`` is scaled by
+  ``NIGHTLY_SCALE`` and runs **derandomized** (seeded from the test
+  itself, so a nightly failure reproduces exactly).  The scaling lives
+  here, in the exported ``settings`` wrapper, because an explicit
+  per-test ``@settings(max_examples=...)`` would override any value a
+  registered profile supplied.
 """
+import os
+
 import pytest
 
+NIGHTLY_SCALE = 25
+_PROFILE = os.environ.get("HYPOTHESIS_PROFILE", "default")
+
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, strategies as st
+    from hypothesis import settings as _hp_settings
     HAVE_HYPOTHESIS = True
+
+    _hp_settings.register_profile("nightly", derandomize=True,
+                                  deadline=None, print_blob=True)
+    if _PROFILE != "default":
+        _hp_settings.load_profile(_PROFILE)
+    _SCALE = NIGHTLY_SCALE if _PROFILE == "nightly" else 1
+
+    def settings(*args, **kw):
+        if "max_examples" in kw:
+            kw["max_examples"] = int(kw["max_examples"] * _SCALE)
+        return _hp_settings(*args, **kw)
+
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
     _SKIP = pytest.mark.skip(reason="hypothesis not installed")

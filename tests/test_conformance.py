@@ -103,6 +103,53 @@ def test_packed_matches_per_group_bitwise(sampler, step_impl):
         assert a.group_id == b.group_id and a.nfe_share == b.nfe_share
 
 
+def _run_policy(sampler, step_impl, policy):
+    """Staggered-arrival policy trace: a full wave of three themed
+    prompts at t=1 (launches full under every policy), then a lone
+    straggler at t=2 that never fills its group — eager launches it at
+    ``max_wait_ticks``, pad_aware holds it ``hold_ticks`` longer before
+    the hold expires.  Same compositions either way, so outputs must be
+    bitwise identical (init noise is drawn per-gid, launch-time
+    independent)."""
+    sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                      tau_min=0.2, sampler=sampler, step_impl=step_impl)
+    sched = RequestScheduler(CFG, sage, PARAMS, TEXT_PARAMS, TC,
+                             group_size=3, slice_steps=2, max_wait_ticks=1,
+                             packed=True, policy=policy, seed=0)
+    _, prompts = ShapesDataset(res=16).batch(0, 3)
+    done, t = [], 0.0
+    for wave in (prompts, prompts[:1]):
+        t += 1.0
+        sched.submit(wave, now=t)
+        done.extend(sched.tick(now=t))
+    while sched.pending:
+        t += 1.0
+        done.extend(sched.tick(now=t))
+    assert len(done) == len(prompts) + 1
+    return sched, done
+
+
+@pytest.mark.parametrize("sampler,step_impl", CASES)
+def test_pad_aware_matches_eager(sampler, step_impl):
+    """Launch-policy equivalence: with equal group compositions the
+    policy choice is NFE-invariant and bitwise-invisible — pad_aware may
+    shift WHEN a group launches (the straggler is held past its eager
+    launch tick) but never what it computes; the launch ledger can only
+    shrink."""
+    _skip_unavailable(step_impl)
+    se, de = _run_policy(sampler, step_impl, "eager")
+    sp, dp = _run_policy(sampler, step_impl, "pad_aware")
+    assert [c.prompt for c in dp] == [c.prompt for c in de]
+    for a, b in zip(dp, de):
+        assert a.image.dtype == b.image.dtype
+        np.testing.assert_array_equal(a.image, b.image)
+        assert a.group_id == b.group_id and a.nfe_share == b.nfe_share
+    assert sp.stats["nfe"] == se.stats["nfe"]
+    assert sp.stats["launches"] <= se.stats["launches"]
+    # the hold is visible in the straggler's latency, nowhere else
+    assert max(sp.latencies) > max(se.latencies)
+
+
 @pytest.mark.parametrize("sampler,step_impl", CASES)
 def test_golden_fingerprint(sampler, step_impl):
     """End-to-end output vs the committed fingerprint (CPU backend)."""

@@ -146,19 +146,48 @@ def test_pack_signature_and_build_packs():
         _FakeGroup(3, 1, 2, 0.3, "shared", k),   # 1 shared step left
         _FakeGroup(1, 0, 2, 0.3, "shared", k),   # 2 left -> packs with [0]
         _FakeGroup(2, 2, 2, 0.3, "branch", k),   # branch
-        _FakeGroup(2, 2, 3, 0.4, "branch", k),   # other beta bucket
+        _FakeGroup(2, 2, 3, 0.4, "branch", k),   # other beta bucket:
+        #   beta is per-row data (step/fork idx), NOT a pack axis, so this
+        #   packs with gs[3] — one launch across beta buckets
     ]
     packs = packing.build_packs(gs, slice_steps=4, total_steps=6,
                                 sampler="ddim", shape=SHAPE)
     keyed = {key: groups for key, groups in packs}
-    assert len(packs) == 4
-    assert keyed[packing.PackKey("shared", "ddim", 0.3, SHAPE, 2)] \
+    assert len(packs) == 3
+    assert keyed[packing.PackKey("shared", "ddim", SHAPE, 2)] \
         == [gs[0], gs[2]]
-    assert keyed[packing.PackKey("shared", "ddim", 0.3, SHAPE, 1)] == [gs[1]]
-    assert keyed[packing.PackKey("branch", "ddim", 0.3, SHAPE, 4)] == [gs[3]]
-    assert keyed[packing.PackKey("branch", "ddim", 0.4, SHAPE, 4)] == [gs[4]]
+    assert keyed[packing.PackKey("shared", "ddim", SHAPE, 1)] == [gs[1]]
+    assert keyed[packing.PackKey("branch", "ddim", SHAPE, 4)] \
+        == [gs[3], gs[4]]
     # segment length is clamped by steps remaining in the phase
     assert packing.pack_signature(gs[1], 4, 6, "ddim", SHAPE).n_steps == 1
+
+
+def test_build_packs_align_phases_one_bucket_per_phase():
+    """The run_batch drain rule: aligning segment lengths to the minimum
+    remaining within each phase collapses the signature space to one
+    bucket per phase, and never drags a group past its phase boundary."""
+    k = jax.random.PRNGKey(2)
+    gs = [
+        _FakeGroup(2, 0, 2, 0.3, "shared", k),   # 2 shared steps left
+        _FakeGroup(3, 1, 2, 0.3, "shared", k),   # 1 left -> phase min = 1
+        _FakeGroup(2, 2, 2, 0.3, "branch", k),   # 4 branch steps left
+        _FakeGroup(2, 3, 3, 0.4, "branch", k),   # 3 left -> phase min = 3
+    ]
+    packs = packing.build_packs(gs, slice_steps=6, total_steps=6,
+                                sampler="ddim", shape=SHAPE,
+                                align_phases=True)
+    keyed = {key: groups for key, groups in packs}
+    assert len(packs) == 2
+    assert keyed[packing.PackKey("shared", "ddim", SHAPE, 1)] \
+        == [gs[0], gs[1]]
+    assert keyed[packing.PackKey("branch", "ddim", SHAPE, 3)] \
+        == [gs[2], gs[3]]
+    # slice_steps still caps the aligned length
+    capped = packing.build_packs(gs, slice_steps=2, total_steps=6,
+                                 sampler="ddim", shape=SHAPE,
+                                 align_phases=True)
+    assert {key.n_steps for key, _ in capped} == {1, 2}
 
 
 def test_pack_unpack_round_trip_preserves_rows():

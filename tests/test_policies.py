@@ -1,0 +1,347 @@
+"""Directed tests for the admission/launch policy layer.
+
+Policy units run against fake groups and a hand-built
+:class:`~repro.serving.policies.LaunchContext` (no scheduler, no
+denoiser); the integration cases drive a real
+:class:`~repro.serving.scheduler.RequestScheduler` on tiny traces and pin
+the behaviors the policies exist for: hold-window expiry launching before
+a deadline, popularity admission storing on the Nth demand hit,
+cold-first eviction, and ``run_batch`` issuing one stacked launch per
+phase across beta buckets.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import SageConfig, get_config
+from repro.models import dit
+from repro.models import text_encoder as te
+from repro.serving.packing import PackKey
+from repro.serving.policies import (AdmitAll, LaunchContext,
+                                    PadAwarePolicy, PopularityAdmission,
+                                    make_cache_admission, make_launch_policy)
+from repro.serving.scheduler import RequestScheduler
+from repro.serving.trunk_cache import TrunkCache, TrunkEntry
+
+CFG = get_config("sage-dit", smoke=True)
+PARAMS = dit.init_params(CFG, jax.random.PRNGKey(0))
+TC = te.text_cfg(dim=CFG.cond_dim, layers=2)
+TEXT_PARAMS = te.init_text(jax.random.PRNGKey(1), TC)
+
+
+# ---------------------------------------------------------------------------
+# launch-policy units (fake groups, hand-built context)
+# ---------------------------------------------------------------------------
+
+class _G:
+    def __init__(self, n_members, created_tick, deadline=None, sig="a"):
+        self.members = list(range(n_members))
+        self.created_tick = created_tick
+        self._deadline = deadline
+        self.sig = sig
+
+    def earliest_deadline(self):
+        return float("inf") if self._deadline is None else self._deadline
+
+
+def _ctx(tick=10, now=10.0, inflight=(), ttf=3, max_wait=2, slack=0.0):
+    sigs = frozenset(PackKey("shared", "ddim", (8, 8, 4), s)
+                     for s in inflight)
+    return LaunchContext(
+        now=now, tick=tick, group_size=4, max_wait_ticks=max_wait,
+        deadline_slack=slack, ticks_to_finish=ttf,
+        inflight_signatures=sigs,
+        signature_of=lambda g: PackKey("shared", "ddim", (8, 8, 4), g.sig))
+
+
+def test_eager_launches_full_waited_urgent():
+    pol = make_launch_policy("eager")
+    assert pol.name == "eager"
+    full = _G(4, created_tick=10)
+    waited = _G(2, created_tick=8)
+    urgent = _G(1, created_tick=10, deadline=10.0)
+    fresh = _G(1, created_tick=10)
+    assert pol.launches([full, waited, urgent, fresh], _ctx()) \
+        == [full, waited, urgent]
+
+
+def test_pad_aware_holds_subfull_within_window():
+    """A waited sub-full group with no deadline pressure and no matching
+    in-flight bucket is held — launched only once the hold expires."""
+    pol = PadAwarePolicy(hold_ticks=2)
+    g = _G(2, created_tick=0)
+    assert pol.launches([g], _ctx(tick=2)) == []     # eager would launch
+    assert pol.launches([g], _ctx(tick=3)) == []     # still held
+    assert pol.launches([g], _ctx(tick=4)) == [g]    # hold expired
+    # full groups are never held
+    full = _G(4, created_tick=2)
+    assert pol.launches([full], _ctx(tick=2)) == [full]
+
+
+def test_pad_aware_deadline_unsafe_hold_releases():
+    """Holding must stop while the group can still finish: a deadline
+    inside now + slack + ticks_to_finish forces the launch even though
+    the hold window has ticks left."""
+    pol = PadAwarePolicy(hold_ticks=5)
+    safe = _G(2, created_tick=0, deadline=20.0)
+    tight = _G(2, created_tick=0, deadline=12.9)     # 10 + 3 ttf < 13
+    assert pol.launches([safe, tight], _ctx(tick=2, now=10.0, ttf=3)) \
+        == [tight]
+    # and with a comfortable deadline the group is held like any other
+    assert pol.launches([safe], _ctx(tick=2, now=10.0, ttf=3)) == []
+
+
+def test_pad_aware_fills_existing_buckets_first():
+    """A held group whose would-be PackKey matches an in-flight bucket
+    rides that launch for free — released immediately, ordered after the
+    never-held (full/urgent) groups and before hold expiries."""
+    pol = PadAwarePolicy(hold_ticks=3)
+    full = _G(4, created_tick=2)
+    fills = _G(2, created_tick=0, sig=2)
+    held = _G(2, created_tick=0, sig=9)
+    expired = _G(3, created_tick=-3, sig=9)
+    out = pol.launches([held, expired, fills, full],
+                       _ctx(tick=2, inflight=(2,)))
+    assert out == [full, fills, expired]
+
+
+def test_make_launch_policy_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown launch policy"):
+        make_launch_policy("nope")
+    pol = PadAwarePolicy(hold_ticks=0)
+    assert make_launch_policy(pol) is pol
+    with pytest.raises(ValueError):
+        PadAwarePolicy(hold_ticks=-1)
+
+
+# ---------------------------------------------------------------------------
+# cache-admission units
+# ---------------------------------------------------------------------------
+
+def test_popularity_admits_on_nth_lookup():
+    adm = PopularityAdmission(threshold=3)
+    assert not adm.admit("k")
+    adm.on_lookup("k")
+    adm.on_lookup("k")
+    assert not adm.admit("k")                 # 2 < 3
+    adm.on_lookup("k")
+    assert adm.admit("k")                     # 3rd demand hit admits
+    assert not adm.admit("other")
+
+
+def test_popularity_victim_is_coldest_then_lru():
+    adm = PopularityAdmission(threshold=1)
+    for key, n in (("hot", 3), ("warm", 2), ("cold", 1), ("cold2", 1)):
+        for _ in range(n):
+            adm.on_lookup(key)
+    # keys iterate LRU -> MRU; the coldest wins, ties stay LRU-first
+    assert adm.victim(["hot", "cold", "warm", "cold2"]) == "cold"
+    assert adm.victim(["hot", "warm"]) == "warm"
+    assert AdmitAll().victim(["a", "b"]) == "a"   # plain LRU
+    assert AdmitAll().victim([]) is None
+
+
+def test_popularity_counter_state_is_bounded():
+    adm = PopularityAdmission(threshold=1, max_keys=8)
+    adm.on_lookup("hot")
+    adm.on_lookup("hot")
+    for i in range(9):
+        adm.on_lookup(("one-hit", i))
+    assert len(adm.counts) <= 8
+    assert adm.counts.get("hot") == 2         # pruning drops coldest half
+
+
+def test_make_cache_admission_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown cache admission"):
+        make_cache_admission("nope")
+    assert make_cache_admission(None).name == "always"
+    assert make_cache_admission("popularity", threshold=5).threshold == 5
+    with pytest.raises(ValueError):
+        PopularityAdmission(threshold=0)
+
+
+# ---------------------------------------------------------------------------
+# trunk-cache integration: admission gating + policy-visible accounting
+# ---------------------------------------------------------------------------
+
+def _entry(centroid, fill=0.0, shape=(1, 4, 4, 3)):
+    z = np.full(shape, fill, np.float32)
+    return TrunkEntry(z=z, eps_prev=np.zeros_like(z), step_idx=2,
+                      beta_bucket=0.3, rng_fold=0,
+                      centroid=np.asarray(centroid, np.float32),
+                      cfg_key=("k",))
+
+
+def test_cache_popularity_gates_insert_and_counts_rejects():
+    tc = TrunkCache(tau_trunk=0.9, admission="popularity")
+    c = [1.0, 0.0, 0.0]
+    assert tc.lookup(c, 0.3, ("k",), (1, 4, 4, 3)) is None   # demand 1
+    assert not tc.insert(_entry(c), shape=(1, 4, 4, 3))      # 1 < 2
+    assert tc.stats["admission_rejects"] == 1 and len(tc) == 0
+    assert tc.lookup(c, 0.3, ("k",), (1, 4, 4, 3)) is None   # demand 2
+    assert tc.insert(_entry(c, fill=2.0), shape=(1, 4, 4, 3))
+    hit = tc.lookup(c, 0.3, ("k",), (1, 4, 4, 3))
+    assert hit is not None and float(hit.z[0, 0, 0, 0]) == 2.0
+    assert tc.stats["hits"] == 1 and tc.stats["admission_rejects"] == 1
+
+
+def test_cache_exact_hit_feeds_popularity_counter():
+    """The satellite fix: the exact-key fast path must tick the demand
+    counter too, so repeated exact-theme hits keep their entry hot."""
+    tc = TrunkCache(tau_trunk=0.9, admission="popularity")
+    c = [0.0, 1.0, 0.0]
+    key = tc._quant_key(np.asarray(c, np.float32), 0.3, ("k",),
+                        (1, 4, 4, 3))
+    tc.admission.counts[key] = 2                  # pre-warmed to admit
+    assert tc.insert(_entry(c), shape=(1, 4, 4, 3))
+    for i in range(3):                            # exact-key hits
+        assert tc.lookup(c, 0.3, ("k",), (1, 4, 4, 3)) is not None
+        assert tc.admission.counts[key] == 3 + i
+    assert tc.stats["exact_hits"] == 3
+
+
+def test_cache_evicts_cold_entries_first():
+    """Under byte pressure the popularity victim is the coldest stored
+    key, not the least recently used one."""
+    shape = (1, 4, 4, 3)
+    nbytes = _entry([1, 0, 0]).nbytes
+    tc = TrunkCache(tau_trunk=0.9, max_bytes=2 * nbytes,
+                    admission=PopularityAdmission(threshold=1))
+    hot, cold, new = [1.0, 0, 0], [0, 1.0, 0], [0, 0, 1.0]
+    for c, n in ((hot, 3), (cold, 1), (new, 1)):
+        for _ in range(n):
+            tc.lookup(c, 0.3, ("k",), shape)
+    assert tc.insert(_entry(hot), shape=shape)
+    assert tc.insert(_entry(cold), shape=shape)
+    # LRU would evict `hot` (inserted first, not touched since); the
+    # cold-first victim must be `cold`
+    assert tc.insert(_entry(new), shape=shape)
+    assert tc.stats["evictions"] == 1
+    assert tc.lookup(hot, 0.3, ("k",), shape) is not None
+    assert tc.lookup(new, 0.3, ("k",), shape) is not None
+    assert tc.lookup(cold, 0.3, ("k",), shape) is None
+    assert tc.ledger_bytes() == tc.bytes
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration
+# ---------------------------------------------------------------------------
+
+def _sched(policy, **kw):
+    sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                      tau_min=0.2)
+    kw.setdefault("group_size", 3)
+    kw.setdefault("slice_steps", 2)
+    kw.setdefault("max_wait_ticks", 1)
+    return RequestScheduler(CFG, sage, PARAMS, TEXT_PARAMS, TC,
+                            packed=True, policy=policy, seed=0, **kw)
+
+
+def test_hold_window_expiry_forces_launch_before_deadline():
+    """A held singleton with a deadline launches as soon as holding one
+    more tick could miss it — before the hold window is exhausted — and
+    completes in time."""
+    sched = _sched(PadAwarePolicy(hold_ticks=50))
+    ttf = sched._ticks_to_finish()
+    deadline = 3.0 + ttf + 1.0
+    sched.submit(["a lone red circle"], now=1.0, deadline=deadline)
+    done, t = [], 1.0
+    launched_at = None
+    while not done and t < 30.0:
+        done.extend(sched.tick(now=t))
+        if launched_at is None and sched.inflight:
+            launched_at = t
+        t += 1.0
+    assert done, "held request never completed"
+    # launched exactly when the deadline-safety margin ran out, well
+    # before the 50-tick hold budget
+    assert launched_at is not None and launched_at <= deadline - ttf + 1.0
+    assert launched_at + ttf <= deadline + 1e-9
+    assert done[0].latency <= deadline - 1.0
+
+
+def test_pad_aware_fills_group_and_reduces_pad_waste():
+    """Staggered theme-mates: eager launches a sub-full group and the
+    stragglers open a second one; pad_aware holds, absorbs them into one
+    full group — less pad waste, fewer launches, no extra NFE."""
+    base = "a small red circle on a blue background"
+    waves = [[base, base], [], [base]]        # 2 arrive, gap, 1 straggler
+
+    def run(policy):
+        sched = _sched(policy)
+        done, t = [], 0.0
+        for w in waves:
+            t += 1.0
+            if w:
+                sched.submit(w, now=t)
+            done.extend(sched.tick(now=t))
+        while sched.pending:
+            t += 1.0
+            done.extend(sched.tick(now=t))
+        return sched, done
+
+    se, de = run("eager")
+    sp, dp = run("pad_aware")
+    assert sorted(c.prompt for c in dp) == sorted(c.prompt for c in de)
+    assert len({c.group_id for c in dp}) == 1     # held group absorbed all
+    assert len({c.group_id for c in de}) == 2     # eager split the theme
+    assert sp.stats["nfe"] <= se.stats["nfe"]
+    assert sp.stats["launches"] < se.stats["launches"]
+    assert sp.summary()["pad_waste"] < se.summary()["pad_waste"]
+
+
+def test_run_batch_single_launch_per_phase_across_beta_buckets():
+    """The sync path packs beta buckets: two cliques in different
+    share-ratio buckets but with aligned phase lengths drain in exactly
+    one stacked shared launch + one stacked branch launch (the old path
+    paid one launch per phase per bucket)."""
+    sage = SageConfig(total_steps=6, share_ratio=0.3, guidance_scale=2.0,
+                      tau_min=0.5, adaptive_branch=True)
+    sched = RequestScheduler(CFG, sage, PARAMS, TEXT_PARAMS, TC,
+                             group_size=4, branch_buckets=(0.2, 0.3, 0.4))
+    pooled = np.array([[1.0, 0.0], [0.6, 0.8], [0.0, -1.0]], np.float32)
+    conds = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(3), (3, CFG.cond_len, CFG.cond_dim)))
+    sched._embed = lambda prompts: (conds[:len(prompts)],
+                                    pooled[:len(prompts)])
+    done = sched.run_batch(["p0", "p1", "p2"], adaptive=True)
+    assert len(done) == 3
+    # buckets 0.3 (pair) and 0.4 (singleton) both split to n_shared=2 at
+    # T=6, so the aligned drain is 2 launches total; NFE is per-bucket
+    expect_nfe = (2 * 1 * 2 + 2 * 2 * 4) + (2 * 1 * 2 + 2 * 1 * 4)
+    assert sched.stats["nfe"] == expect_nfe
+    assert sched.stats["launches"] == 2
+    assert sched.stats["pack_rows"] == 2 + 8      # shared K=2, branch 2*4
+    assert sched.stats["pack_pad_rows"] == 2 + 3  # pair pads 2, single 3
+
+
+def test_run_batch_does_not_age_streaming_groups():
+    """A sync drain must not advance the tick clock: wait counters of
+    open streaming groups are measured in ticks, and a run_batch call in
+    between must not push them past max_wait into a padded launch."""
+    sched = _sched("eager", max_wait_ticks=3)
+    base = "a small red circle on a blue background"
+    sched.submit([base], now=1.0)
+    sched.tick(now=1.0)
+    assert len(sched.open_groups) == 1            # waiting, wait=0
+    ticks_before = sched.ticks
+    sched.run_batch([base, base])
+    assert sched.ticks == ticks_before            # drain left the clock
+    assert len(sched.open_groups) == 1            # group not aged out
+    sched.tick(now=2.0)
+    assert len(sched.open_groups) == 1            # wait=1 < max_wait=3
+    done = sched.drain(now=3.0)
+    assert [c.prompt for c in done] == [base]
+
+
+def test_run_batch_ignores_trunk_cache():
+    """The synchronous path is documented cache-free: neither lookups nor
+    stores may touch an attached trunk cache."""
+    cache = TrunkCache(tau_trunk=0.9)
+    sched = _sched("eager", trunk_cache=cache)
+    base = "a small red circle on a blue background"
+    done = sched.run_batch([base, base, base])
+    assert len(done) == 3
+    assert len(cache) == 0
+    assert cache.stats["hits"] == cache.stats["misses"] == 0
+    assert sched.trunk_cache is cache             # restored after drain

@@ -15,7 +15,13 @@ drain) and assert the invariants that must hold for ANY arrival pattern:
   real rows);
 * clique admission — co-grouped completions always satisfy the pairwise
   (tau_min, tau_max] similarity invariant (checked end-to-end here, on
-  real text-tower embeddings rather than synthetic vectors).
+  real text-tower embeddings rather than synthetic vectors);
+* launch-policy safety — every invariant above holds under EVERY launch
+  policy (the policy chooses *when*, never *whether*), a pad-aware hold
+  never leaves an open group that could no longer meet its earliest
+  deadline (deadline-safe hold window), and pad_aware never spends more
+  NFE than eager on the same trace (holds merge arrivals into fuller
+  groups; they cannot split work).
 """
 import jax
 import numpy as np
@@ -52,18 +58,22 @@ def _trace(seed, ticks, rate):
     return trace
 
 
-@pytest.mark.parametrize("seed,rate,use_cache,deadlines",
-                         [(0, 1.5, False, False),
-                          (1, 2.5, True, True),
-                          (2, 0.8, False, True)])
-def test_fuzz_invariants(seed, rate, use_cache, deadlines):
+@pytest.mark.parametrize("seed,rate,use_cache,deadlines,policy",
+                         [(0, 1.5, False, False, "eager"),
+                          (1, 2.5, True, True, "eager"),
+                          (2, 0.8, False, True, "eager"),
+                          (0, 1.5, False, False, "pad_aware"),
+                          (1, 2.5, True, True, "pad_aware"),
+                          (2, 0.8, False, True, "pad_aware")])
+def test_fuzz_invariants(seed, rate, use_cache, deadlines, policy):
     rng = np.random.RandomState(1000 + seed)
     sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
                       tau_min=0.2)
     sched = RequestScheduler(
         CFG, sage, PARAMS, TEXT_PARAMS, TC, group_size=3, slice_steps=2,
-        max_wait_ticks=2, packed=True,
+        max_wait_ticks=2, packed=True, policy=policy,
         trunk_cache=TrunkCache(tau_trunk=0.9) if use_cache else None)
+    ttf = sched._ticks_to_finish()
 
     trace = _trace(seed, ticks=6, rate=rate)
     submitted, done, t = [], [], 0.0
@@ -79,6 +89,13 @@ def test_fuzz_invariants(seed, rate, use_cache, deadlines):
         for g in sched.open_groups:
             assert g.earliest_deadline() > t, (
                 f"overdue group still open at t={t}")
+            # pad-aware hold safety: a group held past its eager launch
+            # point must still be able to finish before its deadline
+            if (policy == "pad_aware"
+                    and sched.ticks - g.created_tick
+                    >= sched.max_wait_ticks):
+                assert g.earliest_deadline() > t + ttf, (
+                    f"deadline-unsafe hold at t={t}")
     # zero arrival rate from here on: the queue must fully drain
     done.extend(sched.drain(now=t))
     assert sched.pending == 0
@@ -127,6 +144,40 @@ def test_fuzz_invariants(seed, rate, use_cache, deadlines):
     assert 0.0 <= s["pad_waste"] < 1.0
     if done:
         assert s["latency_p50"] > 0 and s["latency_p95"] >= s["latency_p50"]
+
+
+@pytest.mark.parametrize("seed,rate", [(3, 1.5), (4, 2.5)])
+def test_fuzz_pad_aware_never_spends_more_nfe(seed, rate):
+    """Same trace under both policies: conservation for each, and the
+    pad-aware NFE ledger never exceeds eager's — holding can only merge
+    arrivals into fuller groups (fewer shared trunks), never split work.
+    Launch counts shrink the same way."""
+    sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                      tau_min=0.2)
+    trace = _trace(seed, ticks=6, rate=rate)
+
+    def run(policy):
+        sched = RequestScheduler(
+            CFG, sage, PARAMS, TEXT_PARAMS, TC, group_size=3,
+            slice_steps=2, max_wait_ticks=2, packed=True, policy=policy)
+        done, t = [], 0.0
+        for wave in trace:
+            t += 1.0
+            if wave:
+                sched.submit(wave, now=t)
+            done.extend(sched.tick(now=t))
+        done.extend(sched.drain(now=t))
+        assert sched.pending == 0
+        return sched, done
+
+    se, de = run("eager")
+    sp, dp = run("pad_aware")
+    submitted = [p for wave in trace for p in wave]
+    assert sorted(c.prompt for c in de) == sorted(submitted)
+    assert sorted(c.prompt for c in dp) == sorted(submitted)
+    assert sp.stats["nfe"] <= se.stats["nfe"]
+    assert sp.stats["launches"] <= se.stats["launches"]
+    assert sp.summary()["pad_waste"] <= se.summary()["pad_waste"]
 
 
 def test_fuzz_empty_trace_is_a_noop():
