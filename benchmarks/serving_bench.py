@@ -34,9 +34,23 @@ under pad_aware) plus NFE (asserted no worse: holds merge arrivals into
 fuller groups, they never split work) and latency p95 (the price of the
 hold, in virtual ticks).
 
+The fifo-vs-qos_shed pair runs a seeded OVERLOAD trace (arrival rate >
+service rate for OVL_TICKS ticks under a launch-slot cap, mixed QoS
+classes with deadlines, then a bounded drain window that is identical
+for both runs).  The FIFO baseline admits everything and serves in
+arrival order, so interactive requests queue behind the batch backlog
+and most deadlines blow; the QoS run (qos_edf launch order + preemption
++ saturation shedding) sheds batch work past the backlog horizon and
+lets interactive claim slots.  Rows report goodput (deadline-met
+completions inside the fixed window — raw completion counts reward
+lateness), interactive latency p95, and shed counts; the bench asserts
+the PR-6 acceptance criteria: QoS interactive p95 within 2x the
+unloaded p95, and QoS goodput >= the FIFO baseline.
+
 Rows: serving/{sync,stream,stream_cache}/<trace>,
       serving/{pergroup,packed}/<burst trace>,
-      serving/{eager,pad_aware}/<staggered trace>.
+      serving/{eager,pad_aware}/<staggered trace>,
+      serving/{fifo,qos_shed}/<overload trace>.
 """
 from __future__ import annotations
 
@@ -60,6 +74,13 @@ SLICE = 3
 BURST = 12           # one burst of BURST prompts over THEMES themes
 STAG_WAVES = 8       # staggered trace: STAG_WAVES half-size waves ...
 STAG_GAP = 2         # ... arriving one wave every STAG_GAP ticks
+OVL_TICKS = 30       # overload trace: arrival > service for OVL_TICKS ...
+OVL_WINDOW = 45      # ... measured over a fixed OVL_WINDOW tick budget
+OVL_BATCH = 5        # batch prompts per tick (saturating class)
+OVL_INT_EVERY = 6    # interactive burst of 2 every OVL_INT_EVERY ticks
+OVL_INT_DL = 6.0     # interactive deadline (ticks after arrival)
+OVL_BAT_DL = 12.0    # batch deadline (generous; FIFO still blows it)
+OVL_CAP = 2          # max_groups_per_tick: the contended resource
 
 
 def _trace(seed=0):
@@ -182,6 +203,93 @@ def _run_stagger(policy):
     return us, len(done), stats, s
 
 
+def _overload_sched(qos):
+    """Both overload contestants share slicing, slot cap, and starvation
+    bound; they differ only in the PR-6 QoS machinery under test."""
+    kw = dict(slice_steps=SLICE, max_wait_ticks=1,
+              max_groups_per_tick=OVL_CAP, starvation_ticks=8)
+    if qos:
+        kw.update(admission="shed")       # qos_edf + preempt are defaults
+    else:
+        kw.update(launch_order="fifo", preempt=False)
+    return _engine().streaming_scheduler(**kw)
+
+
+def _run_overload(qos):
+    """Seeded overload trace under a fixed tick budget.  OVL_BATCH
+    same-theme batch prompts arrive every tick (arrival > service under
+    the OVL_CAP slot cap) plus an interactive burst of 2 every
+    OVL_INT_EVERY ticks; after OVL_TICKS arrival ticks both runs get the
+    SAME bounded drain window (OVL_WINDOW total), so the FIFO baseline
+    cannot inflate its goodput by draining its unbounded backlog off the
+    clock.  Goodput / p95 / shed are read at the window edge; leftover
+    backlog is flushed untimed so the same-instance warm pass (see
+    :func:`_run_burst`) starts the timed pass clean."""
+    _, base = ShapesDataset(res=16).batch(0, THEMES)
+    theme = base[0]                       # same-theme => groups fill
+    sched = _overload_sched(qos)
+
+    def drive(now):
+        done = []
+        for i in range(OVL_TICKS):
+            now += 1.0
+            if i % OVL_INT_EVERY == 0:
+                sched.submit([theme, theme], now=now,
+                             deadline=now + OVL_INT_DL, qos="interactive")
+            sched.submit([theme] * OVL_BATCH, now=now,
+                         deadline=now + OVL_BAT_DL, qos="batch")
+            done.extend(sched.tick(now=now))
+        for _ in range(OVL_WINDOW - OVL_TICKS):
+            if not sched.pending:
+                break
+            now += 1.0
+            done.extend(sched.tick(now=now))
+        window = dict(sched.stats), list(done)
+        while sched.pending:              # untimed flush past the window
+            now += 1.0
+            done.extend(sched.tick(now=now))
+        return window
+
+    drive(0.0)                            # warm pass
+    before, ticks0 = dict(sched.stats), sched.ticks
+    t0 = time.time()
+    snap, done = drive(1000.0)
+    us = (time.time() - t0) * 1e6
+    ticks = sched.ticks - ticks0
+    stats = {k: snap[k] - before.get(k, 0) for k in snap}
+    ints = sorted(c.latency for c in done
+                  if c.qos == "interactive" and c.status == "ok")
+    s = {"ticks": ticks,
+         "goodput": stats["deadline_met"],
+         "int_p95": float(np.percentile(ints, 95)) if ints else 0.0,
+         "int_ok": len(ints),
+         "bat_ok": sum(1 for c in done
+                       if c.qos == "batch" and c.status == "ok")}
+    return us, len(done), stats, s
+
+
+def _run_unloaded_p95():
+    """Interactive p95 with no competing load (arrival << service) on
+    the QoS scheduler config — the reference point for the PR-6
+    "interactive p95 within 2x unloaded" acceptance bar.  Latencies are
+    virtual-time, so one deterministic pass suffices."""
+    _, base = ShapesDataset(res=16).batch(0, THEMES)
+    theme = base[0]
+    sched = _overload_sched(qos=True)
+    done, now = [], 0.0
+    for _ in range(5):
+        sched.submit([theme, theme], now=now + 1.0,
+                     deadline=now + 1.0 + OVL_INT_DL, qos="interactive")
+        for _ in range(2 * OVL_INT_EVERY):   # arrival gap >> service time
+            now += 1.0
+            done.extend(sched.tick(now=now))
+    while sched.pending:
+        now += 1.0
+        done.extend(sched.tick(now=now))
+    lats = [c.latency for c in done]
+    return float(np.percentile(lats, 95))
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     waves = _trace()
@@ -257,7 +365,35 @@ def main(rows=None):
                  f"p95={s_a['latency_p95']:.1f} "
                  f"vs_eager_pad={s_a['pad_waste'] - s_e['pad_waste']:+.3f}"))
 
-    for r in rows[-7:]:
+    # FIFO vs QoS+shedding on a seeded overload trace (PR-6 acceptance)
+    otrace = (f"ovl{OVL_TICKS}x{OVL_BATCH}w{OVL_WINDOW}T{STEPS}")
+    unloaded_p95 = _run_unloaded_p95()
+    us_f, n_f, stats_f, s_f = _run_overload(qos=False)
+    rows.append((f"serving/fifo/{otrace}", us_f / s_f["ticks"],
+                 f"goodput={s_f['goodput']:.0f} "
+                 f"int_p95={s_f['int_p95']:.1f} "
+                 f"missed={stats_f['deadline_missed']:.0f} "
+                 f"nfe={stats_f['nfe']:.0f}"))
+    us_q, n_q, stats_q, s_q = _run_overload(qos=True)
+    assert s_q["int_p95"] <= 2.0 * unloaded_p95, (
+        f"QoS interactive p95 must stay within 2x unloaded under "
+        f"overload: {s_q['int_p95']} vs 2x{unloaded_p95}")
+    assert s_q["goodput"] >= s_f["goodput"], (
+        f"QoS+shedding goodput must be >= FIFO baseline: "
+        f"{s_q['goodput']} vs {s_f['goodput']}")
+    assert (stats_q["shed"] > 0 and s_q["int_ok"] > 0
+            and s_q["bat_ok"] > 0), "overload trace must shed yet serve"
+    rows.append((f"serving/qos_shed/{otrace}", us_q / s_q["ticks"],
+                 f"goodput={s_q['goodput']:.0f} "
+                 f"int_p95={s_q['int_p95']:.1f} "
+                 f"unl_p95={unloaded_p95:.1f} "
+                 f"shed={stats_q['shed']:.0f} "
+                 f"preempt={stats_q['preemptions']:.0f} "
+                 f"vs_fifo_goodput="
+                 f"{s_q['goodput'] / max(s_f['goodput'], 1):.2f}x "
+                 f"nfe={stats_q['nfe']:.0f}"))
+
+    for r in rows[-9:]:
         print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
     return rows
 

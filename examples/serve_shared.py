@@ -12,6 +12,18 @@ batches via the semantic trunk cache:
 
     PYTHONPATH=src python examples/serve_shared.py --requests 24 \\
         --streaming --arrival-rate 2.0 --trunk-cache --themes 4
+
+Overload / chaos drills (streaming mode): ``--qos-mix`` tags a fraction
+of arrivals as deadline-carrying interactive traffic (the rest is batch),
+``--overload shed|degrade`` arms saturation admission past
+``--shed-horizon`` ticks of estimated backlog, ``--max-groups-per-tick``
+caps launch slots (the contended resource), and ``--fault-plan``
+injects seeded faults (``launch=P,miss=P,corrupt=P,stall=P,seed=N``):
+
+    PYTHONPATH=src python examples/serve_shared.py --requests 48 \\
+        --streaming --arrival-rate 4.0 --themes 3 --qos-mix 0.25 \\
+        --overload shed --max-groups-per-tick 2 \\
+        --fault-plan launch=0.1,stall=0.05,seed=7
 """
 import argparse
 import time
@@ -24,7 +36,9 @@ from repro.data.synthetic import ShapesDataset
 from repro.models import dit
 from repro.models import text_encoder as te
 from repro.serving.engine import SageServingEngine
-from repro.serving.policies import PadAwarePolicy, make_cache_admission
+from repro.serving.faults import FaultPlan
+from repro.serving.policies import (PadAwarePolicy, SaturationAdmission,
+                                    make_cache_admission)
 from repro.serving.trunk_cache import TrunkCache
 
 
@@ -81,26 +95,44 @@ def run_streaming(engine, prompts, args):
             admission=make_cache_admission(args.cache_admission, **kw))
     policy = (PadAwarePolicy(hold_ticks=args.hold_ticks)
               if args.policy == "pad_aware" else args.policy)
+    admission = None
+    if args.overload != "off":
+        admission = SaturationAdmission(horizon_ticks=args.shed_horizon,
+                                        mode=args.overload)
+    faults = (FaultPlan.parse(args.fault_plan)
+              if args.fault_plan else None)
     sched = engine.streaming_scheduler(
         slice_steps=args.slice_steps, max_wait_ticks=args.max_wait_ticks,
-        trunk_cache=cache, packed=not args.per_group, policy=policy)
+        trunk_cache=cache, packed=not args.per_group, policy=policy,
+        max_groups_per_tick=args.max_groups_per_tick,
+        admission=admission, faults=faults)
+
+    # qos assignment: a seeded coin per request tags it interactive
+    # (deadline-carrying) with probability --qos-mix, else batch
+    qrng = np.random.RandomState(args.seed + 2)
+    interactive = qrng.rand(len(prompts)) < args.qos_mix
 
     t0 = time.time()
     done, now, i = [], 0.0, 0
     while i < len(prompts) or sched.pending:
         now += 1.0
-        batch = []
+        int_batch, bat_batch = [], []
         while i < len(prompts) and arrival_t[i] <= now:
-            batch.append(prompts[i])
+            (int_batch if interactive[i] else bat_batch).append(prompts[i])
             i += 1
-        if batch:
-            sched.submit(batch, now=now)
+        if int_batch:
+            sched.submit(int_batch, now=now,
+                         deadline=now + args.int_deadline,
+                         qos="interactive")
+        if bat_batch:
+            sched.submit(bat_batch, now=now, qos="batch")
         done.extend(sched.tick(now=now))
     dt = time.time() - t0
 
     s = sched.summary()
     hits = sum(1 for c in done if c.cache_hit)
-    print(f"served {len(done)} requests in {dt:.1f}s wall "
+    ok = sum(1 for c in done if c.status == "ok")
+    print(f"served {ok}/{len(done)} requests in {dt:.1f}s wall "
           f"({s['ticks']:.0f} ticks, arrival rate {args.arrival_rate}/tick)")
     print(f"NFE total          = {s['nfe']:.0f}")
     print(f"NFE if independent = {s['nfe_independent']:.0f}")
@@ -112,6 +144,31 @@ def run_streaming(engine, prompts, args):
     print(f"launches per tick  = {s['launches_per_tick']:.2f} "
           f"({'per-group' if args.per_group else 'packed'}, "
           f"policy {args.policy}, pad waste {s['pad_waste']:.1%})")
+    if args.qos_mix > 0 or args.overload != "off" or faults is not None:
+        print(f"goodput            = {s['goodput']:.0f} deadline-met "
+              f"({s['goodput_per_tick']:.2f}/tick), "
+              f"missed {s['deadline_missed']:.0f}")
+        print(f"overload ledger    = shed {s['shed']:.0f}, degraded "
+              f"{s['degraded']:.0f}, rejected_expired "
+              f"{s['rejected_expired']:.0f}, backlog "
+              f"{s['backlog_ticks']:.1f} ticks")
+        print(f"preemption         = {s['preemptions']:.0f} preempts, "
+              f"{s['resumes']:.0f} resumes")
+        for q in ("interactive", "batch"):
+            if f"{q}_requests" in s:
+                print(f"  {q:<11} req  = {s[f'{q}_requests']:.0f} "
+                      f"(ok {s.get(f'{q}_completed', 0):.0f}, "
+                      f"shed {s.get(f'{q}_shed', 0):.0f}, "
+                      f"p95 {s.get(f'{q}_latency_p95', 0):.1f} ticks)")
+    if faults is not None:
+        inj = {k: v for k, v in faults.injected.items() if v}
+        print(f"fault injection    = {sum(faults.injected.values())} "
+              f"injected {inj or '{}'} / "
+              f"{sum(faults.queries.values())} draws; "
+              f"{s['launch_faults']:.0f} launch "
+              f"faults, {s['retries']:.0f} retries, {s['shed_faulted']:.0f} "
+              f"shed_faulted, {s['stalled_ticks']:.0f} stalled ticks, "
+              f"nfe_wasted {s['nfe_wasted']:.0f}")
     if cache is not None:
         print(f"trunk cache        = {hits} hit requests, "
               f"{s['cache_hits']:.0f} group hits "
@@ -149,15 +206,42 @@ def main():
                     help="disable packed tick execution (one denoiser "
                          "launch per group per tick instead of one per "
                          "pack bucket; streaming mode)")
-    ap.add_argument("--policy", choices=["eager", "pad_aware"],
+    ap.add_argument("--policy", choices=["eager", "pad_aware", "adaptive"],
                     default="eager",
                     help="launch policy (streaming mode): eager launches "
                          "sub-full groups at max-wait; pad_aware holds "
                          "them inside a deadline-safe window to fill "
-                         "branch rows before padding them")
+                         "branch rows before padding them; adaptive "
+                         "scales the hold budget with the observed "
+                         "arrival rate")
     ap.add_argument("--hold-ticks", type=int, default=2,
                     help="extra ticks pad_aware may hold a sub-full "
                          "group past max-wait")
+    ap.add_argument("--qos-mix", type=float, default=0.0,
+                    help="fraction of arrivals tagged interactive "
+                         "(deadline-carrying, preferred by the qos_edf "
+                         "launch order); the rest are batch class "
+                         "(streaming mode)")
+    ap.add_argument("--int-deadline", type=float, default=8.0,
+                    help="deadline (ticks after arrival) attached to "
+                         "interactive requests")
+    ap.add_argument("--overload", choices=["off", "shed", "degrade"],
+                    default="off",
+                    help="saturation admission past --shed-horizon ticks "
+                         "of estimated backlog: shed rejects (accounted "
+                         "status=shed), degrade admits at draft NFE "
+                         "(max share bucket)")
+    ap.add_argument("--shed-horizon", type=float, default=8.0,
+                    help="backlog horizon (ticks) beyond which admission "
+                         "sheds/degrades; interactive gets 2x headroom")
+    ap.add_argument("--max-groups-per-tick", type=int, default=None,
+                    help="cap on groups advanced per tick (the launch-"
+                         "slot budget preemption arbitrates; default "
+                         "unlimited)")
+    ap.add_argument("--fault-plan", default="",
+                    help="seeded fault injection spec, e.g. "
+                         "'launch=0.1,miss=0.05,corrupt=0.02,stall=0.05,"
+                         "seed=7,max=50' (streaming mode)")
     ap.add_argument("--trunk-cache", action="store_true",
                     help="cross-batch semantic trunk cache")
     ap.add_argument("--tau-trunk", type=float, default=0.95,

@@ -1,9 +1,15 @@
 from repro.serving.engine import Completed, SageServingEngine
+from repro.serving.faults import FaultPlan
 from repro.serving.packing import PackKey, build_packs
-from repro.serving.policies import (AdmitAll, CacheAdmission, EagerPolicy,
-                                    LaunchContext, LaunchPolicy,
+from repro.serving.policies import (AdaptivePadAwarePolicy, AdmissionContext,
+                                    AdmissionPolicy, AdmitAll,
+                                    AdmitAllRequests, CacheAdmission,
+                                    EagerPolicy, LaunchContext, LaunchPolicy,
                                     PadAwarePolicy, PopularityAdmission,
-                                    make_cache_admission, make_launch_policy)
+                                    SaturationAdmission,
+                                    make_admission_policy,
+                                    make_cache_admission, make_launch_order,
+                                    make_launch_policy)
 from repro.serving.scheduler import RequestScheduler
 from repro.serving.shared_prefill import group_requests, shared_prefix_prefill
 from repro.serving.trunk_cache import TrunkCache, TrunkEntry

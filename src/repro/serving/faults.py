@@ -1,0 +1,160 @@
+"""Deterministic fault-injection harness for the serving tier.
+
+A production scheduler's invariants are only as good as the failure
+modes they survive: segment launches fail (driver resets, preempted
+device queues), cache payloads rot (bitflips, truncated spills), and
+whole ticks stall (GC pauses, noisy neighbours).  This module injects
+those faults *deterministically* so the fuzz suite can assert the
+recovery contract — every injected fault is either **recovered** (a
+retried launch produces bitwise-identical results, a corrupted cache
+entry is detected and recomputed exactly) or **surfaced** as an
+accounted shed; never a silent drop.
+
+:class:`FaultPlan` is the single knob surface.  Each fault kind draws
+from its own seeded ``RandomState`` stream, advanced once per *query*
+(one query per pack launch, per cache hit, per tick), so a plan replays
+identically on the same trace regardless of which other kinds are
+enabled — the streams never interleave.  The scheduler and
+:class:`~repro.serving.trunk_cache.TrunkCache` consult the plan at their
+fault points:
+
+* ``launch_fails()``  — queried once per segment launch (one per pack
+  bucket, or per group on the per-group oracle path).  On injection the
+  launch is skipped — the carry is untouched, so the retry (scheduled
+  with exponential backoff, bounded by ``RequestScheduler(max_retries)``)
+  re-runs the *same* computation and the completion is bitwise-identical
+  to the fault-free run, just later.  Retry exhaustion sheds the group:
+  members complete with ``status="shed"`` and the spent NFE moves to the
+  ``nfe_wasted`` ledger.
+* ``cache_miss()``    — queried once per would-be trunk-cache hit;
+  injection forces a miss (entry retained).  Recovery is trivial: the
+  group computes its own shared phase, which is the *exact* result.
+* ``cache_corrupt()`` — queried once per would-be hit (after the forced
+  -miss query); injection flips a byte of the stored latent.  The
+  cache's always-on CRC integrity gate detects the damage, drops the
+  entry (``stats['integrity_drops']``) and reports a miss — a corrupted
+  trunk can never silently steer a trajectory.
+* ``tick_stalls()``   — queried once per ``tick()``; injection turns the
+  tick into a pure time advance (no admission, no launches, no
+  segments).  Deadline machinery sees the lost time: stalled-away
+  deadlines surface as urgent launches or ``rejected_expired``, never as
+  unaccounted lateness.
+
+``max_faults`` bounds the total injection count (the escape hatch for
+``p=1.0`` worst-case plans that must still drain).
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+KINDS = ("launch_fail", "cache_miss", "cache_corrupt", "tick_stall")
+
+# CLI spec aliases (see FaultPlan.parse): short token -> dataclass field
+_SPEC_KEYS = {"launch": "p_launch_fail", "miss": "p_cache_miss",
+              "corrupt": "p_cache_corrupt", "stall": "p_tick_stall"}
+
+
+def array_crc(x) -> int:
+    """CRC32 of an array's bytes — the trunk-cache integrity fingerprint
+    (cheap at serving-cache entry sizes; any corruption model that flips
+    stored bytes is caught)."""
+    return zlib.crc32(np.ascontiguousarray(np.asarray(x)).tobytes())
+
+
+def corrupt_array(x):
+    """Deterministically damage one byte of ``x`` (the injected
+    corruption model): flip every bit of byte 0.  Returns a new array
+    with the same shape/dtype whose CRC cannot match the original."""
+    a = np.ascontiguousarray(np.asarray(x)).copy()
+    raw = a.view(np.uint8).reshape(-1)
+    raw[0] ^= 0xFF
+    return a
+
+
+@dataclass
+class FaultPlan:
+    """Seeded, per-kind-streamed fault injectors (see module docstring).
+
+    Probabilities are per *query*; ``injected``/``queries`` count per
+    kind so a test can assert both that faults fired and that every
+    firing was accounted downstream.
+    """
+    seed: int = 0
+    p_launch_fail: float = 0.0
+    p_cache_miss: float = 0.0
+    p_cache_corrupt: float = 0.0
+    p_tick_stall: float = 0.0
+    max_faults: Optional[int] = None
+    injected: Dict[str, int] = field(default_factory=dict)
+    queries: Dict[str, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        for k in KINDS:
+            p = getattr(self, f"p_{k}")
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"p_{k} must be in [0, 1], got {p}")
+        # one independent stream per kind: a kind's Nth query draws the
+        # same uniform no matter which other kinds are enabled
+        self._rng = {k: np.random.RandomState(
+            zlib.crc32(k.encode()) ^ (self.seed & 0x7FFFFFFF))
+            for k in KINDS}
+        self.injected = {k: 0 for k in KINDS}
+        self.queries = {k: 0 for k in KINDS}
+
+    # ------------------------------------------------------------------
+    @property
+    def total_injected(self) -> int:
+        return sum(self.injected.values())
+
+    def _fire(self, kind: str) -> bool:
+        self.queries[kind] += 1
+        p = getattr(self, f"p_{kind}")
+        if p <= 0.0:
+            return False
+        if (self.max_faults is not None
+                and self.total_injected >= self.max_faults):
+            return False
+        hit = bool(self._rng[kind].rand() < p)
+        if hit:
+            self.injected[kind] += 1
+        return hit
+
+    def launch_fails(self) -> bool:
+        return self._fire("launch_fail")
+
+    def cache_miss(self) -> bool:
+        return self._fire("cache_miss")
+
+    def cache_corrupt(self) -> bool:
+        return self._fire("cache_corrupt")
+
+    def tick_stalls(self) -> bool:
+        return self._fire("tick_stall")
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Build a plan from a CLI spec string, e.g.
+        ``"launch=0.2,miss=0.1,corrupt=0.05,stall=0.1,seed=3,max=20"``
+        (all tokens optional; see ``_SPEC_KEYS`` for the aliases)."""
+        kw = {}
+        for tok in filter(None, (t.strip() for t in spec.split(","))):
+            if "=" not in tok:
+                raise ValueError(f"bad fault-plan token {tok!r} "
+                                 f"(want key=value)")
+            k, v = tok.split("=", 1)
+            if k in _SPEC_KEYS:
+                kw[_SPEC_KEYS[k]] = float(v)
+            elif k == "seed":
+                kw["seed"] = int(v)
+            elif k == "max":
+                kw["max_faults"] = int(v)
+            else:
+                raise ValueError(
+                    f"unknown fault-plan key {k!r}; have "
+                    f"{sorted(_SPEC_KEYS) + ['seed', 'max']}")
+        return cls(**kw)

@@ -99,10 +99,11 @@ def pack_signature(g, slice_steps: int, total_steps: int, sampler: str,
 
 def build_packs(groups: Sequence, slice_steps: int, total_steps: int,
                 sampler: str, shape: Tuple[int, ...],
-                align_phases: bool = False) -> List[Tuple[PackKey, List]]:
+                align_phases: bool = False,
+                order_key=None) -> List[Tuple[PackKey, List]]:
     """Bucket in-flight groups by pack signature (insertion-ordered, so
-    the earliest-deadline-first sort of the caller is preserved within
-    and across buckets).
+    the priority sort of the caller — (qos, deadline) under the default
+    launch order — is preserved within and across buckets).
 
     ``align_phases=True`` sets every group's segment length to the
     minimum steps remaining among its phase-mates (still capped by
@@ -110,6 +111,13 @@ def build_packs(groups: Sequence, slice_steps: int, total_steps: int,
     dragged past its phase boundary, groups merely stop together at the
     earliest one.  The synchronous ``run_batch`` drain uses this to issue
     one stacked launch per phase per tick across beta buckets.
+
+    ``order_key`` (a group -> sort-key callable, e.g. a
+    ``serving.policies`` launch order) stable-sorts each bucket's rows —
+    the class-aware pack-ordering guarantee: rows inside a launch sit in
+    priority order even if the caller's ``groups`` list was not already
+    sorted.  A caller that pre-sorted by the same key sees a no-op (the
+    sort is stable), so the scheduler's packed results are unchanged.
     """
     phase_steps: Dict[str, int] = {}
     if align_phases:
@@ -122,6 +130,9 @@ def build_packs(groups: Sequence, slice_steps: int, total_steps: int,
             pack_signature(g, slice_steps, total_steps, sampler, shape,
                            n_steps=phase_steps.get(g.state)),
             []).append(g)
+    if order_key is not None:
+        for gs in packs.values():
+            gs.sort(key=order_key)
     return list(packs.items())
 
 

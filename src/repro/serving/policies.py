@@ -51,11 +51,29 @@ Invariants every launch policy must preserve (enforced by
 """
 from __future__ import annotations
 
+import math
 from typing import (Any, Callable, Dict, FrozenSet, List, NamedTuple,
                     Optional, Protocol, Sequence, Tuple, Union,
                     runtime_checkable)
 
 from repro.serving.packing import PackKey
+
+# -- QoS classes -------------------------------------------------------------
+#
+# Two service classes ride every request through admission, grouping,
+# launch ordering, advance selection and the stats: ``interactive``
+# (latency-sensitive, usually deadlined) outranks ``batch`` (throughput
+# traffic that must not starve — the WFQ weights and the scheduler's
+# starvation bound guarantee that).  Rank 0 is the most urgent.
+
+QOS_RANK: Dict[str, int] = {"interactive": 0, "batch": 1}
+DEFAULT_QOS = "interactive"
+
+
+def qos_rank(g) -> int:
+    """Launch-order rank of a group/request's QoS class (duck-typed on
+    ``.qos``; unknown or missing classes sort last)."""
+    return QOS_RANK.get(getattr(g, "qos", DEFAULT_QOS), len(QOS_RANK))
 
 
 class LaunchContext(NamedTuple):
@@ -78,6 +96,9 @@ class LaunchContext(NamedTuple):
     ticks_to_finish: int
     inflight_signatures: FrozenSet[PackKey]
     signature_of: Callable[[Any], PackKey]
+    # EWMA of arrivals per tick (the scheduler's estimate of the recent
+    # arrival process) — what AdaptivePadAwarePolicy sizes holds from
+    arrival_rate: float = 0.0
 
 
 # -- per-group predicates (shared by every policy) ---------------------------
@@ -158,6 +179,12 @@ class PadAwarePolicy:
 
     name = "pad_aware"
 
+    def _hold_budget(self, g, ctx: LaunchContext) -> int:
+        """Extra ticks this group may be held past ``max_wait_ticks`` —
+        the fixed window here; :class:`AdaptivePadAwarePolicy` overrides
+        it with an arrival-process estimate."""
+        return self.hold_ticks
+
     def launches(self, open_groups: Sequence[Any],
                  ctx: LaunchContext) -> List[Any]:
         now, fills, expired = [], [], []
@@ -170,14 +197,52 @@ class PadAwarePolicy:
                 elif ctx.signature_of(g) in ctx.inflight_signatures:
                     fills.append(g)
                 elif (wait_ticks(g, ctx)
-                      >= ctx.max_wait_ticks + self.hold_ticks):
+                      >= ctx.max_wait_ticks + self._hold_budget(g, ctx)):
                     expired.append(g)
         return now + fills + expired
+
+
+class AdaptivePadAwarePolicy(PadAwarePolicy):
+    """Pad-aware holds sized by the *recent arrival process* instead of a
+    fixed window (the PR-5 carry-over lever).
+
+    A hold only pays off if arrivals are likely to fill the held rows
+    before it expires, so the budget is the expected ticks until
+    ``group_size - members`` more requests arrive, estimated from the
+    scheduler's arrival-rate EWMA (``LaunchContext.arrival_rate``), and
+    capped at ``hold_max``:
+
+    * rate below ``min_rate`` — arrivals have dried up; the fill
+      probability within any reasonable window is negligible, so the
+      budget is 0 and the group launches at its eager point (a fixed
+      window would hold it for nothing, paying pure latency);
+    * rate ``r`` — budget ``min(hold_max, ceil(need / r))``: a brisk
+      stream earns only the short hold it needs, a trickle earns the cap.
+
+    Every release rule (deadline safety, bucket fill, expiry) is
+    inherited — only the expiry budget adapts.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, hold_max: int = 4, min_rate: float = 0.25):
+        super().__init__(hold_ticks=hold_max)
+        if min_rate <= 0:
+            raise ValueError(f"min_rate must be > 0, got {min_rate}")
+        self.min_rate = min_rate
+
+    def _hold_budget(self, g, ctx: LaunchContext) -> int:
+        need = max(ctx.group_size - len(g.members), 1)
+        if ctx.arrival_rate < self.min_rate:
+            return 0
+        return min(self.hold_ticks,
+                   int(math.ceil(need / ctx.arrival_rate)))
 
 
 _LAUNCH_POLICIES: Dict[str, Callable[[], LaunchPolicy]] = {
     "eager": EagerPolicy,
     "pad_aware": PadAwarePolicy,
+    "adaptive": AdaptivePadAwarePolicy,
 }
 
 
@@ -192,6 +257,164 @@ def make_launch_policy(spec: Union[str, LaunchPolicy, None],
             raise ValueError(f"unknown launch policy {spec!r}; "
                              f"have {sorted(_LAUNCH_POLICIES)}")
         return _LAUNCH_POLICIES[spec](**kw)
+    return spec
+
+
+# -- launch-order comparators ------------------------------------------------
+#
+# WHICH in-flight/open groups go first — the pluggable priority hook for
+# ``max_groups_per_tick`` selection (carry-over from the ROADMAP: the
+# PR-5 tick loop hard-coded EDF).  An order is a plain key function over
+# duck-typed groups (``qos`` / ``earliest_deadline()`` / ``gid``); the
+# scheduler sorts its advance candidates with it and the WFQ/preemption
+# selector consumes candidates in that order within each class.
+
+LaunchOrder = Callable[[Any], Tuple]
+
+
+def order_fifo(g) -> Tuple:
+    """Strict arrival order (group creation), QoS- and deadline-blind —
+    the overload baseline that lets batch backlogs starve interactive."""
+    return (g.gid,)
+
+
+def order_edf(g) -> Tuple:
+    """Earliest deadline first, ties by creation — the PR-5 behavior."""
+    return (g.earliest_deadline(), g.gid)
+
+
+def order_qos_edf(g) -> Tuple:
+    """(qos, deadline) — the default: interactive outranks batch, EDF
+    within a class.  With a single QoS class this is exactly
+    :func:`order_edf`, which is what keeps the conformance goldens
+    byte-stable."""
+    return (qos_rank(g), g.earliest_deadline(), g.gid)
+
+
+_LAUNCH_ORDERS: Dict[str, LaunchOrder] = {
+    "fifo": order_fifo,
+    "edf": order_edf,
+    "qos_edf": order_qos_edf,
+}
+
+
+def make_launch_order(spec: Union[str, LaunchOrder, None]) -> LaunchOrder:
+    """Resolve an order name (``"fifo"`` / ``"edf"`` / ``"qos_edf"``) or
+    pass a key callable through (it receives a group, returns a sort
+    key)."""
+    if spec is None:
+        return order_qos_edf
+    if isinstance(spec, str):
+        if spec not in _LAUNCH_ORDERS:
+            raise ValueError(f"unknown launch order {spec!r}; "
+                             f"have {sorted(_LAUNCH_ORDERS)}")
+        return _LAUNCH_ORDERS[spec]
+    return spec
+
+
+# -- request admission (overload control) ------------------------------------
+
+class AdmissionContext(NamedTuple):
+    """Read-only saturation snapshot an :class:`AdmissionPolicy` decides
+    from, one instance per arriving request.  ``backlog_ticks`` is the
+    scheduler's conservative drain-time estimate for the work already in
+    the system (open + in-flight groups over the per-tick advance
+    capacity); ``arrival_rate`` is the arrivals-per-tick EWMA."""
+    now: float
+    qos: str
+    deadline: Optional[float]
+    backlog_ticks: float
+    ticks_to_finish: int
+    arrival_rate: float
+
+
+ADMIT, SHED, DEGRADE = "admit", "shed", "degrade"
+
+
+@runtime_checkable
+class AdmissionPolicy(Protocol):
+    """Per-request admission verdict: ``"admit"`` (serve normally),
+    ``"shed"`` (reject now, accounted — a ``Completed`` record with
+    ``status="shed"``), or ``"degrade"`` (admit at draft quality: the
+    group is forced to the maximum share bucket, trading per-member
+    refinement steps for NFE — completions carry ``status="degraded"``).
+    """
+
+    name: str
+
+    def decide(self, ctx: AdmissionContext) -> str: ...
+
+
+class AdmitAllRequests:
+    """No overload control (the pre-QoS behavior): everything is served,
+    however deep the backlog."""
+
+    name = "admit_all"
+
+    def decide(self, ctx: AdmissionContext) -> str:
+        return ADMIT
+
+
+class SaturationAdmission:
+    """Shed (or degrade) past a saturation estimate.
+
+    A request is refused normal service once the backlog exceeds
+    ``horizon_ticks`` of drain time — at that depth its own completion
+    would land ``backlog`` ticks out, so serving it at full quality only
+    lengthens everyone's queue (the goodput-collapse regime graceful
+    degradation exists to avoid).  ``interactive`` requests get
+    ``interactive_headroom`` × the horizon before they shed: the classes
+    the queue exists to protect are the last to be turned away.
+
+    ``mode`` picks the refusal: ``"shed"`` rejects outright (cheapest,
+    an accounted ``status="shed"`` completion), ``"degrade"`` admits at
+    draft NFE (the group launches at the maximum share bucket — more
+    trunk, fewer per-member branch evals, ``status="degraded"``).
+    """
+
+    name = "saturation"
+
+    def __init__(self, horizon_ticks: float = 8.0, mode: str = SHED,
+                 interactive_headroom: float = 2.0):
+        if horizon_ticks <= 0:
+            raise ValueError(
+                f"horizon_ticks must be > 0, got {horizon_ticks}")
+        if mode not in (SHED, DEGRADE):
+            raise ValueError(f"mode must be 'shed' or 'degrade', "
+                             f"got {mode!r}")
+        if interactive_headroom < 1.0:
+            raise ValueError(f"interactive_headroom must be >= 1, "
+                             f"got {interactive_headroom}")
+        self.horizon_ticks = horizon_ticks
+        self.mode = mode
+        self.interactive_headroom = interactive_headroom
+
+    def decide(self, ctx: AdmissionContext) -> str:
+        limit = self.horizon_ticks
+        if QOS_RANK.get(ctx.qos, len(QOS_RANK)) == 0:
+            limit *= self.interactive_headroom
+        return ADMIT if ctx.backlog_ticks <= limit else self.mode
+
+
+_ADMISSION_POLICIES: Dict[str, Callable[..., AdmissionPolicy]] = {
+    "admit_all": AdmitAllRequests,
+    "shed": lambda **kw: SaturationAdmission(mode=SHED, **kw),
+    "degrade": lambda **kw: SaturationAdmission(mode=DEGRADE, **kw),
+}
+
+
+def make_admission_policy(spec: Union[str, AdmissionPolicy, None],
+                          **kw) -> AdmissionPolicy:
+    """Resolve an admission name (``"admit_all"`` / ``"shed"`` /
+    ``"degrade"``) or pass an instance through; ``kw`` goes to the named
+    constructor."""
+    if spec is None:
+        return AdmitAllRequests()
+    if isinstance(spec, str):
+        if spec not in _ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {spec!r}; "
+                             f"have {sorted(_ADMISSION_POLICIES)}")
+        return _ADMISSION_POLICIES[spec](**kw)
     return spec
 
 

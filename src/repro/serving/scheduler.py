@@ -38,6 +38,40 @@ the serving loop as repeated **ticks** over in-flight groups:
   ``summary()`` reports p50/p95 latency, NFE per request, batch occupancy
   and queue depth.
 
+Overload resilience (the regime where arrival rate exceeds service
+rate) is layered on the same tick loop:
+
+* **QoS classes** — every request carries ``qos`` (``interactive`` |
+  ``batch``); grouping never mixes classes, the advance order is the
+  pluggable ``launch_order`` comparator (default ``(qos, deadline)``),
+  and when ``max_groups_per_tick`` caps the tick, slots are split by
+  weighted-fair queueing over the classes (``qos_weights``, deficit
+  round-robin);
+* **preemption** — segments are resumable, so pausing a batch group is
+  free: a deadline-at-risk group claims an advance slot outright and the
+  displaced batch groups simply do not advance that tick (counted in
+  ``stats['preemptions']``/``'resumes'``); a ``starvation_ticks`` bound
+  forces any group skipped that many consecutive ticks into the next
+  tick's slots, so batch can never starve;
+* **admission control / load shedding** — each arrival passes a
+  ``serving.policies.AdmissionPolicy`` fed a saturation estimate
+  (backlog drain ticks + arrival-rate EWMA); past saturation requests
+  are shed (``status="shed"``) or degraded to draft NFE (the group runs
+  at the maximum share bucket, ``status="degraded"``), and a request
+  whose deadline is already unmeetable is rejected up front
+  (``status="rejected_expired"``) instead of churning the launch path;
+* **fault tolerance** — an optional ``serving.faults.FaultPlan`` injects
+  launch failures / cache corruption / tick stalls; failed segment
+  launches retry with exponential backoff (the carry is untouched, so a
+  successful retry is bitwise-identical to the fault-free run) and
+  exhausting ``max_retries`` sheds the group with its NFE moved to the
+  ``nfe_wasted`` ledger — every fault is recovered or accounted, never a
+  silent drop.
+
+With faults off, preemption off (or no capacity cap) and a single QoS
+class, all of this reduces to the PR-5 tick loop exactly — the
+conformance goldens are byte-stable against it.
+
 The synchronous engine is literally a special case: :meth:`run_batch`
 drains one prompt list through greedy-clique grouping and phase-aligned
 packed segments (ONE stacked launch per phase per tick across all beta
@@ -70,7 +104,11 @@ from repro.core.shared_sampling import (SampleCarry, branch_phase,
 from repro.models import dit, vae as vae_lib
 from repro.models import text_encoder as te
 from repro.serving import packing
-from repro.serving.policies import (LaunchContext, LaunchPolicy,
+from repro.serving.faults import FaultPlan
+from repro.serving.policies import (DEGRADE, DEFAULT_QOS, QOS_RANK, SHED,
+                                    AdmissionContext, AdmissionPolicy,
+                                    LaunchContext, LaunchPolicy,
+                                    make_admission_policy, make_launch_order,
                                     make_launch_policy)
 from repro.serving.trunk_cache import TrunkCache, TrunkEntry
 
@@ -78,11 +116,13 @@ from repro.serving.trunk_cache import TrunkCache, TrunkEntry
 @dataclass
 class Completed:
     prompt: str
-    image: np.ndarray
-    group_id: int
+    image: Optional[np.ndarray]   # None when the request was not served
+    group_id: int                 # -1 when refused before grouping
     nfe_share: float
     latency: float = 0.0          # completion time - arrival time
     cache_hit: bool = False       # trunk came from the cross-batch cache
+    qos: str = DEFAULT_QOS
+    status: str = "ok"            # ok | degraded | shed | rejected_expired
 
 
 @dataclass
@@ -93,6 +133,8 @@ class Request:
     deadline: Optional[float]
     cond: np.ndarray              # (Lc, dc) projected text features
     pooled: np.ndarray            # (d,) pooled embedding (similarity space)
+    qos: str = DEFAULT_QOS
+    degraded: bool = False        # admitted at draft quality (overload)
 
 
 @dataclass
@@ -113,6 +155,13 @@ class _Group:
     cache_hit: bool = False
     nfe: float = 0.0
     t_launch: float = 0.0
+    qos: str = DEFAULT_QOS        # members never mix classes
+    degraded: bool = False        # draft-NFE admission (max share bucket)
+    retries: int = 0              # consecutive failed segment launches
+    next_try_tick: int = 0        # backoff gate: skip advance before this
+    starved_ticks: int = 0        # consecutive ticks skipped by selection
+    preempted: bool = False       # currently paused in favour of a
+    #                               higher-class group (resume queue flag)
 
     def earliest_deadline(self) -> float:
         ds = [r.deadline for r in self.members if r.deadline is not None]
@@ -139,6 +188,13 @@ class RequestScheduler:
                  max_groups_per_tick: Optional[int] = None,
                  packed: bool = True,
                  policy: Union[str, LaunchPolicy, None] = "eager",
+                 launch_order: Any = "qos_edf",
+                 qos_weights: Optional[Dict[str, int]] = None,
+                 preempt: bool = True,
+                 starvation_ticks: int = 4,
+                 admission: Union[str, AdmissionPolicy, None] = None,
+                 faults: Optional[FaultPlan] = None,
+                 max_retries: int = 3,
                  seed: int = 0):
         """``group_size`` is the packed width N (static sampler shape);
         ``group_max`` caps clique size during batch grouping and defaults
@@ -153,7 +209,20 @@ class RequestScheduler:
         ``"pad_aware"`` holds sub-full groups up to a deadline-safe window
         and fills existing pack buckets before opening new ones (a
         :class:`~repro.serving.policies.LaunchPolicy` instance also
-        works, e.g. ``PadAwarePolicy(hold_ticks=4)``)."""
+        works, e.g. ``PadAwarePolicy(hold_ticks=4)``).
+
+        Overload knobs: ``launch_order`` is the advance-priority
+        comparator (``"fifo"`` / ``"edf"`` / ``"qos_edf"`` default, or a
+        group -> key callable); ``qos_weights`` are the WFQ weights per
+        class under a ``max_groups_per_tick`` cap (default interactive 2
+        : batch 1); ``preempt`` lets deadline-at-risk groups claim slots
+        from lower classes (``starvation_ticks`` bounds how long any
+        group can be skipped); ``admission`` is the per-request overload
+        policy (``"shed"`` / ``"degrade"`` /
+        :class:`~repro.serving.policies.AdmissionPolicy`); ``faults`` is
+        a :class:`~repro.serving.faults.FaultPlan` for chaos testing and
+        ``max_retries`` bounds per-group launch retries before the
+        shed escape hatch."""
         if group_size < 1:
             raise ValueError(f"group_size must be >= 1, got {group_size}")
         if slice_steps < 1:
@@ -175,6 +244,23 @@ class RequestScheduler:
         self.max_groups_per_tick = max_groups_per_tick
         self.packed = packed
         self.policy = make_launch_policy(policy)
+        self.launch_order = make_launch_order(launch_order)
+        self.qos_weights = dict(qos_weights or {"interactive": 2,
+                                                "batch": 1})
+        for q, w in self.qos_weights.items():
+            if w <= 0:
+                raise ValueError(
+                    f"qos_weights[{q!r}] must be > 0, got {w}")
+        self.preempt = preempt
+        if starvation_ticks < 1:
+            raise ValueError(
+                f"starvation_ticks must be >= 1, got {starvation_ticks}")
+        self.starvation_ticks = starvation_ticks
+        self.admission = make_admission_policy(admission)
+        self.faults = faults
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.max_retries = max_retries
         self.key = jax.random.PRNGKey(seed)
         # init noise is drawn per-gid from a fixed key, NOT from a key that
         # advances per launch: a group's trajectory then depends only on
@@ -195,10 +281,29 @@ class RequestScheduler:
             "completed": 0, "nfe_saved_cache": 0.0,
             # packed-execution accounting: segment launches, latent rows
             # those launches carried, and how many of the rows were pads
-            "launches": 0, "pack_rows": 0, "pack_pad_rows": 0}
+            "launches": 0, "pack_rows": 0, "pack_pad_rows": 0,
+            # overload / robustness ledger: every refused or degraded
+            # request and every injected-fault consequence is counted
+            # here — conservation is requests == completed + shed +
+            # shed_faulted + rejected_expired + pending
+            "shed": 0, "degraded": 0, "rejected_expired": 0,
+            "preemptions": 0, "resumes": 0, "retries": 0,
+            "launch_faults": 0, "shed_faulted": 0, "stalled_ticks": 0,
+            "deadline_met": 0, "deadline_missed": 0, "nfe_wasted": 0.0}
+        # per-class mirrors of the request-outcome counters + latencies
+        self.class_stats: Dict[str, Dict[str, float]] = {}
+        self.class_latencies: Dict[str, "deque[float]"] = {}
+        # arrival-process estimate: EWMA of submitted requests per tick
+        # (feeds AdmissionContext.backlog decisions and the adaptive
+        # pad-aware hold budget via LaunchContext.arrival_rate)
+        self._arrival_rate = 0.0
+        self._arrivals_since_tick = 0
+        # deficit-round-robin credit per class (persists across ticks so
+        # fractional weight ratios average out over time)
+        self._wfq_credit: Dict[str, float] = {}
         # bounded windows: a long-lived server must not grow stat state
         # without bound; summary() percentiles are over the trailing window
-        stat_window = 65_536
+        stat_window = self._stat_window = 65_536
         self.latencies: "deque[float]" = deque(maxlen=stat_window)
         self.occupancy: "deque[float]" = deque(maxlen=stat_window)
         #                                      members/group_size at launch
@@ -267,44 +372,132 @@ class RequestScheduler:
         return time.monotonic() if now is None else float(now)
 
     def submit(self, prompts: Sequence[str], now: Optional[float] = None,
-               deadline: Optional[float] = None) -> List[int]:
+               deadline: Optional[float] = None,
+               qos: Union[str, Sequence[str]] = DEFAULT_QOS) -> List[int]:
         """Queue prompts (one text-tower call per submit batch); they are
-        grouped at the next tick.  Returns request ids."""
+        grouped at the next tick.  ``qos`` is one class for the whole
+        batch or a per-prompt sequence (``"interactive"`` | ``"batch"``).
+        Returns request ids."""
         if not prompts:
             return []
         now = self._now(now)
+        qs = [qos] * len(prompts) if isinstance(qos, str) else list(qos)
+        if len(qs) != len(prompts):
+            raise ValueError(f"qos sequence length {len(qs)} != "
+                             f"{len(prompts)} prompts")
+        for q in qs:
+            if q not in QOS_RANK:
+                raise ValueError(f"unknown qos class {q!r}; "
+                                 f"have {sorted(QOS_RANK)}")
         conds, pooled = self._embed(prompts)
         rids = []
-        for p, c, e in zip(prompts, conds, pooled):
-            r = Request(self._next_rid, p, now, deadline, c, e)
+        for p, c, e, q in zip(prompts, conds, pooled, qs):
+            r = Request(self._next_rid, p, now, deadline, c, e, qos=q)
             self._next_rid += 1
             self.arrivals.append(r)
             rids.append(r.rid)
         self.stats["requests"] += len(prompts)
+        self._arrivals_since_tick += len(prompts)
         return rids
 
-    def _admit(self) -> None:
+    # -- overload accounting ---------------------------------------------
+    def _cstat(self, qos: str, key: str, inc: float = 1) -> None:
+        d = self.class_stats.setdefault(
+            qos, {"requests": 0, "completed": 0, "shed": 0, "degraded": 0,
+                  "rejected_expired": 0, "preemptions": 0,
+                  "deadline_met": 0, "deadline_missed": 0})
+        d[key] = d.get(key, 0) + inc
+
+    def _refuse(self, r: Request, status: str) -> Completed:
+        """An accounted non-service outcome (shed / rejected_expired):
+        the request leaves the system as a Completed record with no
+        image — conservation still sees it exactly once."""
+        self.stats[status] += 1
+        self._cstat(r.qos, "requests")
+        self._cstat(r.qos, status)
+        return Completed(prompt=r.prompt, image=None, group_id=-1,
+                         nfe_share=0.0, latency=0.0, qos=r.qos,
+                         status=status)
+
+    def _remaining_ticks(self, g: _Group) -> int:
+        """Conservative advance-ticks left for an in-flight group: one
+        segment per tick plus one for the shared->branch boundary."""
+        rem = self.sage.total_steps - g.steps_done
+        return -(-rem // self.slice_steps) + (1 if g.state == "shared"
+                                              else 0)
+
+    def _backlog_ticks(self) -> float:
+        """Saturation estimate: ticks to drain the work already in the
+        system.  Under a ``max_groups_per_tick`` cap the advance slots
+        are the bottleneck (sum of per-group ticks over the cap);
+        uncapped, every group advances each tick and the backlog is just
+        the longest remaining group."""
+        ttf = self._ticks_to_finish()
+        loads = [self._remaining_ticks(g) for g in self.inflight]
+        loads += [ttf] * len(self.open_groups)
+        if not loads:
+            return 0.0
+        if self.max_groups_per_tick is None:
+            return float(max(loads))
+        return sum(loads) / self.max_groups_per_tick
+
+    def _admit(self, now: float) -> List[Completed]:
+        """Admission: expired-deadline rejection and the overload policy
+        first, then class-compartmented incremental grouping (a request
+        only joins an open group of its own (qos, degraded) compartment —
+        mixing would let a batch member drag an interactive group or an
+        admitted-at-draft member degrade full-quality neighbours).
+        Returns the refusal records for this tick."""
+        notices: List[Completed] = []
         if not self.arrivals:
-            return
+            return notices
+        backlog = self._backlog_ticks()
+        ttf = self._ticks_to_finish()
+        per_group = (ttf / self.max_groups_per_tick
+                     if self.max_groups_per_tick else 0.0)
+        arrivals, self.arrivals = self.arrivals, []
         # member-embedding stacks maintained incrementally: only the group
         # an arrival joins changes, so a burst of A arrivals over G open
         # groups costs O(A + G) stacks, not O(A * G)
         open_embeds = [np.stack([m.pooled for m in g.members])
                        for g in self.open_groups]
-        for r in self.arrivals:
+        for r in arrivals:
+            # bugfix (was: churn through the normal launch path): a
+            # deadline already expired — or expiring within one segment,
+            # so even an immediate solo launch cannot finish in time —
+            # is refused up front with its own status
+            if r.deadline is not None and r.deadline <= now + 1.0:
+                notices.append(self._refuse(r, "rejected_expired"))
+                continue
+            verdict = self.admission.decide(AdmissionContext(
+                now=now, qos=r.qos, deadline=r.deadline,
+                backlog_ticks=backlog, ticks_to_finish=ttf,
+                arrival_rate=self._arrival_rate))
+            if verdict == SHED:
+                notices.append(self._refuse(r, "shed"))
+                continue
+            if verdict == DEGRADE:
+                r.degraded = True
+            self._cstat(r.qos, "requests")
+            cand = [i for i, g in enumerate(self.open_groups)
+                    if g.qos == r.qos and g.degraded == r.degraded]
             gi = grouping.incremental_assign(
-                r.pooled, open_embeds, self.sage.tau_min,
-                group_max=self.group_size)
+                r.pooled, [open_embeds[i] for i in cand],
+                self.sage.tau_min, group_max=self.group_size)
             if gi >= 0:
-                self.open_groups[gi].members.append(r)
-                open_embeds[gi] = np.concatenate(
-                    [open_embeds[gi], r.pooled[None]], 0)
+                i = cand[gi]
+                self.open_groups[i].members.append(r)
+                open_embeds[i] = np.concatenate(
+                    [open_embeds[i], r.pooled[None]], 0)
             else:
                 self.open_groups.append(
-                    _Group(self._next_gid, [r], created_tick=self.ticks))
+                    _Group(self._next_gid, [r], created_tick=self.ticks,
+                           qos=r.qos, degraded=r.degraded))
                 self._next_gid += 1
                 open_embeds.append(np.asarray(r.pooled)[None])
-        self.arrivals = []
+                backlog += per_group     # each seeded group deepens the
+                #                          queue the next verdict sees
+        return notices
 
     # -- launch ----------------------------------------------------------
     @staticmethod
@@ -335,10 +528,18 @@ class RequestScheduler:
         return self._beta_bucket(
             self._min_sim(grouping.similarity_matrix(e)), adaptive)
 
+    def _effective_beta(self, g: _Group, adaptive: bool) -> float:
+        """The bucket a group actually runs at: degraded admission forces
+        the maximum share bucket (draft NFE — longest shared trunk,
+        fewest per-member branch evals), otherwise the similarity rule."""
+        if g.degraded:
+            return max(self.branch_buckets)
+        return self._group_beta(g.members, adaptive)
+
     def _launch(self, g: _Group, now: float, adaptive: bool,
                 beta: Optional[float] = None) -> None:
         T = self.sage.total_steps
-        g.beta = self._group_beta(g.members, adaptive) if beta is None \
+        g.beta = self._effective_beta(g, adaptive) if beta is None \
             else beta
         g.n_shared, _ = phase_split(T, g.beta)
         N = len(g.members)
@@ -409,9 +610,14 @@ class RequestScheduler:
             if g.steps_done == self.sage.total_steps:
                 g.state = "done"
 
-    def _advance(self, g: _Group) -> None:
+    def _advance(self, g: _Group) -> bool:
         """One segment of at most ``slice_steps`` for ONE group — the
-        ``packed=False`` oracle path (one launch per group per tick)."""
+        ``packed=False`` oracle path (one launch per group per tick).
+        Returns whether the launch succeeded; an injected failure leaves
+        the carry untouched (the retry re-runs the same computation)."""
+        if self.faults is not None and self.faults.launch_fails():
+            self.stats["launch_faults"] += 1
+            return False
         null = self._null_cond()
         if g.state == "shared":
             s = min(self.slice_steps, g.n_shared - g.steps_done)
@@ -423,10 +629,12 @@ class RequestScheduler:
                 g.carry, g.cond_flat, g.mask, null, jnp.int32(g.n_shared))
             self._count_launch(len(g.members), 0)
         self._after_segment(g, s)
+        g.retries = 0
+        return True
 
     def _advance_packed(self, todo: List[_Group],
                         slice_steps: Optional[int] = None,
-                        align_phases: bool = False) -> None:
+                        align_phases: bool = False) -> List[_Group]:
         """One tick of packed execution: bucket the in-flight groups by
         pack signature, advance each bucket with ONE phase call over a
         stacked carry (per-row step/fork indices), scatter back.  Buckets
@@ -439,15 +647,26 @@ class RequestScheduler:
 
         ``align_phases=True`` (the ``run_batch`` drain) aligns segment
         lengths within each phase so every tick issues at most one
-        stacked launch per phase — see ``packing.build_packs``."""
+        stacked launch per phase — see ``packing.build_packs``.
+
+        Returns the groups whose bucket's launch was failed by the fault
+        plan this tick (their carries are untouched; ``tick()`` routes
+        them through the retry/shed machinery).  Fault injection is per
+        *launch*, so one failed bucket takes all its pack-mates down
+        together — exactly the blast radius of a real failed dispatch."""
         null = self._null_cond()
         seg_len: Dict[int, int] = {}
+        failed: List[_Group] = []
         for key, groups in packing.build_packs(
                 todo, self.slice_steps if slice_steps is None else
                 slice_steps, self.sage.total_steps,
                 self.sage.sampler, self._latent_shape,
-                align_phases=align_phases):
+                align_phases=align_phases, order_key=self.launch_order):
             s = key.n_steps
+            if self.faults is not None and self.faults.launch_fails():
+                self.stats["launch_faults"] += 1
+                failed.extend(groups)
+                continue
             if key.phase == "shared":
                 carry, cbar = packing.pack_shared(groups)
                 out = self._shared_runner(s)(carry, cbar, null)
@@ -463,7 +682,36 @@ class RequestScheduler:
             for g in groups:
                 seg_len[g.gid] = s
         for g in todo:
-            self._after_segment(g, seg_len[g.gid])
+            if g.gid in seg_len:
+                self._after_segment(g, seg_len[g.gid])
+                g.retries = 0
+        return failed
+
+    def _handle_failures(self, failed: List[_Group],
+                         now: float) -> List[Completed]:
+        """Retry-with-backoff, bounded by ``max_retries``: a failed group
+        keeps its carry and is re-advanced after ``2^(retries-1)`` ticks
+        (capped at 8) — a successful retry is bitwise-identical to the
+        fault-free run.  Exhaustion takes the shed escape hatch: members
+        complete with ``status='shed'`` and the NFE already spent moves
+        to the ``nfe_wasted`` ledger (never a silent drop)."""
+        out: List[Completed] = []
+        for g in failed:
+            g.retries += 1
+            if g.retries <= self.max_retries:
+                self.stats["retries"] += 1
+                g.next_try_tick = self.ticks + min(2 ** (g.retries - 1), 8)
+                continue
+            self.inflight.remove(g)
+            self.stats["shed_faulted"] += len(g.members)
+            self.stats["nfe_wasted"] += g.nfe
+            for r in g.members:
+                self._cstat(r.qos, "shed")
+                out.append(Completed(
+                    prompt=r.prompt, image=None, group_id=g.gid,
+                    nfe_share=0.0, latency=now - r.t_arrival, qos=r.qos,
+                    status="shed"))
+        return out
 
     def _decode(self, latents: jnp.ndarray) -> np.ndarray:
         """latents (B, H, W, C) -> images (or raw latents without a VAE)."""
@@ -476,15 +724,28 @@ class RequestScheduler:
         imgs = self._decode(g.carry.z)
         self.stats["nfe"] += g.nfe
         self.stats["completed"] += len(g.members)
+        status = "degraded" if g.degraded else "ok"
         done = []
         for i, r in enumerate(g.members):
             lat = now - r.t_arrival if record_latency else 0.0
             if record_latency:
+                # per-class outcome ledger (goodput = deadline-met
+                # completions; deadline-free requests always count as met)
                 self.latencies.append(lat)
+                self.class_latencies.setdefault(
+                    r.qos, deque(maxlen=self._stat_window)).append(lat)
+                self._cstat(r.qos, "completed")
+                if g.degraded:
+                    self.stats["degraded"] += 1
+                    self._cstat(r.qos, "degraded")
+                met = r.deadline is None or now <= r.deadline
+                key = "deadline_met" if met else "deadline_missed"
+                self.stats[key] += 1
+                self._cstat(r.qos, key)
             done.append(Completed(
                 prompt=r.prompt, image=imgs[i], group_id=g.gid,
                 nfe_share=g.nfe / len(g.members), latency=lat,
-                cache_hit=g.cache_hit))
+                cache_hit=g.cache_hit, qos=r.qos, status=status))
         return done
 
     # -- launch-policy context -------------------------------------------
@@ -497,7 +758,7 @@ class RequestScheduler:
         """The pack bucket an OPEN group would occupy if launched this
         tick (``policies.LaunchContext.signature_of``)."""
         n_shared, _ = phase_split(self.sage.total_steps,
-                                  self._group_beta(g.members, adaptive))
+                                  self._effective_beta(g, adaptive))
         limit = n_shared if n_shared > 0 else self.sage.total_steps
         return packing.PackKey(
             "shared" if n_shared > 0 else "branch", self.sage.sampler,
@@ -514,19 +775,137 @@ class RequestScheduler:
                     g, self.slice_steps, self.sage.total_steps,
                     self.sage.sampler, self._latent_shape)
                 for g in self.inflight),
-            signature_of=lambda g: self._open_signature(g, adaptive))
+            signature_of=lambda g: self._open_signature(g, adaptive),
+            arrival_rate=self._arrival_rate)
+
+    # -- advance-slot selection ------------------------------------------
+    def _at_risk(self, g: _Group, now: float) -> bool:
+        """Deadline-at-risk test: skipping even one tick (one time unit
+        under the virtual clock) would push the group's conservative
+        finish past its earliest deadline (plus the configured slack)."""
+        dl = g.earliest_deadline()
+        if dl == float("inf"):
+            return False
+        return dl - now <= (self._remaining_ticks(g)
+                            + self.deadline_slack + 1.0)
+
+    def _preemptive_select(self, ready: List[_Group], cap: int,
+                           now: float) -> List[_Group]:
+        """Claim the capped advance slots in three passes over the
+        ``launch_order``-sorted ready list: any group at the
+        ``starvation_ticks`` bound is forced in first (the bound is a
+        hard guarantee — it must hold even when every tick brings fresh
+        at-risk work, so it outranks the deadline pass), then
+        deadline-at-risk groups take slots outright (this is the
+        preemption — displaced groups simply do not advance, their
+        carries parked until resumed), then the remaining slots go by
+        deficit round-robin over the QoS classes with ``qos_weights``
+        (credit persists across ticks, so fractional weight ratios are
+        honoured in the long run)."""
+        slots: List[_Group] = []
+        taken = set()
+
+        def take(g: _Group) -> None:
+            slots.append(g)
+            taken.add(g.gid)
+
+        # pass 1: the no-starvation bound — longest-starved first (NOT
+        # launch order: under deep backlog many groups sit at the bound,
+        # and scanning by class would let starving interactive groups
+        # shut out a longer-starved batch group indefinitely)
+        starving = sorted(
+            (g for g in ready
+             if g.starved_ticks >= self.starvation_ticks),
+            key=lambda g: (-g.starved_ticks,) + tuple(self.launch_order(g)))
+        for g in starving:
+            if len(slots) >= cap:
+                break
+            take(g)
+        for g in ready:              # pass 2: deadline-at-risk claim
+            if len(slots) >= cap:
+                break
+            if g.gid not in taken and self._at_risk(g, now):
+                take(g)
+        if len(slots) < cap:         # pass 3: weighted-fair round-robin
+            queues: Dict[str, "deque[_Group]"] = {}
+            for g in ready:
+                if g.gid not in taken:
+                    queues.setdefault(g.qos, deque()).append(g)
+            classes = sorted(queues,
+                             key=lambda q: (QOS_RANK.get(q, len(QOS_RANK)),
+                                            q))
+            while len(slots) < cap and any(queues.values()):
+                for q in classes:
+                    if not queues[q]:
+                        self._wfq_credit[q] = 0.0   # no deficit hoarding
+                        continue
+                    self._wfq_credit[q] = (self._wfq_credit.get(q, 0.0)
+                                           + self.qos_weights.get(q, 1))
+                    while (queues[q] and len(slots) < cap
+                           and self._wfq_credit[q] >= 1.0):
+                        take(queues[q].popleft())
+                        self._wfq_credit[q] -= 1.0
+        # preemption accounting: anyone the plain priority prefix would
+        # have advanced this tick but the claiming passes displaced
+        for g in ready[:cap]:
+            if g.gid not in taken and not g.preempted:
+                g.preempted = True
+                self.stats["preemptions"] += 1
+                self._cstat(g.qos, "preemptions")
+        return slots
+
+    def _select_todo(self, now: float) -> List[_Group]:
+        """This tick's advance set.  Uncapped, every launch-ready group
+        advances (retry backoff is the only filter).  Under a
+        ``max_groups_per_tick`` cap, ``preempt=False`` gives the slots to
+        the plain ``launch_order`` prefix (the PR-5 rule under the
+        default single-class order); ``preempt=True`` routes them through
+        :meth:`_preemptive_select`.  Starvation/resume bookkeeping lives
+        here so both paths age skipped groups consistently."""
+        ready = [g for g in self.inflight if g.next_try_tick <= self.ticks]
+        ready.sort(key=self.launch_order)
+        cap = self.max_groups_per_tick
+        if cap is None or len(ready) <= cap:
+            selected = ready
+        elif not self.preempt:
+            selected = ready[:cap]
+        else:
+            selected = self._preemptive_select(ready, cap, now)
+        chosen = {g.gid for g in selected}
+        for g in ready:
+            if g.gid in chosen:
+                if g.preempted:
+                    g.preempted = False
+                    self.stats["resumes"] += 1
+                g.starved_ticks = 0
+            else:
+                g.starved_ticks += 1
+        return selected
 
     # -- the tick --------------------------------------------------------
     def tick(self, now: Optional[float] = None,
              adaptive: Optional[bool] = None) -> List[Completed]:
-        """One engine iteration: admit arrivals, launch the groups the
-        launch policy selects, advance in-flight groups one segment each,
-        emit completions."""
+        """One engine iteration: admit arrivals (returning shed /
+        rejected notices alongside completions), launch the groups the
+        launch policy selects, advance the selected in-flight groups one
+        segment each, emit completions."""
         now = self._now(now)
         adaptive = (self.sage.adaptive_branch if adaptive is None
                     else adaptive)
         self.ticks += 1
-        self._admit()
+        # arrival-process EWMA (requests per tick) — feeds admission
+        # decisions and the adaptive pad-aware hold budget
+        self._arrival_rate = (0.5 * self._arrivals_since_tick
+                              + 0.5 * self._arrival_rate)
+        self._arrivals_since_tick = 0
+        if self.faults is not None and self.faults.tick_stalls():
+            # a stalled tick is pure lost time: no admission, no
+            # launches, no segments.  Deadline machinery sees the lost
+            # time on the next live tick — stalled-away slack surfaces
+            # as at-risk claims or rejected_expired, never silently
+            self.stats["stalled_ticks"] += 1
+            return []
+        done: List[Completed] = self._admit(now)
         self.queue_depth.append(
             sum(len(g.members) for g in self.open_groups))
 
@@ -534,18 +913,16 @@ class RequestScheduler:
         for g in self.policy.launches(list(self.open_groups), ctx):
             self._launch(g, now, adaptive)
 
-        # earliest deadline first, then launch order
-        todo = sorted(self.inflight, key=lambda g: (g.earliest_deadline(),
-                                                    g.gid))
-        if self.max_groups_per_tick is not None:
-            todo = todo[:self.max_groups_per_tick]
+        todo = self._select_todo(now)
+        failed: List[_Group] = []
         if self.packed:
             if todo:
-                self._advance_packed(todo)
+                failed = self._advance_packed(todo)
         else:
             for g in todo:
-                self._advance(g)
-        done: List[Completed] = []
+                if not self._advance(g):
+                    failed.append(g)
+        done.extend(self._handle_failures(failed, now))
         for g in todo:
             if g.state == "done":
                 done.extend(self._complete(g, now))
@@ -602,7 +979,11 @@ class RequestScheduler:
         # clique's beta bucket — per-clique, not batch-mean (a singleton's
         # pinned 1.0 min-sim must not drag other cliques' buckets)
         batch: List[_Group] = []
-        cache, self.trunk_cache = self.trunk_cache, None   # sync: no cache
+        # sync drain: no cache, and no fault injection — the drain loop
+        # has no tick cadence to retry on, and run_batch is the
+        # conformance oracle the chaos tests compare *against*
+        cache, self.trunk_cache = self.trunk_cache, None
+        faults, self.faults = self.faults, None
         try:
             for clique in cliques:
                 beta = self._beta_bucket(
@@ -640,6 +1021,7 @@ class RequestScheduler:
                         self.inflight.remove(g)
         finally:
             self.trunk_cache = cache
+            self.faults = faults
         return done
 
     # -- reporting -------------------------------------------------------
@@ -678,6 +1060,28 @@ class RequestScheduler:
                           / self.stats["pack_rows"]
                           if self.stats["pack_rows"] else 0.0),
         }
+        # overload / robustness ledger + goodput (deadline-met
+        # completions — the number a QoS policy is supposed to maximise
+        # under saturation, where raw completion counts reward lateness)
+        for k in ("shed", "shed_faulted", "degraded", "rejected_expired",
+                  "preemptions", "resumes", "retries", "launch_faults",
+                  "stalled_ticks", "deadline_met", "deadline_missed",
+                  "nfe_wasted"):
+            out[k] = self.stats[k]
+        out["goodput"] = self.stats["deadline_met"]
+        out["goodput_per_tick"] = (self.stats["deadline_met"] / self.ticks
+                                   if self.ticks else 0.0)
+        out["arrival_rate"] = self._arrival_rate
+        out["backlog_ticks"] = self._backlog_ticks()
+        for q, cs in sorted(self.class_stats.items()):
+            for k, v in sorted(cs.items()):
+                out[f"{q}_{k}"] = v
+        for q, lats in sorted(self.class_latencies.items()):
+            a = np.asarray(lats, np.float64)
+            out[f"{q}_latency_p50"] = (float(np.percentile(a, 50))
+                                       if a.size else 0.0)
+            out[f"{q}_latency_p95"] = (float(np.percentile(a, 95))
+                                       if a.size else 0.0)
         if self.trunk_cache is not None:
             # hit accounting is policy-visible: exact-key hits and
             # admission rejections surface next to the hit rate so a

@@ -48,6 +48,7 @@ from typing import Any, Hashable, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.serving.faults import FaultPlan, array_crc, corrupt_array
 from repro.serving.kvcache import cache_bytes
 from repro.serving.policies import CacheAdmission, make_cache_admission
 
@@ -66,10 +67,16 @@ class TrunkEntry:
     centroid: np.ndarray         # unit-norm mean prompt embedding
     cfg_key: Hashable            # sampler/schedule compatibility fingerprint
     nbytes: int = 0
+    crc: Optional[int] = None    # integrity fingerprint of z's bytes —
+    #                              validated on every hit, so a corrupted
+    #                              payload reads as a miss, never as a
+    #                              silently-wrong trunk
 
     def __post_init__(self):
         if not self.nbytes:
             self.nbytes = cache_bytes((self.z, self.eps_prev))
+        if self.crc is None:
+            self.crc = array_crc(self.z)
 
 
 def _unit(v: np.ndarray) -> np.ndarray:
@@ -87,7 +94,8 @@ class TrunkCache:
     def __init__(self, tau_trunk: float = 0.95,
                  max_bytes: int = 64 * 1024 * 1024,
                  quant_decimals: int = 2, store_history: bool = True,
-                 admission: Union[str, CacheAdmission, None] = None):
+                 admission: Union[str, CacheAdmission, None] = None,
+                 faults: Optional[FaultPlan] = None):
         """``store_history=False`` drops the ``eps_prev`` array from stored
         entries (halving bytes per trunk, doubling capacity under the
         budget): the restore path *forks* — solver history restarts at the
@@ -97,6 +105,11 @@ class TrunkCache:
         ``admission`` is a :class:`~repro.serving.policies.CacheAdmission`
         instance or name (``"always"`` — the default store-everything LRU,
         or ``"popularity"`` — threshold admission + cold-first eviction).
+
+        ``faults`` is an optional
+        :class:`~repro.serving.faults.FaultPlan` injecting forced misses
+        and payload corruption on the hit path (chaos testing); the CRC
+        integrity gate that catches corruption is always on.
         """
         if not 0.0 < tau_trunk <= 1.0:
             raise ValueError(f"tau_trunk must be in (0, 1], got {tau_trunk}")
@@ -105,11 +118,13 @@ class TrunkCache:
         self.quant_decimals = quant_decimals
         self.store_history = store_history
         self.admission = make_cache_admission(admission)
+        self.faults = faults
         self._entries: "OrderedDict[Tuple, TrunkEntry]" = OrderedDict()
         self.bytes = 0
         self.stats = {"hits": 0, "exact_hits": 0, "misses": 0,
                       "inserts": 0, "evictions": 0, "overwrites": 0,
-                      "admission_rejects": 0}
+                      "admission_rejects": 0, "fault_forced_misses": 0,
+                      "integrity_drops": 0}
 
     # ------------------------------------------------------------------
     def _quant_key(self, centroid: np.ndarray, beta_bucket: float,
@@ -134,23 +149,46 @@ class TrunkCache:
         # rounds by up to 0.5 * 10^-quant_decimals), so an exact-key hit
         # must still clear the cosine threshold
         if hit is not None and float(hit.centroid @ c) >= self.tau_trunk:
-            self._entries.move_to_end(key)
-            self.stats["hits"] += 1
-            self.stats["exact_hits"] += 1
-            return hit
-        best_key, best_sim = None, self.tau_trunk
-        for k, e in self._entries.items():
-            if (k[1], k[2], k[3]) != (round(beta_bucket, 4), cfg_key, shape):
-                continue
-            sim = float(e.centroid @ c)
-            if sim >= best_sim:
-                best_key, best_sim = k, sim
-        if best_key is None:
+            hit_key, exact = key, True
+        else:
+            hit_key, best_sim = None, self.tau_trunk
+            for k, e in self._entries.items():
+                if (k[1], k[2], k[3]) != (round(beta_bucket, 4), cfg_key,
+                                          shape):
+                    continue
+                sim = float(e.centroid @ c)
+                if sim >= best_sim:
+                    hit_key, best_sim = k, sim
+            exact = False
+        if hit_key is None:
             self.stats["misses"] += 1
             return None
-        self._entries.move_to_end(best_key)
+        entry = self._entries[hit_key]
+        # fault injection rides the hit path only (a miss has nothing to
+        # lose): a forced miss leaves the entry intact, corruption
+        # damages the stored payload and must be caught below
+        if self.faults is not None:
+            if self.faults.cache_miss():
+                self.stats["fault_forced_misses"] += 1
+                self.stats["misses"] += 1
+                return None
+            if self.faults.cache_corrupt():
+                entry.z = corrupt_array(entry.z)
+        # integrity gate (always on, not only under injection): a stored
+        # trunk whose bytes no longer match the insert-time CRC is
+        # dropped and reported as a miss — recomputing the shared phase
+        # is exact, silently denoising from a damaged trunk is not
+        if entry.crc != array_crc(entry.z):
+            self._entries.pop(hit_key)
+            self.bytes -= entry.nbytes
+            self.stats["integrity_drops"] += 1
+            self.stats["misses"] += 1
+            return None
+        self._entries.move_to_end(hit_key)
         self.stats["hits"] += 1
-        return self._entries[best_key]
+        if exact:
+            self.stats["exact_hits"] += 1
+        return entry
 
     def insert(self, entry: TrunkEntry,
                shape: Optional[Tuple[int, ...]] = None) -> bool:

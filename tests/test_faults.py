@@ -1,0 +1,332 @@
+"""Fault-injection harness: determinism, recovery, accounting.
+
+The contract under test (the robustness acceptance bar): every injected
+fault is either **recovered** — a retried segment launch or a
+recomputed-after-corruption trunk produces results bitwise-identical to
+the fault-free run — or **surfaced** as an accounted shed
+(``status="shed"``, NFE moved to the ``nfe_wasted`` ledger).  Never a
+silent drop: request conservation closes exactly on every chaos trace.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import SageConfig, get_config
+from repro.models import dit
+from repro.models import text_encoder as te
+from repro.serving.faults import (KINDS, FaultPlan, array_crc,
+                                  corrupt_array)
+from repro.serving.scheduler import RequestScheduler
+from repro.serving.trunk_cache import TrunkCache, TrunkEntry
+
+CFG = get_config("sage-dit", smoke=True)
+PARAMS = dit.init_params(CFG, jax.random.PRNGKey(0))
+TC = te.text_cfg(dim=CFG.cond_dim, layers=2)
+TEXT_PARAMS = te.init_text(jax.random.PRNGKey(1), TC)
+
+SAGE = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                  tau_min=0.2)
+
+
+def _sched(**kw):
+    kw.setdefault("group_size", 2)
+    kw.setdefault("slice_steps", 2)
+    return RequestScheduler(CFG, SAGE, PARAMS, TEXT_PARAMS, TC, **kw)
+
+
+def _run_trace(sched, waves, max_ticks=300):
+    """Submit one wave per tick, then tick until drained (bounded)."""
+    done, t = [], 0.0
+    for wave in waves:
+        t += 1.0
+        if wave:
+            sched.submit(wave, now=t)
+        done.extend(sched.tick(now=t))
+    while sched.pending and t < max_ticks:
+        t += 1.0
+        done.extend(sched.tick(now=t))
+    return done
+
+
+def _conserved(s, done):
+    assert s.stats["requests"] == s.stats["completed"] + s.stats["shed"] \
+        + s.stats["shed_faulted"] + s.stats["rejected_expired"] + s.pending
+    assert len(done) == s.stats["requests"] - s.pending
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan unit behavior
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic_replay():
+    """Same seed -> identical injection sequence, and each kind's stream
+    is independent: enabling other kinds never changes a kind's draws."""
+    a = FaultPlan(seed=5, p_launch_fail=0.3)
+    b = FaultPlan(seed=5, p_launch_fail=0.3)
+    seq_a = [a.launch_fails() for _ in range(64)]
+    assert seq_a == [b.launch_fails() for _ in range(64)]
+    assert any(seq_a) and not all(seq_a)
+    # independence: interleaving other kinds leaves the stream untouched
+    c = FaultPlan(seed=5, p_launch_fail=0.3, p_cache_miss=0.9,
+                  p_tick_stall=0.9)
+    seq_c = []
+    for _ in range(64):
+        c.cache_miss()
+        seq_c.append(c.launch_fails())
+        c.tick_stalls()
+    assert seq_c == seq_a
+    assert a.queries["launch_fail"] == 64
+    assert a.injected["launch_fail"] == sum(seq_a)
+    assert a.total_injected == sum(seq_a)
+
+
+def test_fault_plan_zero_probability_never_fires():
+    p = FaultPlan(seed=0)
+    assert not any(p.launch_fails() or p.cache_miss() or p.cache_corrupt()
+                   or p.tick_stalls() for _ in range(32))
+    assert p.total_injected == 0
+    assert p.queries["launch_fail"] == 32
+
+
+def test_fault_plan_max_faults_bound():
+    p = FaultPlan(seed=1, p_launch_fail=1.0, max_faults=3)
+    fired = [p.launch_fails() for _ in range(10)]
+    assert fired == [True] * 3 + [False] * 7
+    assert p.total_injected == 3
+
+
+def test_fault_plan_validation_and_parse():
+    with pytest.raises(ValueError, match="p_launch_fail"):
+        FaultPlan(p_launch_fail=1.5)
+    p = FaultPlan.parse("launch=0.2,miss=0.1,corrupt=0.05,stall=0.1,"
+                        "seed=3,max=20")
+    assert (p.p_launch_fail, p.p_cache_miss, p.p_cache_corrupt,
+            p.p_tick_stall) == (0.2, 0.1, 0.05, 0.1)
+    assert p.seed == 3 and p.max_faults == 20
+    assert FaultPlan.parse("launch=1.0").p_cache_miss == 0.0
+    with pytest.raises(ValueError, match="unknown fault-plan key"):
+        FaultPlan.parse("latency=0.5")
+    with pytest.raises(ValueError, match="key=value"):
+        FaultPlan.parse("launch")
+    assert set(KINDS) == {"launch_fail", "cache_miss", "cache_corrupt",
+                          "tick_stall"}
+
+
+def test_corrupt_array_breaks_crc():
+    x = np.arange(24, dtype=np.float32).reshape(2, 3, 4)
+    crc = array_crc(x)
+    y = corrupt_array(x)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    assert array_crc(y) != crc
+    assert array_crc(x) == crc               # original untouched
+    assert not np.array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# TrunkCache fault points + the always-on integrity gate
+# ---------------------------------------------------------------------------
+
+def _entry(seed=0):
+    rng = np.random.RandomState(seed)
+    return TrunkEntry(
+        z=rng.randn(1, 4, 4, 2).astype(np.float32), eps_prev=None,
+        step_idx=2, beta_bucket=0.2, rng_fold=0,
+        centroid=rng.randn(8).astype(np.float32), cfg_key=("k",))
+
+
+def test_cache_forced_miss_keeps_entry():
+    cache = TrunkCache(tau_trunk=0.5,
+                       faults=FaultPlan(seed=0, p_cache_miss=1.0))
+    e = _entry()
+    assert cache.insert(e)
+    got = cache.lookup(e.centroid, 0.2, ("k",), (1, 4, 4, 2))
+    assert got is None
+    assert cache.stats["fault_forced_misses"] == 1
+    assert cache.stats["misses"] == 1 and cache.stats["hits"] == 0
+    assert len(cache) == 1                    # entry survives the fault
+
+
+def test_cache_corruption_detected_and_dropped():
+    cache = TrunkCache(tau_trunk=0.5,
+                       faults=FaultPlan(seed=0, p_cache_corrupt=1.0))
+    e = _entry()
+    assert cache.insert(e)
+    got = cache.lookup(e.centroid, 0.2, ("k",), (1, 4, 4, 2))
+    assert got is None                        # CRC gate caught the damage
+    assert cache.stats["integrity_drops"] == 1
+    assert cache.stats["misses"] == 1 and cache.stats["hits"] == 0
+    assert len(cache) == 0                    # damaged entry evicted
+    assert cache.bytes == 0                   # byte ledger stays closed
+
+
+def test_cache_integrity_gate_always_on():
+    """External corruption (no FaultPlan at all) is still caught: the
+    CRC check is part of the hit path, not of the chaos harness."""
+    cache = TrunkCache(tau_trunk=0.5)
+    e = _entry()
+    assert cache.insert(e)
+    e.z = corrupt_array(e.z)                  # rot the stored payload
+    assert cache.lookup(e.centroid, 0.2, ("k",), (1, 4, 4, 2)) is None
+    assert cache.stats["integrity_drops"] == 1
+    assert len(cache) == 0
+
+
+def test_cache_clean_hit_unaffected_by_plan_object():
+    """A plan with zero probabilities must be fully transparent."""
+    cache = TrunkCache(tau_trunk=0.5, faults=FaultPlan(seed=0))
+    e = _entry()
+    assert cache.insert(e)
+    got = cache.lookup(e.centroid, 0.2, ("k",), (1, 4, 4, 2))
+    assert got is e and cache.stats["hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler: retry recovery is bitwise, exhaustion sheds, stalls account
+# ---------------------------------------------------------------------------
+
+WAVES = [["a red circle one", "a red circle two"], [],
+         ["a blue square one"], ["a blue square two"], []]
+
+
+def _images(done):
+    return {c.prompt: c.image for c in done}
+
+
+def test_launch_fault_retry_recovers_bitwise():
+    """Failed segment launches leave the carry untouched, so the retried
+    computation — and therefore every completion — is bitwise-identical
+    to the fault-free run, just later.  Eager policy, no cache: group
+    compositions cannot differ between the runs."""
+    base_s = _sched(seed=0)
+    base = _run_trace(base_s, WAVES)
+    assert base_s.pending == 0
+
+    plan = FaultPlan(seed=11, p_launch_fail=0.5)
+    chaos_s = _sched(seed=0, faults=plan, max_retries=10)
+    chaos = _run_trace(chaos_s, WAVES)
+    assert chaos_s.pending == 0
+    assert plan.injected["launch_fail"] > 0   # chaos actually happened
+    assert chaos_s.stats["retries"] == chaos_s.stats["launch_faults"] > 0
+
+    bi, ci = _images(base), _images(chaos)
+    assert sorted(bi) == sorted(ci)
+    for p in bi:
+        assert np.array_equal(bi[p], ci[p]), p
+    assert all(c.status == "ok" for c in chaos)
+    _conserved(chaos_s, chaos)
+    # recovery is never free lunch: the faulted run can only be later
+    per_prompt_base = {c.prompt: c.latency for c in base}
+    for c in chaos:
+        assert c.latency >= per_prompt_base[c.prompt] - 1e-9
+
+
+def test_retry_exhaustion_sheds_with_accounting():
+    """p=1 launch failure: after ``max_retries`` backoffs every group
+    takes the shed escape hatch — members surface as accounted
+    ``status='shed'`` completions and spent NFE moves to nfe_wasted."""
+    plan = FaultPlan(seed=0, p_launch_fail=1.0)
+    s = _sched(faults=plan, max_retries=2)
+    done = _run_trace(s, WAVES)
+    assert s.pending == 0
+    assert done and all(c.status == "shed" for c in done)
+    assert all(c.image is None for c in done)
+    assert s.stats["shed_faulted"] == len(done) == s.stats["requests"]
+    assert s.stats["completed"] == 0
+    _conserved(s, done)
+    # every group burned exactly max_retries retries before shedding
+    assert s.stats["retries"] % s.max_retries == 0
+
+
+def test_partial_faults_mix_recovery_and_shed():
+    """Moderate fault rate with a tight retry budget: some groups
+    recover, some shed — but the union is exactly the submitted set."""
+    plan = FaultPlan(seed=3, p_launch_fail=0.7)
+    s = _sched(faults=plan, max_retries=1)
+    done = _run_trace(s, WAVES, max_ticks=400)
+    assert s.pending == 0
+    _conserved(s, done)
+    statuses = {c.status for c in done}
+    assert statuses <= {"ok", "shed"}
+    # whatever shed was accounted, whatever completed is intact
+    base = _images(_run_trace(_sched(seed=0), WAVES))
+    for c in done:
+        if c.status == "ok":
+            assert np.array_equal(c.image, base[c.prompt])
+
+
+def test_tick_stalls_are_pure_delay():
+    """Stalled ticks advance nothing but the clock; results stay
+    bitwise-identical and the stall count is surfaced."""
+    base = _images(_run_trace(_sched(seed=0), WAVES))
+    plan = FaultPlan(seed=2, p_tick_stall=0.4)
+    s = _sched(seed=0, faults=plan)
+    done = _run_trace(s, WAVES)
+    assert s.pending == 0
+    assert s.stats["stalled_ticks"] == plan.injected["tick_stall"] > 0
+    ci = _images(done)
+    assert sorted(ci) == sorted(base)
+    for p in base:
+        assert np.array_equal(base[p], ci[p]), p
+    _conserved(s, done)
+
+
+def test_corrupt_cache_equals_no_cache_run():
+    """With p_cache_corrupt=1.0 every would-be trunk hit is damaged,
+    caught by the CRC gate and recomputed — so the chaos run must equal
+    the cache-less run bitwise, and every hit shows up as an integrity
+    drop (recovery by exact recomputation, never silent reuse)."""
+    waves = [["a red circle v1", "a red circle v2"], [],
+             ["a red circle v3", "a red circle v4"], []]
+    no_cache = _images(_run_trace(_sched(seed=0), waves))
+
+    plan = FaultPlan(seed=0, p_cache_corrupt=1.0)
+    cache = TrunkCache(tau_trunk=0.8, faults=plan)
+    s = _sched(seed=0, trunk_cache=cache)
+    done = _run_trace(s, waves)
+    assert s.pending == 0
+    ci = _images(done)
+    assert sorted(ci) == sorted(no_cache)
+    for p in no_cache:
+        assert np.array_equal(no_cache[p], ci[p]), p
+    assert cache.stats["integrity_drops"] == plan.injected["cache_corrupt"]
+    assert cache.stats["hits"] == 0
+    assert s.stats["nfe_saved_cache"] == 0.0
+    _conserved(s, done)
+
+
+def test_forced_miss_cache_equals_no_cache_run():
+    waves = [["a red circle v1", "a red circle v2"], [],
+             ["a red circle v3", "a red circle v4"], []]
+    no_cache = _images(_run_trace(_sched(seed=0), waves))
+    plan = FaultPlan(seed=0, p_cache_miss=1.0)
+    cache = TrunkCache(tau_trunk=0.8, faults=plan)
+    s = _sched(seed=0, trunk_cache=cache)
+    ci = _images(_run_trace(s, waves))
+    for p in no_cache:
+        assert np.array_equal(no_cache[p], ci[p]), p
+    assert cache.stats["fault_forced_misses"] > 0
+    assert len(cache) > 0                    # entries survived the faults
+
+
+def test_combined_chaos_conservation():
+    """All fault kinds at once on a longer trace: whatever happens,
+    conservation closes and anything served is bitwise-correct."""
+    rng = np.random.RandomState(9)
+    waves = []
+    for i in range(8):
+        k = rng.poisson(1.2)
+        waves.append([f"a {w} no {i}.{j}" for j, w in enumerate(
+            rng.choice(["red circle", "blue square"], size=k))])
+    base = _images(_run_trace(_sched(seed=0), waves))
+    plan = FaultPlan(seed=4, p_launch_fail=0.3, p_cache_miss=0.3,
+                     p_cache_corrupt=0.3, p_tick_stall=0.2)
+    s = _sched(seed=0, faults=plan, max_retries=2,
+               trunk_cache=TrunkCache(tau_trunk=0.8, faults=plan))
+    done = _run_trace(s, waves, max_ticks=500)
+    assert s.pending == 0
+    _conserved(s, done)
+    assert plan.total_injected > 0
+    for c in done:
+        assert c.status in ("ok", "shed")
+        if c.status == "ok" and not c.cache_hit:
+            assert np.array_equal(c.image, base[c.prompt]), c.prompt

@@ -1,0 +1,405 @@
+"""QoS classes, preemptive scheduling and load shedding.
+
+Covers: launch-order comparators, the expired-deadline admission bugfix
+(directed regression), class-compartmented grouping, WFQ slot splitting
+with preemption / resume / the no-starvation bound, shed and degrade
+admission verdicts (status + per-class stats + conservation), the
+adaptive pad-aware hold budget, and the PR-5 equivalence criterion: with
+a single QoS class, ``preempt=False`` (or no deadlines) and no faults,
+the scheduler's output is bitwise-identical to the plain EDF tick loop.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import SageConfig, get_config
+from repro.models import dit
+from repro.models import text_encoder as te
+from repro.serving.policies import (DEFAULT_QOS, QOS_RANK, LaunchContext,
+                                    AdaptivePadAwarePolicy,
+                                    SaturationAdmission, AdmissionContext,
+                                    make_launch_order, order_edf,
+                                    order_fifo, order_qos_edf)
+from repro.serving.scheduler import RequestScheduler
+
+CFG = get_config("sage-dit", smoke=True)
+PARAMS = dit.init_params(CFG, jax.random.PRNGKey(0))
+TC = te.text_cfg(dim=CFG.cond_dim, layers=2)
+TEXT_PARAMS = te.init_text(jax.random.PRNGKey(1), TC)
+
+SAGE = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                  tau_min=0.2)
+
+
+def _sched(**kw):
+    kw.setdefault("group_size", 2)
+    kw.setdefault("slice_steps", 2)
+    return RequestScheduler(CFG, SAGE, PARAMS, TEXT_PARAMS, TC, **kw)
+
+
+def _run(sched, max_ticks=200, start=0.0):
+    done, t = [], start
+    while sched.pending and t < start + max_ticks:
+        t += 1.0
+        done.extend(sched.tick(now=t))
+    return done
+
+
+# ---------------------------------------------------------------------------
+# launch-order comparators
+# ---------------------------------------------------------------------------
+
+class _G:
+    def __init__(self, gid, qos=DEFAULT_QOS, deadline=None):
+        self.gid, self.qos, self._dl = gid, qos, deadline
+
+    def earliest_deadline(self):
+        return float("inf") if self._dl is None else self._dl
+
+
+def test_launch_order_comparators():
+    a = _G(0, "batch", deadline=5.0)
+    b = _G(1, "interactive", deadline=9.0)
+    c = _G(2, "interactive")
+    gs = [a, b, c]
+    assert sorted(gs, key=order_fifo) == [a, b, c]
+    assert sorted(gs, key=order_edf) == [a, b, c]          # EDF: 5 < 9 < inf
+    # qos_edf: interactive outranks batch regardless of deadline
+    assert sorted(gs, key=order_qos_edf) == [b, c, a]
+    # single class -> qos_edf degenerates to edf exactly
+    one = [_G(i, "batch", d) for i, d in enumerate([7.0, None, 3.0])]
+    assert [g.gid for g in sorted(one, key=order_qos_edf)] == \
+        [g.gid for g in sorted(one, key=order_edf)]
+
+
+def test_make_launch_order_resolution():
+    assert make_launch_order(None) is order_qos_edf
+    assert make_launch_order("fifo") is order_fifo
+    custom = lambda g: (g.gid,)                                  # noqa: E731
+    assert make_launch_order(custom) is custom
+    with pytest.raises(ValueError, match="unknown launch order"):
+        make_launch_order("lifo")
+
+
+def test_submit_validates_qos():
+    s = _sched()
+    with pytest.raises(ValueError, match="unknown qos"):
+        s.submit(["a cat"], now=0.0, qos="platinum")
+    with pytest.raises(ValueError, match="length"):
+        s.submit(["a cat"], now=0.0, qos=["interactive", "batch"])
+    with pytest.raises(ValueError, match="qos_weights"):
+        _sched(qos_weights={"interactive": 0})
+
+
+# ---------------------------------------------------------------------------
+# expired-deadline admission (the satellite bugfix, directed regression)
+# ---------------------------------------------------------------------------
+
+def test_expired_deadline_rejected_at_admission():
+    """A request whose deadline has already passed — or expires within
+    one segment, so even an immediate solo launch cannot meet it — must
+    be refused up front with its own status, not churn through grouping
+    and launch (the pre-PR-6 behavior launched it anyway)."""
+    s = _sched()
+    s.submit(["too late"], now=0.0, deadline=0.5)           # already past
+    s.submit(["one tick short"], now=0.0, deadline=1.9)     # < now+1 at t=1
+    out = s.tick(now=1.0)
+    assert [c.status for c in out] == ["rejected_expired"] * 2
+    assert all(c.image is None and c.group_id == -1 for c in out)
+    assert s.stats["rejected_expired"] == 2
+    assert s.class_stats[DEFAULT_QOS]["rejected_expired"] == 2
+    # nothing leaked into the service path
+    assert not s.open_groups and not s.inflight and s.pending == 0
+    assert s.stats["launches"] == 0
+    # conservation closes through the refusal ledger
+    assert s.stats["requests"] == s.stats["completed"] + s.stats["shed"] \
+        + s.stats["rejected_expired"] + s.pending
+
+
+def test_meetable_deadline_still_served():
+    s = _sched()
+    s.submit(["plenty of time"], now=0.0, deadline=50.0)
+    done = _run(s)
+    assert [c.status for c in done] == ["ok"]
+    assert s.stats["rejected_expired"] == 0
+    assert s.stats["deadline_met"] == 1
+
+
+# ---------------------------------------------------------------------------
+# class compartments
+# ---------------------------------------------------------------------------
+
+def test_groups_never_mix_qos_classes():
+    s = _sched(group_size=4)
+    # identical prompts -> maximal similarity: only the class keeps them
+    # apart
+    s.submit(["a red circle", "a red circle"], now=0.0, qos="interactive")
+    s.submit(["a red circle", "a red circle"], now=0.0, qos="batch")
+    done = _run(s)
+    assert len(done) == 4
+    by_gid = {}
+    for c in done:
+        by_gid.setdefault(c.group_id, set()).add(c.qos)
+    assert len(by_gid) == 2
+    for classes in by_gid.values():
+        assert len(classes) == 1
+
+
+def test_degraded_never_groups_with_full_quality():
+    """Degrade-mode admission must not let a draft-NFE member drag a
+    full-quality group (or vice versa): compartments are (qos, degraded).
+    With a one-group saturation horizon, the first request of a theme is
+    admitted clean and every later one degrades — identical prompts, so
+    only the compartment keeps them in separate groups."""
+    s = _sched(group_size=4, max_groups_per_tick=1, admission="degrade")
+    s.admission.horizon_ticks = 2.0       # < one group's drain ticks
+    s.admission.interactive_headroom = 1.0
+    s.submit(["a red circle v1", "a red circle v2"], now=0.0)
+    s.tick(now=1.0)
+    s.submit(["a red circle v3"], now=1.0)   # joins the *degraded* group
+    done = _run(s, start=1.0)
+    by_status = {}
+    for c in done:
+        by_status.setdefault(c.status, []).append(c)
+    assert [c.prompt for c in by_status.get("ok", [])] == ["a red circle v1"]
+    assert sorted(c.prompt for c in by_status.get("degraded", [])) == \
+        ["a red circle v2", "a red circle v3"]
+    ok_gid = by_status["ok"][0].group_id
+    deg_gids = {c.group_id for c in by_status["degraded"]}
+    assert deg_gids == {by_status["degraded"][0].group_id}  # mates grouped
+    assert ok_gid not in deg_gids           # never with full quality
+    assert s.stats["degraded"] == 2
+    assert s.class_stats[DEFAULT_QOS]["degraded"] == 2
+
+
+def test_degraded_runs_at_max_share_bucket():
+    s = _sched(admission="degrade")
+    s.admission.horizon_ticks = 0.5
+    s.admission.interactive_headroom = 1.0
+    s.submit(["backlog filler one", "backlog filler two"], now=0.0)
+    s.tick(now=1.0)
+    s.submit(["degraded arrival"], now=1.0)
+    s.tick(now=2.0)
+    degraded = [g for g in s.open_groups + s.inflight if g.degraded]
+    assert degraded
+    _run(s, start=2.0)
+    # launched beta snapped to the maximum share bucket (draft NFE)
+    assert degraded[0].beta == max(s.branch_buckets)
+
+
+# ---------------------------------------------------------------------------
+# WFQ, preemption, resume, starvation bound
+# ---------------------------------------------------------------------------
+
+def test_preemption_and_resume_under_fifo_order():
+    """FIFO order puts the older batch group first in the capped prefix;
+    preemption lets the deadline-at-risk interactive group claim the
+    slot, the displaced batch group parks (counted), then resumes."""
+    s = _sched(max_groups_per_tick=1, launch_order="fifo",
+               max_wait_ticks=0)
+    s.submit(["batch job"], now=0.0, qos="batch")
+    s.tick(now=1.0)                              # batch launched + advancing
+    assert len(s.inflight) == 1
+    ttf = s._ticks_to_finish()
+    s.submit(["urgent request"], now=1.0, deadline=1.0 + ttf + 2.0,
+             qos="interactive")
+    done = _run(s, start=1.0)
+    assert sorted(c.qos for c in done) == ["batch", "interactive"]
+    assert s.stats["preemptions"] >= 1
+    assert s.stats["resumes"] >= 1
+    assert s.class_stats["batch"]["preemptions"] >= 1
+    # the interactive deadline was actually protected
+    it = [c for c in done if c.qos == "interactive"][0]
+    assert s.stats["deadline_missed"] == 0, it.latency
+
+
+def test_no_preemption_when_disabled():
+    s = _sched(max_groups_per_tick=1, launch_order="fifo",
+               max_wait_ticks=0, preempt=False)
+    s.submit(["batch job"], now=0.0, qos="batch")
+    s.tick(now=1.0)
+    s.submit(["urgent request"], now=1.0, deadline=4.0, qos="interactive")
+    _run(s, start=1.0)
+    assert s.stats["preemptions"] == 0 and s.stats["resumes"] == 0
+
+
+def test_starvation_bound_forces_batch_through():
+    """A continuous stream of at-risk interactive work exactly fills the
+    capped slots (1 arrival/tick, 2 advance-ticks each, cap 2), so
+    WITHOUT the bound batch would never advance again; the
+    ``starvation_ticks`` bound forces it through, and no group is ever
+    skipped for more than the bound."""
+    s = _sched(max_groups_per_tick=2, max_wait_ticks=0, slice_steps=4,
+               starvation_ticks=3, qos_weights={"interactive": 10**6,
+                                                "batch": 1})
+    assert s._ticks_to_finish() == 2
+    s.submit(["batch underdog"], now=0.0, qos="batch")
+    t, starved, done = 0.0, 0, []
+    for i in range(20):
+        t += 1.0
+        # fresh tight-deadline interactive arrival every tick keeps both
+        # slots claimed by the at-risk pass
+        s.submit([f"urgent {i}"], now=t,
+                 deadline=t + s._ticks_to_finish() + 1.5)
+        done.extend(s.tick(now=t))
+        for g in s.inflight:
+            starved = max(starved, g.starved_ticks)
+            assert g.starved_ticks <= s.starvation_ticks, (t, g.qos)
+    done.extend(s.drain(now=t))
+    assert "batch underdog" in [c.prompt for c in done]
+    assert starved > 0                       # the bound actually engaged
+    assert s.stats["preemptions"] >= 1
+
+
+def test_wfq_split_honours_weights():
+    """Deadline-free traffic under a cap: slots split by qos_weights via
+    deficit round-robin, so with weights 2:1 interactive drains roughly
+    twice as fast (measured by completion order, not starvation)."""
+    s = _sched(max_groups_per_tick=3, max_wait_ticks=0,
+               qos_weights={"interactive": 2, "batch": 1})
+    for i in range(6):
+        s.submit([f"interactive item {i}"], now=0.0, qos="interactive")
+        s.submit([f"batch item {i}"], now=0.0, qos="batch")
+    done = _run(s)
+    assert len(done) == 12
+    first_half = done[:6]
+    ints = sum(1 for c in first_half if c.qos == "interactive")
+    assert ints >= 4                         # weighted share showed up
+
+
+# ---------------------------------------------------------------------------
+# shed admission: statuses + conservation
+# ---------------------------------------------------------------------------
+
+def test_shed_past_saturation_with_interactive_headroom():
+    s = _sched(max_groups_per_tick=1, max_wait_ticks=0, admission="shed")
+    s.admission.horizon_ticks = float(s._ticks_to_finish())
+    s.admission.interactive_headroom = 3.0
+    t, done = 0.0, []
+    for i in range(12):
+        t += 1.0
+        s.submit([f"int {i}"], now=t, qos="interactive")
+        s.submit([f"bat {i}"], now=t, qos="batch")
+        done.extend(s.tick(now=t))
+    done.extend(s.drain(now=t))
+    st = {}
+    for c in done:
+        st.setdefault((c.qos, c.status), []).append(c)
+    # batch shed first (headroom protects interactive)
+    assert len(st.get(("batch", "shed"), [])) > \
+        len(st.get(("interactive", "shed"), []))
+    # every shed is accounted: conservation closes exactly
+    assert s.stats["requests"] == s.stats["completed"] + s.stats["shed"] \
+        + s.stats["shed_faulted"] + s.stats["rejected_expired"] + s.pending
+    assert s.pending == 0
+    assert len(done) == s.stats["requests"]
+    # summary mirrors the ledger per class
+    out = s.summary()
+    assert out["shed"] == s.stats["shed"]
+    assert out["batch_shed"] == len(st.get(("batch", "shed"), []))
+    assert out["goodput"] == s.stats["deadline_met"]
+
+
+def test_saturation_admission_decide_unit():
+    pol = SaturationAdmission(horizon_ticks=4.0, interactive_headroom=2.0)
+    ctx = lambda qos, backlog: AdmissionContext(                 # noqa: E731
+        now=0.0, qos=qos, deadline=None, backlog_ticks=backlog,
+        ticks_to_finish=3, arrival_rate=1.0)
+    assert pol.decide(ctx("batch", 3.9)) == "admit"
+    assert pol.decide(ctx("batch", 4.1)) == "shed"
+    assert pol.decide(ctx("interactive", 7.9)) == "admit"
+    assert pol.decide(ctx("interactive", 8.1)) == "shed"
+    with pytest.raises(ValueError):
+        SaturationAdmission(horizon_ticks=0)
+    with pytest.raises(ValueError):
+        SaturationAdmission(mode="explode")
+
+
+# ---------------------------------------------------------------------------
+# adaptive pad-aware hold budget
+# ---------------------------------------------------------------------------
+
+def _ctx(arrival_rate, group_size=4):
+    return LaunchContext(
+        now=0.0, tick=0, group_size=group_size, max_wait_ticks=2,
+        deadline_slack=0.0, ticks_to_finish=3,
+        inflight_signatures=frozenset(), signature_of=lambda g: None,
+        arrival_rate=arrival_rate)
+
+
+def test_adaptive_hold_budget_tracks_arrival_rate():
+    class FakeGroup:
+        members = [None]                     # 1 member -> need 3 more
+
+    pol = AdaptivePadAwarePolicy(hold_max=4, min_rate=0.25)
+    g = FakeGroup()
+    assert pol._hold_budget(g, _ctx(0.0)) == 0        # dried up: no hold
+    assert pol._hold_budget(g, _ctx(0.1)) == 0        # below min_rate
+    assert pol._hold_budget(g, _ctx(1.0)) == 3        # ceil(3/1)
+    assert pol._hold_budget(g, _ctx(3.0)) == 1        # brisk: short hold
+    assert pol._hold_budget(g, _ctx(0.5)) == 4        # capped at hold_max
+    with pytest.raises(ValueError):
+        AdaptivePadAwarePolicy(min_rate=0.0)
+
+
+def test_adaptive_policy_end_to_end():
+    """Sanity: the adaptive policy serves a staggered trace completely
+    and never spends more NFE than eager (same contract as pad_aware)."""
+    def run(policy):
+        s = _sched(group_size=3, policy=policy, max_wait_ticks=1)
+        done, t = [], 0.0
+        for i in range(6):
+            t += 1.0
+            s.submit([f"a red circle no {i}"], now=t)
+            done.extend(s.tick(now=t))
+        done.extend(s.drain(now=t))
+        assert s.pending == 0
+        return s, done
+
+    se, de = run("eager")
+    sa, da = run("adaptive")
+    assert sorted(c.prompt for c in da) == sorted(c.prompt for c in de)
+    assert sa.stats["nfe"] <= se.stats["nfe"]
+
+
+# ---------------------------------------------------------------------------
+# PR-5 equivalence: the overload layer is invisible when unused
+# ---------------------------------------------------------------------------
+
+def test_single_class_reduces_to_plain_edf():
+    """Acceptance criterion: with a single QoS class, no faults and no
+    preemption pressure, the QoS scheduler's completions are bitwise
+    identical to the PR-5 rule (EDF sort, plain capped prefix)."""
+    rng = np.random.RandomState(0)
+    trace = [(f"a {w} variant {i}", float(rng.randint(6, 20)))
+             for i, w in enumerate(["red circle", "blue square",
+                                    "green triangle", "red circle",
+                                    "blue square", "green triangle"])]
+
+    def run(**kw):
+        s = _sched(group_size=3, max_groups_per_tick=2, **kw)
+        done, t = [], 0.0
+        for i, (p, dl) in enumerate(trace):
+            t += 1.0
+            s.submit([p], now=t, deadline=t + dl)
+            done.extend(s.tick(now=t))
+        done.extend(s.drain(now=t))
+        assert s.pending == 0
+        return done
+
+    ref = run(launch_order="edf", preempt=False)         # the PR-5 rule
+    qos = run(preempt=False)                             # qos_edf default
+    assert [c.prompt for c in ref] == [c.prompt for c in qos]
+    assert [c.group_id for c in ref] == [c.group_id for c in qos]
+    for a, b in zip(ref, qos):
+        assert np.array_equal(a.image, b.image)
+        assert a.status == b.status == "ok"
+    # with preemption ON, completion *order* may differ (at-risk claims
+    # reorder advance slots) but every result is still bitwise identical
+    # — composition and init noise depend only on admission, never on
+    # slot timing
+    pre = run()
+    by_prompt = {c.prompt: c for c in ref}
+    assert sorted(c.prompt for c in pre) == sorted(by_prompt)
+    for c in pre:
+        assert np.array_equal(c.image, by_prompt[c.prompt].image)

@@ -188,3 +188,124 @@ def test_fuzz_empty_trace_is_a_noop():
         assert sched.tick(now=float(t)) == []
     assert sched.pending == 0 and sched.stats["launches"] == 0
     assert sched.summary()["launches_per_tick"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# overload traces: QoS + shedding invariants when arrival > service
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [5, 6])
+def test_fuzz_overload_qos_shedding(seed):
+    """Sustained overload (Poisson arrivals above the capped service
+    rate for 30+ ticks, mixed QoS): the scheduler must degrade
+    *gracefully* —
+
+    * conservation — admitted == completed + shed + in-flight at every
+      tick boundary, statuses included, nothing double-counted;
+    * interactive p95 stays bounded (admission refuses work it cannot
+      serve inside the saturation horizon, so served latencies cannot
+      grow with trace length);
+    * batch never starves: batch work keeps completing throughout;
+    * once arrivals stop, the system drains to empty.
+    """
+    rng = np.random.RandomState(seed)
+    sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                      tau_min=0.2)
+    sched = RequestScheduler(
+        CFG, sage, PARAMS, TEXT_PARAMS, TC, group_size=3, slice_steps=2,
+        max_wait_ticks=1, packed=True, max_groups_per_tick=1,
+        admission="shed", starvation_ticks=4)
+    horizon = sched.admission.horizon_ticks
+    headroom = sched.admission.interactive_headroom
+    ttf = sched._ticks_to_finish()
+
+    overload_ticks = 32
+    trace = _trace(seed, ticks=overload_ticks, rate=2.0)  # >> 1 group/tick
+    submitted, done, t = [], [], 0.0
+    for wave in trace:
+        t += 1.0
+        if wave:
+            qos = ["interactive" if rng.rand() < 0.5 else "batch"
+                   for _ in wave]
+            dl = t + float(rng.randint(8, 16))
+            sched.submit(wave, now=t, deadline=dl, qos=qos)
+            submitted.extend(wave)
+        done.extend(sched.tick(now=t))
+        # conservation at every tick boundary, refusals included
+        st = sched.stats
+        assert st["requests"] == st["completed"] + st["shed"] \
+            + st["shed_faulted"] + st["rejected_expired"] + sched.pending
+        assert len(done) == st["requests"] - sched.pending
+
+    # saturation actually happened and shedding engaged
+    assert len(submitted) > overload_ticks
+    assert sched.stats["shed"] > 0
+
+    # drain-to-empty once the arrival process stops
+    while sched.pending and t < 400:
+        t += 1.0
+        done.extend(sched.tick(now=t))
+    assert sched.pending == 0
+    assert not (sched.arrivals or sched.open_groups or sched.inflight)
+
+    # every submitted prompt resolved exactly once (served or refused)
+    assert sorted(c.prompt for c in done) == sorted(submitted)
+    by = {}
+    for c in done:
+        by.setdefault((c.qos, c.status), []).append(c)
+    assert all(c.status in ("ok", "shed", "rejected_expired")
+               for c in done)
+
+    # batch no-starvation: batch work completed, not just shed
+    assert len(by.get(("batch", "ok"), [])) > 0
+
+    # interactive p95 bounded by the admission horizon: anything served
+    # was admitted inside backlog <= horizon * headroom, so its latency
+    # is at most that backlog plus its own service time plus bounded
+    # starvation interference — independent of trace length
+    int_ok = by.get(("interactive", "ok"), [])
+    assert len(int_ok) > 0
+    bound = horizon * headroom + ttf + sched.starvation_ticks + 2.0
+    p95 = float(np.percentile([c.latency for c in int_ok], 95))
+    assert p95 <= bound, (p95, bound)
+
+    # summary stays self-consistent under overload
+    s = sched.summary()
+    assert s["shed"] == sched.stats["shed"]
+    assert s["goodput"] <= s["completed"]
+    assert s["interactive_completed"] == len(int_ok) + \
+        len(by.get(("interactive", "degraded"), []))
+
+
+def test_fuzz_overload_degrade_mode_serves_everything():
+    """Degrade-mode admission under the same pressure: nothing is shed —
+    late arrivals are served at draft NFE instead — and the degraded
+    population spends fewer NFE per request than the clean one."""
+    rng = np.random.RandomState(7)
+    sage = SageConfig(total_steps=8, share_ratio=0.25, guidance_scale=2.0,
+                      tau_min=0.2)
+    sched = RequestScheduler(
+        CFG, sage, PARAMS, TEXT_PARAMS, TC, group_size=3, slice_steps=2,
+        max_wait_ticks=1, packed=True, max_groups_per_tick=1,
+        admission="degrade")
+    trace = _trace(8, ticks=12, rate=2.0)
+    submitted, done, t = [], [], 0.0
+    for wave in trace:
+        t += 1.0
+        if wave:
+            sched.submit(wave, now=t)
+            submitted.extend(wave)
+        done.extend(sched.tick(now=t))
+    while sched.pending and t < 400:
+        t += 1.0
+        done.extend(sched.tick(now=t))
+    assert sched.pending == 0
+    assert sorted(c.prompt for c in done) == sorted(submitted)
+    assert sched.stats["shed"] == 0
+    degraded = [c for c in done if c.status == "degraded"]
+    clean = [c for c in done if c.status == "ok"]
+    assert degraded and clean
+    assert sched.stats["degraded"] == len(degraded)
+    # draft NFE: degraded groups run at the max share bucket
+    assert (np.mean([c.nfe_share for c in degraded])
+            < np.mean([c.nfe_share for c in clean]))

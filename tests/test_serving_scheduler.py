@@ -381,12 +381,19 @@ def test_streaming_singleton_launches_after_max_wait():
 
 
 def test_streaming_deadline_forces_launch():
+    """An approaching (still meetable) deadline launches a sub-full group
+    ahead of ``max_wait_ticks``.  An *already-expired* deadline no longer
+    reaches this path at all — it is refused at admission with
+    ``status='rejected_expired'`` (see tests/test_qos.py)."""
     sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
                       tau_min=0.2)
     sched = RequestScheduler(CFG, sage, PARAMS, TEXT_PARAMS, TC,
                              group_size=4, slice_steps=4, max_wait_ticks=50)
-    sched.submit(_wave_prompts(1), now=0.0, deadline=0.5)
-    sched.tick(now=1.0)                                # deadline passed ->
+    sched.submit(_wave_prompts(1), now=0.0, deadline=3.0)
+    sched.tick(now=1.0)                                # deadline far: held
+    assert sched.open_groups and not sched.inflight
+    sched.tick(now=2.0)
+    sched.tick(now=3.0)                                # deadline reached ->
     assert not sched.open_groups and sched.inflight    # launched despite
     #                                                   being 1/4 full
 
