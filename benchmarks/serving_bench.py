@@ -47,10 +47,23 @@ lateness), interactive latency p95, and shed counts; the bench asserts
 the PR-6 acceptance criteria: QoS interactive p95 within 2x the
 unloaded p95, and QoS goodput >= the FIFO baseline.
 
+The cache_scan-vs-cache_lsh pairs are a lookup microbenchmark (no
+scheduler): twin caches hold N unit centroids of dim D and serve the same
+query stream — half near-duplicates (the hit regime the index exists
+for), half independent randoms (the miss regime, which prices the full
+similarity search).  Rows report the median lookup latency; derived
+carries hits, mean candidates touched, and LSH recall vs the scan oracle.
+The in-suite bars assert the PR-7 acceptance criteria: LSH hit-rate
+within 5% of the scan oracle at every size, candidate sets sub-linear
+(< 0.5 N) and LSH lookups faster than the scan at the largest population.
+``python -m benchmarks.serving_bench --cache-scaling`` runs only these
+rows (the CI smoke).
+
 Rows: serving/{sync,stream,stream_cache}/<trace>,
       serving/{pergroup,packed}/<burst trace>,
       serving/{eager,pad_aware}/<staggered trace>,
-      serving/{fifo,qos_shed}/<overload trace>.
+      serving/{fifo,qos_shed}/<overload trace>,
+      serving/{cache_scan,cache_lsh}/n<N>d<D>.
 """
 from __future__ import annotations
 
@@ -64,7 +77,7 @@ from repro.data.synthetic import ShapesDataset
 from repro.models import dit
 from repro.models import text_encoder as te
 from repro.serving.engine import SageServingEngine
-from repro.serving.trunk_cache import TrunkCache
+from repro.serving.trunk_cache import TrunkCache, TrunkEntry
 
 THEMES = 3
 WAVE_SIZE = 4
@@ -81,6 +94,10 @@ OVL_INT_EVERY = 6    # interactive burst of 2 every OVL_INT_EVERY ticks
 OVL_INT_DL = 6.0     # interactive deadline (ticks after arrival)
 OVL_BAT_DL = 12.0    # batch deadline (generous; FIFO still blows it)
 OVL_CAP = 2          # max_groups_per_tick: the contended resource
+CACHE_NS = (64, 512)     # resident entries when the lookups are timed
+CACHE_DIMS = (32, 128)   # embedding dims (cond_dim-scale, CLIP-scale)
+CACHE_QUERIES = 64       # near-dup queries per config (+ as many randoms)
+CACHE_TAU = 0.9
 
 
 def _trace(seed=0):
@@ -290,6 +307,98 @@ def _run_unloaded_p95():
     return float(np.percentile(lats, 95))
 
 
+def _unit_rows(v):
+    return v / np.linalg.norm(v, axis=-1, keepdims=True)
+
+
+def _run_cache_lookup(n, dim):
+    """Twin caches (scan oracle / LSH) with n resident unit centroids of
+    the given dim, timed on the same query stream: CACHE_QUERIES
+    rejection-sampled near-duplicates (exact cosine to their source
+    >= CACHE_TAU, so the oracle hits every one) + as many independent
+    randoms.  Returns per-index {us (median lookup), hits, cand (mean
+    centroids touched per similarity search)}."""
+    rng = np.random.RandomState(n * 1000 + dim)
+    pop = _unit_rows(rng.randn(n, dim).astype(np.float32))
+    shape = (1, 4, 4, 3)
+    z = np.zeros(shape, np.float32)
+    caches = {"scan": TrunkCache(tau_trunk=CACHE_TAU, index="scan"),
+              "lsh": TrunkCache(tau_trunk=CACHE_TAU, index="lsh")}
+    for c in pop:
+        for cache in caches.values():
+            cache.insert(TrunkEntry(z=z, eps_prev=None, step_idx=2,
+                                    beta_bucket=0.5, rng_fold=0,
+                                    centroid=c, cfg_key="bench"),
+                         shape=shape)
+    # per-component noise sized so the expected cosine sits just above
+    # tau (see tests/test_ann_index.py): the rejection loop terminates
+    # quickly at every dim
+    scale = 0.5 * np.sqrt(2.0 * (1.0 - CACHE_TAU) / dim)
+    near = []
+    while len(near) < CACHE_QUERIES:
+        i = rng.randint(n)
+        q = _unit_rows(pop[i] + scale * rng.randn(dim).astype(np.float32))
+        if float(pop[i] @ q) >= CACHE_TAU:
+            near.append(q)
+    queries = near + list(_unit_rows(
+        rng.randn(CACHE_QUERIES, dim).astype(np.float32)))
+
+    out = {}
+    for name, cache in caches.items():
+        cache.lookup(queries[0], 0.5, "bench", shape)  # warm (planes jit)
+        lat, hits = [], 0
+        for q in queries:
+            t0 = time.perf_counter()
+            hit = cache.lookup(q, 0.5, "bench", shape)
+            lat.append(time.perf_counter() - t0)
+            hits += hit is not None
+        idx = cache.index
+        cand = (idx.mean_candidates if hasattr(idx, "mean_candidates")
+                else float(n))
+        out[name] = {"us": float(np.median(lat) * 1e6), "hits": hits,
+                     "cand": cand}
+    return out
+
+
+def _run_cache_scaling(rows):
+    """The cache-scaling grid: scan-vs-LSH lookup rows across entry
+    counts and embedding dims, with the PR-7 acceptance bars asserted
+    in-suite so the BENCH snapshot gates them in CI."""
+    top = (max(CACHE_NS), max(CACHE_DIMS))
+    for n in CACHE_NS:
+        for dim in CACHE_DIMS:
+            r = _run_cache_lookup(n, dim)
+            recall = r["lsh"]["hits"] / max(r["scan"]["hits"], 1)
+            # acceptance: LSH hit-rate within 5% of the scan oracle —
+            # the index may only lose hits, and not many
+            assert r["lsh"]["hits"] >= 0.95 * r["scan"]["hits"], (
+                f"cache n={n} d={dim}: lsh hits {r['lsh']['hits']} < 95% "
+                f"of scan {r['scan']['hits']}")
+            assert r["lsh"]["hits"] <= r["scan"]["hits"], (
+                "LSH can never hit where the oracle misses")
+            if (n, dim) == top:
+                # sub-linearity where it matters: at the largest
+                # population the similarity search must touch a small
+                # fraction of the entries and beat the scan's wall time
+                # (python-loop over all N vs one projection + a short
+                # candidate list — a multiple-x margin, safe to time)
+                assert r["lsh"]["cand"] < 0.5 * n, (
+                    f"LSH candidates {r['lsh']['cand']:.1f} not sub-linear "
+                    f"at n={n}")
+                assert r["lsh"]["us"] < r["scan"]["us"], (
+                    f"LSH lookup {r['lsh']['us']:.0f}us not faster than "
+                    f"scan {r['scan']['us']:.0f}us at n={n}")
+            rows.append((f"serving/cache_scan/n{n}d{dim}",
+                         r["scan"]["us"],
+                         f"hits={r['scan']['hits']} cand={n}"))
+            rows.append((f"serving/cache_lsh/n{n}d{dim}",
+                         r["lsh"]["us"],
+                         f"hits={r['lsh']['hits']} "
+                         f"cand={r['lsh']['cand']:.1f} "
+                         f"recall={recall:.3f}"))
+    return rows
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     waves = _trace()
@@ -393,10 +502,23 @@ def main(rows=None):
                  f"{s_q['goodput'] / max(s_f['goodput'], 1):.2f}x "
                  f"nfe={stats_q['nfe']:.0f}"))
 
-    for r in rows[-9:]:
+    # scan-vs-LSH cache lookup scaling grid (PR-7 acceptance bars)
+    n_before = len(rows)
+    _run_cache_scaling(rows)
+
+    for r in rows[-(9 + len(rows) - n_before):]:
         print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache-scaling", action="store_true",
+                    help="run only the cache-scaling lookup rows "
+                         "(fast; the CI smoke)")
+    if ap.parse_args().cache_scaling:
+        for r in _run_cache_scaling([]):
+            print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+    else:
+        main()

@@ -92,7 +92,9 @@ def run_streaming(engine, prompts, args):
               if args.cache_admission == "popularity" else {})
         cache = TrunkCache(
             tau_trunk=args.tau_trunk,
-            admission=make_cache_admission(args.cache_admission, **kw))
+            admission=make_cache_admission(args.cache_admission, **kw),
+            index=args.cache_index,
+            max_bytes=args.hbm_budget, host_bytes=args.host_budget)
     policy = (PadAwarePolicy(hold_ticks=args.hold_ticks)
               if args.policy == "pad_aware" else args.policy)
     admission = None
@@ -178,6 +180,11 @@ def run_streaming(engine, prompts, args):
               f"{s['cache_entries']:.0f} entries / {s['cache_bytes']:.0f} B")
         print(f"cache admission    = {args.cache_admission}, "
               f"{s['cache_admission_rejects']:.0f} store rejects")
+        print(f"cache index/tiers  = {s['cache_index']}, "
+              f"hbm {s['cache_hbm_bytes']:.0f} B / "
+              f"host {s['cache_host_bytes']:.0f} B, "
+              f"{s['cache_spills']:.0f} spills, "
+              f"{s['cache_promotions']:.0f} promotions")
 
 
 def main():
@@ -251,6 +258,18 @@ def main():
                     help="trunk-cache store policy: always (LRU) or "
                          "popularity (store on Nth demand hit, evict "
                          "cold entries first)")
+    ap.add_argument("--cache-index", choices=["scan", "lsh"],
+                    default="scan",
+                    help="trunk-cache similarity search: exact linear "
+                         "scan (oracle) or sign-random-projection LSH "
+                         "buckets (candidates re-verified against "
+                         "tau-trunk, so hits are never false accepts)")
+    ap.add_argument("--hbm-budget", type=int, default=64 * 1024 * 1024,
+                    help="trunk-cache HBM working-set byte budget")
+    ap.add_argument("--host-budget", type=int, default=0,
+                    help="host-RAM spill-tier byte budget (0 disables "
+                         "the tier: HBM overflow evicts instead of "
+                         "spilling)")
     ap.add_argument("--popularity-threshold", type=int, default=2,
                     help="demand hits a centroid key needs before its "
                          "trunk earns cache bytes (popularity admission)")

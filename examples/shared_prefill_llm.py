@@ -1,9 +1,19 @@
 """SAGE's insight on an assigned LLM architecture: semantic shared-prefix
 prefill.  Groups requests by prompt-embedding similarity, prefills each
-group's common trunk once, forks the KV cache, and decodes per member —
-the AR analogue of the paper's shared phase (DESIGN.md §4).
+group's common trunk once, forks the KV cache at the branch point, and
+decodes per member — the AR analogue of the paper's shared phase
+(DESIGN.md §4).
+
+With ``--trunk-cache`` the prefill trunk additionally rides the *unified*
+semantic cache (``payload="ar_prefix"`` in the same
+:class:`~repro.serving.trunk_cache.TrunkCache` the diffusion scheduler
+uses): groups drawn from a small prefix pool hit the cached
+(logits, kv-cache) pair and skip the prefill entirely — cross-*batch*
+reuse stacked on the within-group sharing.
 
     PYTHONPATH=src python examples/shared_prefill_llm.py --arch phi3-mini-3.8b
+    PYTHONPATH=src python examples/shared_prefill_llm.py --trunk-cache \
+        --groups 6 --prefix-pool 2 --cache-index lsh
 """
 import argparse
 import time
@@ -14,8 +24,10 @@ import numpy as np
 
 from repro.config import get_config
 from repro.models import transformer as tfm
-from repro.serving.shared_prefill import (common_prefix_len, group_requests,
+from repro.serving.shared_prefill import (cached_prefix_prefill,
+                                          common_prefix_len, group_requests,
                                           shared_prefix_prefill)
+from repro.serving.trunk_cache import TrunkCache
 
 
 def main():
@@ -25,6 +37,16 @@ def main():
     ap.add_argument("--members", type=int, default=4)
     ap.add_argument("--prefix", type=int, default=48)
     ap.add_argument("--tail", type=int, default=16)
+    ap.add_argument("--trunk-cache", action="store_true",
+                    help="serve prefill trunks from the unified semantic "
+                         "cache (payload='ar_prefix')")
+    ap.add_argument("--cache-index", choices=["scan", "lsh"],
+                    default="scan",
+                    help="candidate generation for the cache's "
+                         "similarity search")
+    ap.add_argument("--prefix-pool", type=int, default=2,
+                    help="with --trunk-cache: number of distinct shared "
+                         "prefixes groups draw from (repeats -> hits)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -32,9 +54,18 @@ def main():
     rng = np.random.RandomState(0)
     S = args.prefix + args.tail
 
+    cache = None
+    if args.trunk_cache:
+        cache = TrunkCache(tau_trunk=0.95, index=args.cache_index)
+    # with a cache, groups draw their trunk from a small pool so later
+    # groups exercise the cross-batch hit path
+    pool = [rng.randint(0, cfg.vocab, (1, args.prefix))
+            for _ in range(max(1, args.prefix_pool))]
+
     total_saving, t0 = [], time.time()
     for g in range(args.groups):
-        shared = rng.randint(0, cfg.vocab, (1, args.prefix))
+        shared = (pool[g % len(pool)] if cache is not None
+                  else rng.randint(0, cfg.vocab, (1, args.prefix)))
         tokens = np.concatenate(
             [shared.repeat(args.members, 0),
              rng.randint(0, cfg.vocab, (args.members, args.tail))], axis=1)
@@ -42,19 +73,38 @@ def main():
         def prefill_fn(t, max_len):
             return tfm.prefill(params, cfg, jnp.asarray(t), max_len=max_len)
 
-        def decode_fn(cache, tok, pos):
-            return tfm.decode_step(params, cfg, cache, jnp.asarray(tok), pos)
+        def decode_fn(cache_, tok, pos):
+            return tfm.decode_step(params, cfg, cache_, jnp.asarray(tok),
+                                   pos)
 
-        logits, caches, pos, stats = shared_prefix_prefill(
-            prefill_fn, decode_fn, tokens, max_len=S + 32)
+        if cache is not None:
+            # token-derived pseudo-embedding: enough to route the lookup
+            # (real deployments use the prompt tower's pooled embedding)
+            emb = np.asarray(tokens, np.float32)
+            logits, caches, pos, stats = cached_prefix_prefill(
+                prefill_fn, decode_fn, tokens, max_len=S + 32,
+                cache=cache, embeds=emb)
+            tag = " [cache hit]" if stats["trunk_cache_hit"] else ""
+        else:
+            logits, caches, pos, stats = shared_prefix_prefill(
+                prefill_fn, decode_fn, tokens, max_len=S + 32)
+            tag = ""
         total_saving.append(stats["saving"])
         print(f"group {g}: prefix={stats['prefix_len']} "
               f"steps={stats['token_steps']} vs naive "
-              f"{stats['token_steps_naive']} -> saving {stats['saving']:.1%}")
+              f"{stats['token_steps_naive']} -> saving "
+              f"{stats['saving']:.1%}{tag}")
 
     print(f"\narch={args.arch} mean prefill-compute saving "
           f"{np.mean(total_saving):.1%} across {args.groups} groups "
           f"({time.time()-t0:.1f}s, smoke-size weights)")
+    if cache is not None:
+        st = cache.stats
+        print(f"unified trunk cache [{cache.index.name}]: "
+              f"{st['hits']} hits / {st['misses']} misses, "
+              f"{len(cache)} entries, {cache.bytes} B "
+              f"(ar_prefix payloads share the diffusion cache's "
+              f"budget/admission/index)")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
+from repro.serving.ann_index import (CentroidIndex, LshIndex, ScanIndex,
+                                     make_index)
 from repro.serving.engine import Completed, SageServingEngine
 from repro.serving.faults import FaultPlan
 from repro.serving.packing import PackKey, build_packs
@@ -11,5 +13,7 @@ from repro.serving.policies import (AdaptivePadAwarePolicy, AdmissionContext,
                                     make_cache_admission, make_launch_order,
                                     make_launch_policy)
 from repro.serving.scheduler import RequestScheduler
-from repro.serving.shared_prefill import group_requests, shared_prefix_prefill
+from repro.serving.shared_prefill import (cached_prefix_prefill,
+                                          group_requests,
+                                          shared_prefix_prefill)
 from repro.serving.trunk_cache import TrunkCache, TrunkEntry

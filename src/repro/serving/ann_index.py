@@ -1,0 +1,229 @@
+"""Pluggable centroid indexes for the trunk cache's similarity search.
+
+``TrunkCache.lookup`` was an exact-key dict plus an O(N) cosine scan —
+fine for the dozens of entries in the early benchmarks, a wall at the
+production entry counts the ROADMAP north star targets.  This module
+makes the *candidate generation* step pluggable while keeping the
+acceptance test exact:
+
+* :class:`ScanIndex` (``index="scan"``) is the oracle: it declines to
+  narrow the candidate set (``candidates`` returns ``None``), so the
+  cache scans every resident entry exactly as before.  Every other index
+  is judged against it — the differential suite in
+  ``tests/test_ann_index.py`` measures recall relative to this scan.
+* :class:`LshIndex` (``index="lsh"``) buckets centroids by
+  sign-random-projection LSH (Charikar's SimHash): ``n_tables``
+  independent hash tables, each hashing a centroid to an ``n_bits``-bit
+  code via the signs of random hyperplane projections.  A lookup probes
+  its bucket in every table and returns the union as candidates.  The
+  projection is computed with ``jnp`` so the hash stays jax-native (on an
+  accelerator the planes matmul rides the device; under interpret-mode
+  CPU it is a single dispatched dot).
+
+Safety contract — and the reason this layering cannot create wrong hits:
+an index only *proposes* candidates.  The cache re-verifies every
+candidate against the true ``tau_trunk`` cosine before accepting it, so
+a false accept is impossible by construction; the only failure mode an
+approximate index can introduce is a *miss* (recall < 1), and a trunk
+miss is always safe — the group just computes its own shared phase
+exactly.  Two unit vectors with cosine ``s`` land on the same side of a
+random hyperplane with probability ``1 - arccos(s)/pi`` (≈ 0.86 at
+s = 0.90), so per-table collision is ``p^n_bits`` and overall recall is
+``1 - (1 - p^n_bits)^n_tables`` — the defaults (8 tables × 6 bits) put
+recall above 0.95 for every ``tau_trunk`` ≥ 0.90 (asserted empirically
+by the differential suite).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import (Dict, List, Optional, Protocol, Tuple, Union,
+                    runtime_checkable)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@runtime_checkable
+class CentroidIndex(Protocol):
+    """Candidate generator over (key, unit-centroid) pairs.
+
+    ``candidates`` may return ``None`` meaning "no narrowing — scan
+    everything" (the exact oracle), or a list of keys to re-verify.  The
+    cache owns the truth: candidates are always re-checked against the
+    exact cosine threshold, so an index trades recall, never precision.
+    """
+
+    name: str
+
+    def add(self, key: Tuple, centroid: np.ndarray) -> None: ...
+
+    def discard(self, key: Tuple) -> None: ...
+
+    def candidates(self, centroid: np.ndarray) -> Optional[List[Tuple]]: ...
+
+    def rebuild(self) -> None: ...
+
+    def __len__(self) -> int: ...
+
+
+class ScanIndex:
+    """The exact oracle: no candidate narrowing, the cache scans all
+    entries in residency (LRU) order — bitwise the pre-index behavior."""
+
+    name = "scan"
+
+    def __init__(self):
+        self._keys: "OrderedDict[Tuple, None]" = OrderedDict()
+
+    def add(self, key: Tuple, centroid: np.ndarray) -> None:
+        self._keys[key] = None
+
+    def discard(self, key: Tuple) -> None:
+        self._keys.pop(key, None)
+
+    def candidates(self, centroid: np.ndarray) -> Optional[List[Tuple]]:
+        return None                      # sentinel: scan every entry
+
+    def rebuild(self) -> None:
+        pass
+
+    def __len__(self) -> int:
+        return len(self._keys)
+
+
+class LshIndex:
+    """Sign-random-projection (SimHash) LSH over unit centroids.
+
+    ``n_tables`` hash tables, each an ``n_bits``-bit signature from the
+    signs of ``planes @ centroid``; hyperplanes are drawn per embedding
+    dim from ``jax.random`` (seeded, so signatures are reproducible and
+    a rebuilt index hashes identically).  Buckets are keyed
+    ``(dim, table, code)`` — centroids of different dims can never
+    collide.  ``candidates`` returns the union of the probe buckets in
+    first-inserted order (deterministic across runs).
+    """
+
+    name = "lsh"
+
+    def __init__(self, n_tables: int = 8, n_bits: int = 6, seed: int = 0):
+        if n_tables < 1 or n_bits < 1:
+            raise ValueError(f"n_tables/n_bits must be >= 1, "
+                             f"got {n_tables}/{n_bits}")
+        self.n_tables = n_tables
+        self.n_bits = n_bits
+        self.seed = seed
+        self._planes: Dict[int, jnp.ndarray] = {}       # dim -> projection
+        # (dim, table, code) -> ordered set of keys in that bucket
+        self._buckets: Dict[Tuple[int, int, int],
+                            "OrderedDict[Tuple, None]"] = {}
+        # key -> (dim, per-table codes, centroid) for removal + rebuild
+        self._sigs: Dict[Tuple, Tuple[int, Tuple[int, ...],
+                                      np.ndarray]] = {}
+        self.stats = {"adds": 0, "removes": 0, "lookups": 0,
+                      "candidates": 0, "rehashes": 0}
+
+    # -- hashing -------------------------------------------------------
+    def _planes_for(self, dim: int) -> jnp.ndarray:
+        planes = self._planes.get(dim)
+        if planes is None:
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed), dim)
+            planes = jax.random.normal(
+                key, (self.n_tables * self.n_bits, dim), dtype=jnp.float32)
+            self._planes[dim] = planes
+        return planes
+
+    def signature(self, centroid: np.ndarray
+                  ) -> Tuple[int, Tuple[int, ...]]:
+        """(dim, per-table bucket codes) for a unit centroid."""
+        c = np.asarray(centroid, np.float32).reshape(-1)
+        dim = c.shape[0]
+        # jax-native projection: one planes@c dot per hash
+        bits = np.asarray(self._planes_for(dim) @ jnp.asarray(c)) >= 0.0
+        weights = 1 << np.arange(self.n_bits)
+        codes = tuple(
+            int(bits[t * self.n_bits:(t + 1) * self.n_bits] @ weights)
+            for t in range(self.n_tables))
+        return dim, codes
+
+    # -- mutation ------------------------------------------------------
+    def add(self, key: Tuple, centroid: np.ndarray) -> None:
+        if key in self._sigs:            # re-add = overwrite signature
+            self.discard(key)
+        c = np.asarray(centroid, np.float32).reshape(-1)
+        dim, codes = self.signature(c)
+        for t, code in enumerate(codes):
+            self._buckets.setdefault((dim, t, code),
+                                     OrderedDict())[key] = None
+        self._sigs[key] = (dim, codes, c)
+        self.stats["adds"] += 1
+
+    def discard(self, key: Tuple) -> None:
+        sig = self._sigs.pop(key, None)
+        if sig is None:
+            return
+        dim, codes, _ = sig
+        for t, code in enumerate(codes):
+            bucket = self._buckets.get((dim, t, code))
+            if bucket is not None:
+                bucket.pop(key, None)
+                if not bucket:
+                    del self._buckets[(dim, t, code)]
+        self.stats["removes"] += 1
+
+    # -- query ---------------------------------------------------------
+    def candidates(self, centroid: np.ndarray) -> List[Tuple]:
+        self.stats["lookups"] += 1
+        if not self._sigs:               # empty index: nothing to probe
+            return []
+        dim, codes = self.signature(centroid)
+        seen, out = set(), []
+        for t, code in enumerate(codes):
+            for key in self._buckets.get((dim, t, code), ()):
+                if key not in seen:
+                    seen.add(key)
+                    out.append(key)
+        self.stats["candidates"] += len(out)
+        return out
+
+    def rebuild(self) -> None:
+        """Rehash every resident key from its stored centroid (bucket
+        rehash: e.g. after deserializing an index or tuning planes).  A
+        rebuild with unchanged planes reproduces the buckets exactly —
+        pinned by the differential suite's rehash edge case."""
+        items = [(k, c) for k, (_, _, c) in self._sigs.items()]
+        self._buckets.clear()
+        self._sigs.clear()
+        for key, c in items:
+            self.add(key, c)
+        self.stats["rehashes"] += 1
+
+    def __len__(self) -> int:
+        return len(self._sigs)
+
+    @property
+    def mean_candidates(self) -> float:
+        """Average candidate-set size per lookup — the determinist probe
+        the scaling bench asserts sub-linearity on."""
+        n = self.stats["lookups"]
+        return self.stats["candidates"] / n if n else 0.0
+
+
+_INDEXES = {
+    "scan": ScanIndex,
+    "lsh": LshIndex,
+}
+
+
+def make_index(spec: Union[str, CentroidIndex, None],
+               **kw) -> CentroidIndex:
+    """Resolve an index name (``"scan"`` / ``"lsh"``) or pass an instance
+    through; ``kw`` goes to the named constructor."""
+    if spec is None:
+        return ScanIndex()
+    if isinstance(spec, str):
+        if spec not in _INDEXES:
+            raise ValueError(f"unknown cache index {spec!r}; "
+                             f"have {sorted(_INDEXES)}")
+        return _INDEXES[spec](**kw)
+    return spec

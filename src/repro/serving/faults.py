@@ -49,6 +49,7 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
+import jax
 import numpy as np
 
 KINDS = ("launch_fail", "cache_miss", "cache_corrupt", "tick_stall")
@@ -59,20 +60,29 @@ _SPEC_KEYS = {"launch": "p_launch_fail", "miss": "p_cache_miss",
 
 
 def array_crc(x) -> int:
-    """CRC32 of an array's bytes — the trunk-cache integrity fingerprint
+    """CRC32 of a payload's bytes — the trunk-cache integrity fingerprint
     (cheap at serving-cache entry sizes; any corruption model that flips
-    stored bytes is caught)."""
-    return zlib.crc32(np.ascontiguousarray(np.asarray(x)).tobytes())
+    stored bytes is caught).  ``x`` may be a single array or an arbitrary
+    pytree (the AR-prefix payloads are (logits, kv-cache) trees): leaves
+    are chained through one running CRC, so a single array hashes exactly
+    as before and any leaf flip changes the fingerprint."""
+    crc = 0
+    for leaf in jax.tree.leaves(x):
+        crc = zlib.crc32(
+            np.ascontiguousarray(np.asarray(leaf)).tobytes(), crc)
+    return crc
 
 
 def corrupt_array(x):
     """Deterministically damage one byte of ``x`` (the injected
-    corruption model): flip every bit of byte 0.  Returns a new array
-    with the same shape/dtype whose CRC cannot match the original."""
-    a = np.ascontiguousarray(np.asarray(x)).copy()
+    corruption model): flip every bit of byte 0 of the first leaf.
+    Returns a new array/pytree with the same structure whose CRC cannot
+    match the original."""
+    leaves, treedef = jax.tree.flatten(x)
+    a = np.ascontiguousarray(np.asarray(leaves[0])).copy()
     raw = a.view(np.uint8).reshape(-1)
     raw[0] ^= 0xFF
-    return a
+    return jax.tree.unflatten(treedef, [a] + leaves[1:])
 
 
 @dataclass

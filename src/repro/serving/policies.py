@@ -425,10 +425,15 @@ class CacheAdmission(Protocol):
     """Store/evict policy for :class:`~repro.serving.trunk_cache.TrunkCache`.
 
     ``on_lookup`` is called once per cache lookup with the requester's
-    quantized key — BOTH the exact-key path and the cosine-scan path, hit
-    or miss — so popularity counts measure *demand*, not residency.
-    ``admit`` gates ``insert``; ``victim`` picks which key the byte budget
-    evicts first (``keys`` iterates in LRU → MRU order).
+    quantized key — BOTH the exact-key path and the similarity-search
+    path, hit or miss — so popularity counts measure *demand*, not
+    residency.  ``admit`` gates ``insert``; ``victim`` picks which key
+    the pressured tier demotes or evicts first (``keys`` iterates that
+    tier's residents in LRU → MRU order; ``tier`` names it — ``"hbm"``
+    victims spill to the host tier when one is configured, ``"host"``
+    victims leave the cache, so a tier-aware policy can protect
+    hard-to-recompute entries from the terminal eviction while letting
+    them spill freely).
     """
 
     name: str
@@ -437,11 +442,14 @@ class CacheAdmission(Protocol):
 
     def admit(self, key: Tuple) -> bool: ...
 
-    def victim(self, keys: Sequence[Tuple]) -> Optional[Tuple]: ...
+    def victim(self, keys: Sequence[Tuple],
+               tier: str = "") -> Optional[Tuple]: ...
 
 
 class AdmitAll:
-    """PR-3 behavior: store every completed trunk, evict plain LRU."""
+    """PR-3 behavior: store every completed trunk, evict plain LRU —
+    tier-blind: the coldest resident of whichever tier is under pressure
+    spills/evicts first."""
 
     name = "always"
 
@@ -451,7 +459,8 @@ class AdmitAll:
     def admit(self, key: Tuple) -> bool:
         return True
 
-    def victim(self, keys: Sequence[Tuple]) -> Optional[Tuple]:
+    def victim(self, keys: Sequence[Tuple],
+               tier: str = "") -> Optional[Tuple]:
         for k in keys:                      # first = least recently used
             return k
         return None
@@ -466,8 +475,11 @@ class PopularityAdmission:
     through this counter too), so a theme must recur before its trunk
     earns bytes — one-hit wonders never displace hot entries.  Eviction
     inverts the same signal: the victim is the stored key with the lowest
-    popularity, ties broken LRU-first.  Counts survive eviction (they
-    measure the *stream*, not the cache), bounded by ``max_keys`` with
+    popularity, ties broken LRU-first.  Counts survive eviction AND tier
+    moves (they measure the *stream*, not the cache), so a trunk that
+    spilled cold and reheated is promoted on its popularity, not reset —
+    the ``tier`` kwarg is accepted for the protocol but the demand signal
+    is deliberately tier-blind.  Bounded by ``max_keys`` with
     drop-coldest-half pruning so a long-lived server cannot grow counter
     state without bound.
     """
@@ -490,7 +502,8 @@ class PopularityAdmission:
     def admit(self, key: Tuple) -> bool:
         return self.counts.get(key, 0) >= self.threshold
 
-    def victim(self, keys: Sequence[Tuple]) -> Optional[Tuple]:
+    def victim(self, keys: Sequence[Tuple],
+               tier: str = "") -> Optional[Tuple]:
         best, best_count = None, None
         for k in keys:                      # LRU -> MRU: ties stay LRU
             c = self.counts.get(k, 0)

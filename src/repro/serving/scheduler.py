@@ -555,7 +555,8 @@ class RequestScheduler:
         entry = None
         if self.trunk_cache is not None and g.n_shared > 0:
             entry = self.trunk_cache.lookup(
-                g.centroid, g.beta, self._cfg_key(), self._latent_shape)
+                g.centroid, g.beta, self._cfg_key(), self._latent_shape,
+                payload="trunk")
         if entry is not None:
             # cross-batch trunk hit: skip the shared phase entirely, fork
             # straight into branching from the cached branch-point latent.
@@ -585,7 +586,8 @@ class RequestScheduler:
         self.trunk_cache.insert(TrunkEntry(
             z=g.carry.z, eps_prev=g.carry.eps_prev, step_idx=g.n_shared,
             beta_bucket=g.beta, rng_fold=g.gid, centroid=g.centroid,
-            cfg_key=self._cfg_key()), shape=self._latent_shape)
+            cfg_key=self._cfg_key(), payload="trunk"),
+            shape=self._latent_shape)
 
     def _count_launch(self, rows: int, pad_rows: int) -> None:
         self.stats["launches"] += 1
@@ -1094,4 +1096,13 @@ class RequestScheduler:
             out["cache_hit_rate"] = self.trunk_cache.hit_rate
             out["cache_entries"] = len(self.trunk_cache)
             out["cache_bytes"] = self.trunk_cache.bytes
+            # tier + index health: spills/promotions trace working-set
+            # churn between the HBM budget and the host spill tier, and
+            # the index name records which candidate generator served the
+            # similarity path (scan oracle vs LSH)
+            out["cache_index"] = self.trunk_cache.index.name
+            out["cache_spills"] = self.trunk_cache.stats["spills"]
+            out["cache_promotions"] = self.trunk_cache.stats["promotions"]
+            out["cache_hbm_bytes"] = self.trunk_cache.tier_bytes["hbm"]
+            out["cache_host_bytes"] = self.trunk_cache.tier_bytes["host"]
         return out

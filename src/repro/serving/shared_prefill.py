@@ -11,15 +11,27 @@ Two trunk definitions are provided:
   vLLM-style prefix caching but *selected by semantic grouping*);
 * truncated trunk at the SAGE branch ratio for near-identical prompts
   (lossy, flagged experimental — the AR twin of the paper's shared phase).
+
+Cross-batch reuse rides the SAME semantic cache as diffusion trunks:
+:func:`cached_prefix_prefill` stores the prefill's (logits, kv-cache)
+state in a :class:`~repro.serving.trunk_cache.TrunkCache` under
+``payload="ar_prefix"`` — the payload field namespaces the key, so one
+reuse layer (one byte budget, one admission policy, one ANN index, one
+tier ledger) serves both workload kinds without their entries ever
+satisfying each other's lookups.  Unlike diffusion trunks, prefix reuse
+is *lossless*: the trunk token bytes ride the ``cfg_key``, so only an
+exact trunk match hits; the centroid similarity merely routes the
+lookup (and lets an LSH index find the entry sub-linearly).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import grouping
 from repro.serving.kvcache import fork_model_cache
+from repro.serving.trunk_cache import TrunkCache, TrunkEntry, _unit
 
 
 def common_prefix_len(token_rows: np.ndarray) -> int:
@@ -69,3 +81,70 @@ def shared_prefix_prefill(prefill_fn: Callable, decode_fn: Callable,
     return logits, caches, S, {
         "prefix_len": P, "token_steps": ours, "token_steps_naive": naive,
         "saving": 1.0 - ours / naive}
+
+
+# -- cross-batch prefix reuse (unified trunk cache) --------------------------
+
+def prefix_cache_key(trunk_tokens: np.ndarray, max_len: int) -> Hashable:
+    """Compatibility fingerprint for an AR prefix trunk.  The trunk's
+    token bytes are IN the key: an ``ar_prefix`` hit is exact-match on
+    the tokens that built the kv-cache, which is what makes reuse
+    lossless (the semantic centroid only routes the lookup)."""
+    t = np.ascontiguousarray(np.asarray(trunk_tokens, np.int32))
+    return ("ar_prefix", int(max_len), t.shape[-1], t.tobytes())
+
+
+def cached_prefix_prefill(prefill_fn: Callable, decode_fn: Callable,
+                          tokens: np.ndarray, max_len: int, *,
+                          cache: Optional[TrunkCache],
+                          embeds: Optional[np.ndarray] = None,
+                          centroid: Optional[np.ndarray] = None
+                          ) -> Tuple[Any, Any, int, Dict]:
+    """:func:`shared_prefix_prefill` with the trunk served from / stored
+    into the unified semantic cache (``payload="ar_prefix"``).
+
+    ``centroid`` (or the mean of ``embeds``) is the group's semantic key
+    — the same routing signal diffusion trunks use — while the trunk
+    token bytes in ``cfg_key`` keep reuse exact.  On a hit the P prefill
+    token-steps vanish from the cost ledger; on a miss the freshly
+    computed (logits, kv-cache) pair is inserted for the next wave.
+    ``cache=None`` degrades to the uncached fast path.
+
+    Returns ``(logits, caches, next_pos, stats)``; stats add
+    ``trunk_cache_hit`` to the usual accounting.
+    """
+    if centroid is None:
+        if embeds is None:
+            raise ValueError("need embeds or centroid for cache routing")
+        centroid = np.asarray(embeds, np.float32).mean(axis=0)
+    centroid = _unit(centroid)
+    N, S = tokens.shape
+    P = common_prefix_len(tokens)
+    P = max(1, min(P, S - 1))            # leave >= 1 token to catch up
+    cfg_key = prefix_cache_key(tokens[0, :P], max_len)
+    entry = None
+    if cache is not None:
+        entry = cache.lookup(centroid, 0.0, cfg_key, (P,),
+                             payload="ar_prefix")
+    import jax.numpy as jnp
+    if entry is not None:
+        logits, trunk = entry.z
+        logits = jnp.asarray(logits)
+    else:
+        logits, trunk = prefill_fn(tokens[:1, :P], max_len)
+        if cache is not None:
+            cache.insert(TrunkEntry(
+                z=(logits, trunk), eps_prev=None, step_idx=P,
+                beta_bucket=0.0, rng_fold=0, centroid=centroid,
+                cfg_key=cfg_key, payload="ar_prefix"), shape=(P,))
+    caches = fork_model_cache(trunk, N)
+    logits = jnp.repeat(logits, N, axis=0)
+    for pos in range(P, S):
+        logits, caches = decode_fn(caches, tokens[:, pos:pos + 1],
+                                   jnp.int32(pos))
+    naive = N * S
+    ours = (0 if entry is not None else P) + N * (S - P)
+    return logits, caches, S, {
+        "prefix_len": P, "token_steps": ours, "token_steps_naive": naive,
+        "saving": 1.0 - ours / naive,
+        "trunk_cache_hit": entry is not None}

@@ -16,56 +16,91 @@ group's (the trunk was denoised under the cached group's c̄) — the same
 kind of approximation as the paper's within-group sharing, governed by the
 same similarity-threshold logic, so ``tau_trunk`` should sit well above
 ``tau_min``.  Hits additionally require an exact match of everything else
-that shapes the trunk: sampler config, schedule bucket (beta) and latent
-shape are all part of the compatibility key.  (The RNG fold that drew the
-trunk's init noise is stored as provenance metadata only — reusing a
-trunk deliberately replaces the hitting group's own noise stream.)
+that shapes the trunk: sampler config, schedule bucket (beta), latent
+shape and *payload type* are all part of the compatibility key.  (The RNG
+fold that drew the trunk's init noise is stored as provenance metadata
+only — reusing a trunk deliberately replaces the hitting group's own
+noise stream.)
 
 Keying is two-level, like a prefix cache with fuzzy tags:
 
 * a *quantized* centroid (rounded to ``quant_decimals``) gives an O(1)
-  exact-hit dict key for repeated themes;
-* a linear cosine scan over the (small, byte-budgeted) entry set catches
-  near-duplicates under ``tau_trunk``.
+  exact-hit dict key for repeated themes; if the resident entry under a
+  colliding quantized key fails the cosine re-check, the lookup falls
+  through to the similarity search — a collision must never mask a
+  compatible near-duplicate stored under a different key;
+* a similarity search over the entry set catches near-duplicates under
+  ``tau_trunk``.  Candidate generation is pluggable
+  (``serving.ann_index``): ``index="scan"`` is the exact O(N) oracle,
+  ``index="lsh"`` narrows to sign-random-projection LSH buckets.  Either
+  way every candidate is re-verified against the true cosine threshold,
+  so an approximate index can lower recall but can never produce a false
+  accept.
+
+Payload types: the same cache serves diffusion trunks
+(``payload="trunk"``, the scheduler's default) and AR prefix trunks
+(``payload="ar_prefix"``, see ``serving.shared_prefill``) — one
+semantic-reuse layer, namespaced by the payload field in the key so the
+two kinds can never satisfy each other's lookups.
+
+Storage is *tiered*: entries live in an HBM working set bounded by
+``max_bytes``; when that budget overflows, victims spill to a host-RAM
+tier (bounded by ``host_bytes``, arrays committed to host numpy) instead
+of being dropped, and a hit on a spilled entry promotes it back to HBM.
+``spills`` / ``promotions`` / ``tier_bytes`` ride the stats ledger.  With
+``host_bytes=0`` (the default) the spill tier is disabled and overflow
+evicts outright — the pre-tier behavior.
 
 Storage and eviction are policy-driven (``serving.policies``): a
 :class:`~repro.serving.policies.CacheAdmission` object decides whether a
 completed trunk earns bytes at all (``PopularityAdmission`` only stores
 keys whose demand count crossed a threshold; rejections are counted in
-``stats['admission_rejects']``) and which entry the byte budget evicts
-first (cold-first under popularity, plain LRU under the default
-:class:`~repro.serving.policies.AdmitAll`).  Every ``lookup`` — exact-key
-hit, scan hit, or miss — ticks the requester's quantized key through
-``admission.on_lookup`` so the popularity signal measures demand, not
-residency (the exact-key path bypassing the counter was a bug).  Bytes
-are accounted with ``kvcache.cache_bytes`` over the stored arrays.
+``stats['admission_rejects']``) and which entry each tier's byte budget
+demotes or evicts first (the ``tier`` kwarg names the tier under
+pressure).  Every ``lookup`` — exact-key hit, similarity hit, or miss —
+ticks the requester's quantized key through ``admission.on_lookup`` so
+the popularity signal measures demand, not residency (the exact-key path
+bypassing the counter was a bug).  Bytes are accounted with
+``kvcache.cache_bytes`` over the stored arrays.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Hashable, Optional, Tuple, Union
+from typing import Any, Hashable, List, Optional, Tuple, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.ann_index import CentroidIndex, make_index
 from repro.serving.faults import FaultPlan, array_crc, corrupt_array
 from repro.serving.kvcache import cache_bytes
 from repro.serving.policies import CacheAdmission, make_cache_admission
+
+HBM, HOST = "hbm", "host"
 
 
 @dataclass
 class TrunkEntry:
     """One completed shared phase: the carry at the branch point."""
-    z: Any                       # (K=1, H, W, C) trunk latent at T*
+    z: Any                       # (K=1, H, W, C) trunk latent at T* — or,
+    #                              for payload="ar_prefix", the (logits,
+    #                              kv-cache) pytree at the prefix boundary
     eps_prev: Any                # solver history at T*, or None (the branch
     #                              fork restarts history — see fork_carry —
     #                              so TrunkCache(store_history=False) drops
     #                              it to double capacity per byte)
-    step_idx: int                # grid position of z (== n_shared)
+    step_idx: int                # grid position of z (== n_shared); for
+    #                              ar_prefix payloads, the prefix length
     beta_bucket: float           # share-ratio bucket the trunk ran under
     rng_fold: int                # fold of the engine key that drew the noise
     centroid: np.ndarray         # unit-norm mean prompt embedding
     cfg_key: Hashable            # sampler/schedule compatibility fingerprint
+    payload: str = "trunk"       # semantic-reuse namespace: "trunk"
+    #                              (diffusion branch-point carry) or
+    #                              "ar_prefix" (LLM prefix trunk)
+    tier: str = HBM              # residency tier, maintained by the cache
     nbytes: int = 0
     crc: Optional[int] = None    # integrity fingerprint of z's bytes —
     #                              validated on every hit, so a corrupted
@@ -84,19 +119,45 @@ def _unit(v: np.ndarray) -> np.ndarray:
     return v / max(float(np.linalg.norm(v)), 1e-8)
 
 
-class TrunkCache:
-    """LRU map: quantized group centroid -> :class:`TrunkEntry`.
+def _to_host(x):
+    """Commit a payload pytree to host RAM (numpy leaves, bytes
+    unchanged — the CRC fingerprint survives the tier move)."""
+    return jax.tree.map(np.asarray, x)
 
-    ``lookup`` is exact-key first (quantized centroid), cosine scan second;
-    both paths require ``cfg_key``/``beta_bucket``/latent-shape equality.
+
+def _to_device(x):
+    """Bring a spilled payload back onto the device default."""
+    return jax.tree.map(jnp.asarray, x)
+
+
+class TrunkCache:
+    """Tiered LRU map: quantized group centroid -> :class:`TrunkEntry`.
+
+    ``lookup`` is exact-key first (quantized centroid), then a
+    similarity search over index candidates; both paths require
+    ``cfg_key``/``beta_bucket``/latent-shape/payload equality and the
+    exact ``tau_trunk`` cosine.
     """
 
     def __init__(self, tau_trunk: float = 0.95,
                  max_bytes: int = 64 * 1024 * 1024,
                  quant_decimals: int = 2, store_history: bool = True,
                  admission: Union[str, CacheAdmission, None] = None,
-                 faults: Optional[FaultPlan] = None):
-        """``store_history=False`` drops the ``eps_prev`` array from stored
+                 faults: Optional[FaultPlan] = None,
+                 index: Union[str, CentroidIndex, None] = "scan",
+                 host_bytes: int = 0):
+        """``max_bytes`` bounds the HBM working set; ``host_bytes`` sizes
+        the host-RAM spill tier (0 disables spilling — HBM overflow
+        evicts outright, the pre-tier behavior).
+
+        ``index`` selects candidate generation for the similarity search:
+        ``"scan"`` (exact O(N) oracle) or ``"lsh"``
+        (sign-random-projection buckets, see ``serving.ann_index``), or a
+        :class:`~repro.serving.ann_index.CentroidIndex` instance.
+        Candidates are always re-verified against the true cosine, so the
+        index choice can never cause a false accept.
+
+        ``store_history=False`` drops the ``eps_prev`` array from stored
         entries (halving bytes per trunk, doubling capacity under the
         budget): the restore path *forks* — solver history restarts at the
         branch point — so the history is only needed if trunks are later
@@ -113,33 +174,98 @@ class TrunkCache:
         """
         if not 0.0 < tau_trunk <= 1.0:
             raise ValueError(f"tau_trunk must be in (0, 1], got {tau_trunk}")
+        if host_bytes < 0:
+            raise ValueError(f"host_bytes must be >= 0, got {host_bytes}")
         self.tau_trunk = tau_trunk
         self.max_bytes = max_bytes
+        self.host_bytes = host_bytes
         self.quant_decimals = quant_decimals
         self.store_history = store_history
         self.admission = make_cache_admission(admission)
         self.faults = faults
+        self.index = make_index(index)
         self._entries: "OrderedDict[Tuple, TrunkEntry]" = OrderedDict()
         self.bytes = 0
+        self.tier_bytes = {HBM: 0, HOST: 0}
         self.stats = {"hits": 0, "exact_hits": 0, "misses": 0,
                       "inserts": 0, "evictions": 0, "overwrites": 0,
                       "admission_rejects": 0, "fault_forced_misses": 0,
-                      "integrity_drops": 0}
+                      "integrity_drops": 0, "spills": 0, "promotions": 0}
 
     # ------------------------------------------------------------------
     def _quant_key(self, centroid: np.ndarray, beta_bucket: float,
-                   cfg_key: Hashable, shape: Tuple[int, ...]) -> Tuple:
+                   cfg_key: Hashable, shape: Tuple[int, ...],
+                   payload: str = "trunk") -> Tuple:
         q = np.round(_unit(centroid), self.quant_decimals)
         # -0.0 and 0.0 quantize to different bytes; canonicalise
         q = q + 0.0
-        return (q.tobytes(), round(beta_bucket, 4), cfg_key, shape)
+        return (q.tobytes(), round(beta_bucket, 4), cfg_key, shape, payload)
 
+    # -- tier mechanics ------------------------------------------------
+    def _remove(self, key: Tuple) -> TrunkEntry:
+        """Drop ``key`` from the store, ledger and index (no stats)."""
+        entry = self._entries.pop(key)
+        self.bytes -= entry.nbytes
+        self.tier_bytes[entry.tier] -= entry.nbytes
+        self.index.discard(key)
+        return entry
+
+    def _spill(self, key: Tuple) -> None:
+        """Demote an HBM entry to the host tier (payload committed to
+        host numpy; bytes move between tier ledgers, total unchanged)."""
+        entry = self._entries[key]
+        entry.z = _to_host(entry.z)
+        entry.eps_prev = _to_host(entry.eps_prev)
+        entry.tier = HOST
+        self.tier_bytes[HBM] -= entry.nbytes
+        self.tier_bytes[HOST] += entry.nbytes
+        self.stats["spills"] += 1
+
+    def _promote(self, key: Tuple) -> None:
+        """Promote-on-hit: bring a spilled entry back to HBM."""
+        entry = self._entries[key]
+        entry.z = _to_device(entry.z)
+        entry.eps_prev = _to_device(entry.eps_prev)
+        entry.tier = HBM
+        self.tier_bytes[HOST] -= entry.nbytes
+        self.tier_bytes[HBM] += entry.nbytes
+        self.stats["promotions"] += 1
+
+    def _tier_keys(self, tier: str) -> List[Tuple]:
+        """Keys resident in ``tier``, LRU -> MRU order."""
+        return [k for k, e in self._entries.items() if e.tier == tier]
+
+    def _enforce_budgets(self) -> None:
+        """Settle both tier budgets: HBM overflow spills to host (or
+        evicts when the spill tier is disabled), host overflow evicts.
+        The newest/last HBM entry is never forced out by its own size —
+        an oversized single trunk stays resident (pre-tier semantics)."""
+        while self.tier_bytes[HBM] > self.max_bytes:
+            hbm = self._tier_keys(HBM)
+            if len(hbm) <= 1:
+                break
+            victim = self.admission.victim(hbm, tier=HBM)
+            if self.host_bytes > 0:
+                self._spill(victim)
+            else:
+                self._remove(victim)
+                self.stats["evictions"] += 1
+        while self.tier_bytes[HOST] > self.host_bytes:
+            host = self._tier_keys(HOST)
+            if not host:
+                break
+            victim = self.admission.victim(host, tier=HOST)
+            self._remove(victim)
+            self.stats["evictions"] += 1
+
+    # ------------------------------------------------------------------
     def lookup(self, centroid: np.ndarray, beta_bucket: float,
-               cfg_key: Hashable, shape: Tuple[int, ...]
-               ) -> Optional[TrunkEntry]:
+               cfg_key: Hashable, shape: Tuple[int, ...],
+               payload: str = "trunk") -> Optional[TrunkEntry]:
         """Best compatible entry with cosine >= tau_trunk, else None."""
         c = _unit(centroid)
-        key = self._quant_key(centroid, beta_bucket, cfg_key, shape)
+        key = self._quant_key(centroid, beta_bucket, cfg_key, shape,
+                              payload)
         # demand signal first, on EVERY lookup path — the exact-key hit
         # below must not bypass the popularity counter (hit accounting is
         # policy-visible: see stats['admission_rejects'] / summary())
@@ -151,15 +277,22 @@ class TrunkCache:
         if hit is not None and float(hit.centroid @ c) >= self.tau_trunk:
             hit_key, exact = key, True
         else:
-            hit_key, best_sim = None, self.tau_trunk
-            for k, e in self._entries.items():
-                if (k[1], k[2], k[3]) != (round(beta_bucket, 4), cfg_key,
-                                          shape):
+            # no exact entry, or a quantized-key collision that failed the
+            # re-check: fall through to the similarity search — the
+            # colliding resident must not mask a compatible near-duplicate
+            # stored under a different quantized key
+            hit_key, best_sim, exact = None, self.tau_trunk, False
+            cand = self.index.candidates(c)
+            items = (self._entries.items() if cand is None
+                     else ((k, self._entries[k]) for k in cand
+                           if k in self._entries))
+            compat = (round(beta_bucket, 4), cfg_key, shape, payload)
+            for k, e in items:
+                if (k[1], k[2], k[3], k[4]) != compat:
                     continue
                 sim = float(e.centroid @ c)
                 if sim >= best_sim:
                     hit_key, best_sim = k, sim
-            exact = False
         if hit_key is None:
             self.stats["misses"] += 1
             return None
@@ -179,12 +312,17 @@ class TrunkCache:
         # dropped and reported as a miss — recomputing the shared phase
         # is exact, silently denoising from a damaged trunk is not
         if entry.crc != array_crc(entry.z):
-            self._entries.pop(hit_key)
-            self.bytes -= entry.nbytes
+            self._remove(hit_key)
             self.stats["integrity_drops"] += 1
             self.stats["misses"] += 1
             return None
         self._entries.move_to_end(hit_key)
+        if entry.tier == HOST:
+            # promote-on-hit: the caller is about to fork from this trunk,
+            # so it belongs in the working set; promotion may spill a
+            # colder HBM entry in its place
+            self._promote(hit_key)
+            self._enforce_budgets()
         self.stats["hits"] += 1
         if exact:
             self.stats["exact_hits"] += 1
@@ -197,7 +335,7 @@ class TrunkCache:
         entry.centroid = _unit(entry.centroid)
         shape = shape if shape is not None else tuple(np.shape(entry.z))
         key = self._quant_key(entry.centroid, entry.beta_bucket,
-                              entry.cfg_key, shape)
+                              entry.cfg_key, shape, entry.payload)
         if not self.admission.admit(key):
             self.stats["admission_rejects"] += 1
             return False
@@ -208,18 +346,16 @@ class TrunkCache:
         # entry's bytes leave the ledger before the new entry's arrive, so
         # cache_bytes can never double-count a key (regression:
         # tests/test_serving_scheduler.py::test_trunk_cache_overwrite_*)
-        old = self._entries.pop(key, None)
-        if old is not None:
-            self.bytes -= old.nbytes
+        if key in self._entries:
+            self._remove(key)
             self.stats["overwrites"] += 1
+        entry.tier = HBM                 # fresh trunks enter the working set
         self._entries[key] = entry
         self.bytes += entry.nbytes
+        self.tier_bytes[HBM] += entry.nbytes
+        self.index.add(key, entry.centroid)
         self.stats["inserts"] += 1
-        while self.bytes > self.max_bytes and len(self._entries) > 1:
-            victim = self.admission.victim(self._entries.keys())
-            evicted = self._entries.pop(victim)    # cold-first, or LRU end
-            self.bytes -= evicted.nbytes
-            self.stats["evictions"] += 1
+        self._enforce_budgets()
         return True
 
     # ------------------------------------------------------------------
@@ -227,6 +363,14 @@ class TrunkCache:
         """Recount ``bytes`` from the stored entries (invariant probe:
         must always equal the incrementally-maintained ``self.bytes``)."""
         return sum(e.nbytes for e in self._entries.values())
+
+    def tier_ledger(self) -> dict:
+        """Per-tier recount (invariant probe for ``tier_bytes``: the two
+        must match, and their sum must equal ``bytes``)."""
+        out = {HBM: 0, HOST: 0}
+        for e in self._entries.values():
+            out[e.tier] += e.nbytes
+        return out
 
     def __len__(self) -> int:
         return len(self._entries)

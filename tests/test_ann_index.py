@@ -1,0 +1,270 @@
+"""Differential correctness suite for the trunk cache's ANN index.
+
+The safety argument for ``index="lsh"`` is structural — candidates are
+re-verified against the exact ``tau_trunk`` cosine, so the approximate
+index can only *miss*, never accept what the exact scan would reject.
+This suite checks that argument differentially against the
+``index="scan"`` oracle:
+
+* **false-accept rate = 0** (property-fuzzed): any hit the LSH cache
+  returns clears the exact cosine threshold AND would also be a hit for
+  the scan oracle on the same population — for every random population,
+  tau, dim and query stream hypothesis can draw;
+* **recall ≥ 0.95** (measured): on seeded populations with
+  near-duplicate queries, the LSH cache hits at least 95% as often as
+  the scan oracle at every supported ``tau_trunk`` ∈ {0.90, 0.95, 0.99};
+* bucket-rehash and empty-index edge cases on the raw
+  :class:`~repro.serving.ann_index.LshIndex`.
+
+Everything runs the *public* cache interface where possible, so the
+properties pin the deployed lookup path, not an index abstraction.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.ann_index import LshIndex, ScanIndex, make_index
+from repro.serving.trunk_cache import TrunkCache, TrunkEntry
+
+from hypothesis_compat import given, settings, st
+
+TAUS = (0.90, 0.95, 0.99)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _unit_rows(rng: np.random.RandomState, n: int, dim: int) -> np.ndarray:
+    v = rng.randn(n, dim).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _entry(centroid, tag: float, beta=0.5, cfg="cfg") -> TrunkEntry:
+    z = np.full((1, 2, 2, 1), tag, np.float32)
+    return TrunkEntry(z=z, eps_prev=None, step_idx=2, beta_bucket=beta,
+                      rng_fold=0, centroid=np.asarray(centroid, np.float32),
+                      cfg_key=cfg)
+
+
+def _twin_caches(tau: float, **lsh_kw):
+    """A scan-oracle cache and an LSH cache with identical parameters."""
+    scan = TrunkCache(tau_trunk=tau, index="scan")
+    lsh = TrunkCache(tau_trunk=tau, index=LshIndex(**lsh_kw))
+    return scan, lsh
+
+SHAPE = (1, 2, 2, 1)
+
+
+def _populate(caches, pop):
+    for i, v in enumerate(pop):
+        for c in caches:
+            c.insert(_entry(v, tag=float(i)), shape=SHAPE)
+
+
+def _near_queries(rng, pop, tau, n_queries):
+    """Perturbed copies of stored centroids whose exact cosine to their
+    source stays >= tau (rejection-sampled, so the scan oracle is
+    guaranteed a hit for every query)."""
+    dim = pop.shape[1]
+    # per-component noise sized so the expected cosine sits just above
+    # tau: |noise| ~ s*sqrt(dim) and cos ~ 1/sqrt(1+s^2 dim), so
+    # s^2 dim <~ 2(1-tau) keeps the acceptance rate high at every dim
+    scale = 0.5 * np.sqrt(2.0 * (1.0 - tau) / dim)
+    out = []
+    while len(out) < n_queries:
+        i = rng.randint(len(pop))
+        q = pop[i] + scale * rng.randn(dim).astype(np.float32)
+        q /= np.linalg.norm(q)
+        if float(pop[i] @ q) >= tau:
+            out.append(q)
+    return np.asarray(out, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# false accepts are impossible by construction (differential property)
+# ---------------------------------------------------------------------------
+
+def check_no_false_accepts(seed: int, dim: int, n: int, tau: float) -> None:
+    """ANY hit the LSH cache returns (a) clears the exact tau_trunk
+    cosine and (b) is a hit the scan oracle confirms with at-least-equal
+    similarity."""
+    rng = np.random.RandomState(seed)
+    scan, lsh = _twin_caches(tau)
+    pop = _unit_rows(rng, n, dim)
+    _populate((scan, lsh), pop)
+    # half adversarially-near queries, half independent randoms
+    queries = np.concatenate(
+        [_near_queries(rng, pop, tau, 6), _unit_rows(rng, 6, dim)])
+    for q in queries:
+        got_l = lsh.lookup(q, 0.5, "cfg", SHAPE)
+        got_s = scan.lookup(q, 0.5, "cfg", SHAPE)
+        if got_l is not None:
+            sim_l = float(got_l.centroid @ q)
+            assert sim_l >= tau, "LSH returned a below-threshold hit"
+            assert got_s is not None, \
+                "LSH hit where the exact scan oracle misses"
+            assert float(got_s.centroid @ q) >= sim_l - 1e-6, \
+                "scan oracle found a worse best-match than LSH"
+
+
+def check_candidates_resident(seed: int) -> None:
+    """Index candidates always reference resident keys, even across
+    overwrites and removals (no dangling-key false accepts)."""
+    rng = np.random.RandomState(seed)
+    idx = LshIndex(n_tables=4, n_bits=4, seed=1)
+    pop = _unit_rows(rng, 12, 8)
+    keys = [("k", i) for i in range(len(pop))]
+    for k, v in zip(keys, pop):
+        idx.add(k, v)
+    for k in keys[::3]:
+        idx.discard(k)
+    alive = set(keys) - set(keys[::3])
+    for q in _unit_rows(rng, 8, 8):
+        assert set(idx.candidates(q)) <= alive
+
+
+@given(seed=st.integers(0, 10_000), dim=st.sampled_from([4, 16, 48]),
+       n=st.integers(1, 24), tau=st.sampled_from(TAUS))
+@settings(max_examples=40, deadline=None)
+def test_lsh_never_false_accepts(seed, dim, n, tau):
+    check_no_false_accepts(seed, dim, n, tau)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("tau", TAUS)
+def test_lsh_never_false_accepts_deterministic(seed, tau):
+    """Deterministic twin of the property case: always runs, hypothesis
+    or not."""
+    check_no_false_accepts(seed * 101 + 5, dim=16, n=20, tau=tau)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_lsh_candidates_are_resident(seed):
+    check_candidates_resident(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_lsh_candidates_are_resident_deterministic(seed):
+    check_candidates_resident(seed)
+
+
+# ---------------------------------------------------------------------------
+# measured recall vs the scan oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tau", TAUS)
+def test_lsh_recall_vs_scan_oracle(tau):
+    """At default LSH parameters the cache-level recall (LSH hits /
+    scan-oracle hits on identical populations and query streams) clears
+    0.95 for every supported tau_trunk."""
+    rng = np.random.RandomState(7)
+    scan, lsh = _twin_caches(tau)
+    pop = _unit_rows(rng, 256, 64)
+    _populate((scan, lsh), pop)
+    queries = _near_queries(rng, pop, tau, 200)
+    hits_scan = hits_lsh = 0
+    for q in queries:
+        hits_scan += scan.lookup(q, 0.5, "cfg", SHAPE) is not None
+        hits_lsh += lsh.lookup(q, 0.5, "cfg", SHAPE) is not None
+    assert hits_scan == len(queries)     # oracle hits by construction
+    recall = hits_lsh / hits_scan
+    assert recall >= 0.95, f"recall {recall:.3f} < 0.95 at tau={tau}"
+
+
+def test_lsh_narrows_candidates():
+    """The point of the index: the similarity search touches a small
+    fraction of a large population (sub-linear candidate sets), while
+    still recalling near-duplicates."""
+    rng = np.random.RandomState(3)
+    idx = LshIndex()
+    pop = _unit_rows(rng, 512, 64)
+    for i, v in enumerate(pop):
+        idx.add(("k", i), v)
+    scale = 0.5 * np.sqrt(2.0 * (1.0 - 0.90) / 64)
+    found = 0
+    for i in range(100):
+        q = pop[i] + scale * rng.randn(64).astype(np.float32)
+        q /= np.linalg.norm(q)
+        if float(pop[i] @ q) < 0.90:     # drifted below the tau regime
+            found += 1                   # (not an index miss; skip)
+            continue
+        found += ("k", i) in idx.candidates(q)
+    assert found >= 95
+    assert idx.mean_candidates < 0.5 * len(pop)
+
+
+# ---------------------------------------------------------------------------
+# bucket rehash + empty-index edge cases
+# ---------------------------------------------------------------------------
+
+def test_rebuild_preserves_buckets():
+    rng = np.random.RandomState(11)
+    idx = LshIndex(n_tables=6, n_bits=5, seed=2)
+    pop = _unit_rows(rng, 64, 16)
+    for i, v in enumerate(pop):
+        idx.add(("k", i), v)
+    queries = _unit_rows(rng, 16, 16)
+    before = [idx.candidates(q) for q in queries]
+    idx.rebuild()
+    after = [idx.candidates(q) for q in queries]
+    assert before == after               # same planes -> same buckets
+    assert idx.stats["rehashes"] == 1
+    assert len(idx) == len(pop)
+
+
+def test_rebuild_after_discards_drops_dead_keys():
+    rng = np.random.RandomState(12)
+    idx = LshIndex(n_tables=4, n_bits=3, seed=0)
+    pop = _unit_rows(rng, 32, 8)
+    for i, v in enumerate(pop):
+        idx.add(("k", i), v)
+    for i in range(0, 32, 2):
+        idx.discard(("k", i))
+    idx.rebuild()
+    assert len(idx) == 16
+    for q in _unit_rows(rng, 8, 8):
+        assert all(k[1] % 2 == 1 for k in idx.candidates(q))
+
+
+def test_readd_rehashes_new_centroid():
+    """Re-adding a key with a different centroid must re-bucket it — a
+    stale signature would leave candidates pointing at the wrong
+    neighbourhood."""
+    idx = LshIndex(n_tables=8, n_bits=6, seed=0)
+    a = np.zeros(16, np.float32); a[0] = 1.0
+    b = np.zeros(16, np.float32); b[1] = -1.0
+    idx.add(("k",), a)
+    idx.add(("k",), b)                   # overwrite with opposite vector
+    assert len(idx) == 1
+    assert ("k",) in idx.candidates(b)
+
+
+def test_empty_index_and_cache():
+    idx = LshIndex()
+    assert idx.candidates(np.ones(8, np.float32)) == []
+    assert len(idx) == 0
+    idx.rebuild()                        # no-op on empty
+    cache = TrunkCache(index="lsh")
+    assert cache.lookup(np.ones(8), 0.5, "cfg", SHAPE) is None
+    assert cache.stats["misses"] == 1
+
+
+def test_make_index_resolution():
+    assert isinstance(make_index("scan"), ScanIndex)
+    assert isinstance(make_index("lsh"), LshIndex)
+    assert isinstance(make_index(None), ScanIndex)
+    inst = LshIndex(n_tables=2, n_bits=2)
+    assert make_index(inst) is inst
+    with pytest.raises(ValueError):
+        make_index("ivf")
+
+
+def test_dim_isolation():
+    """Centroids of different embedding dims can never collide in a
+    bucket (bucket keys carry the dim)."""
+    idx = LshIndex(n_tables=2, n_bits=2, seed=0)
+    idx.add(("a",), np.ones(8, np.float32) / np.sqrt(8.0))
+    idx.add(("b",), np.ones(16, np.float32) / 4.0)
+    assert idx.candidates(np.ones(8, np.float32) / np.sqrt(8.0)) == [("a",)]
+    assert idx.candidates(np.ones(16, np.float32) / 4.0) == [("b",)]

@@ -39,6 +39,7 @@ from repro.kernels.dispatch import resolve_interpret
 from repro.models import dit
 from repro.models import text_encoder as te
 from repro.serving.scheduler import RequestScheduler
+from repro.serving.trunk_cache import TrunkCache
 
 CFG = get_config("sage-dit", smoke=True)
 PARAMS = dit.init_params(CFG, jax.random.PRNGKey(0))
@@ -150,15 +151,9 @@ def test_pad_aware_matches_eager(sampler, step_impl):
     assert max(sp.latencies) > max(se.latencies)
 
 
-@pytest.mark.parametrize("sampler,step_impl", CASES)
-def test_golden_fingerprint(sampler, step_impl):
-    """End-to-end output vs the committed fingerprint (CPU backend)."""
-    _skip_unavailable(step_impl)
-    if jax.default_backend() != "cpu":
-        pytest.skip("goldens were generated on the CPU backend")
-    case = f"{sampler}-{step_impl}"
-    fp = _fingerprint(_run(sampler, step_impl, packed=True))
-
+def _check_golden(case, fp):
+    """Regenerate-or-compare a fingerprint against the committed goldens
+    (shared by the plain and cache-interleave golden cases)."""
     if os.environ.get("REPRO_GOLDEN_REGEN"):
         GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
         golden = (json.loads(GOLDEN_PATH.read_text())
@@ -182,3 +177,74 @@ def test_golden_fingerprint(sampler, step_impl):
         f"{case}: end-to-end bytes diverged from the committed oracle "
         "(first-8 values still within 1e-6). If the numerics change is "
         "intentional, regenerate with REPRO_GOLDEN_REGEN=1.")
+
+
+@pytest.mark.parametrize("sampler,step_impl", CASES)
+def test_golden_fingerprint(sampler, step_impl):
+    """End-to-end output vs the committed fingerprint (CPU backend)."""
+    _skip_unavailable(step_impl)
+    if jax.default_backend() != "cpu":
+        pytest.skip("goldens were generated on the CPU backend")
+    _check_golden(f"{sampler}-{step_impl}",
+                  _fingerprint(_run(sampler, step_impl, packed=True)))
+
+
+def _run_cache_interleave(sampler, step_impl, index):
+    """The cache-interleave trace: wave A (three themed prompts) runs to
+    completion and seeds the trunk cache; wave B (a two-prompt subset of
+    the same themes) arrives after — its group centroid quantizes to a
+    DIFFERENT exact key but lies within ``tau_trunk`` cosine of wave A's
+    trunk, so the hit must come through the index's similarity search
+    (exact_hits stays 0), forking wave B's branch phase straight off the
+    cached branch-point latent."""
+    sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                      tau_min=0.2, sampler=sampler, step_impl=step_impl)
+    cache = TrunkCache(tau_trunk=0.9, index=index)
+    sched = RequestScheduler(CFG, sage, PARAMS, TEXT_PARAMS, TC,
+                             group_size=3, slice_steps=2, max_wait_ticks=1,
+                             packed=True, seed=0, trunk_cache=cache)
+    _, prompts = ShapesDataset(res=16).batch(0, 3)
+    done, t = [], 0.0
+    for wave in (prompts, prompts[:2]):
+        sched.submit(wave, now=t)
+        while sched.pending:
+            t += 1.0
+            done.extend(sched.tick(now=t))
+    assert len(done) == 5
+    # the trace only works if the cache actually interleaved: one miss
+    # (wave A seeds), one similarity hit (wave B forks), no exact-key
+    # shortcut that would bypass the index under test
+    assert cache.stats["hits"] == 1 and cache.stats["exact_hits"] == 0
+    assert cache.stats["misses"] == 1 and cache.stats["inserts"] == 1
+    assert sched.stats["nfe_saved_cache"] > 0
+    return sched, done
+
+
+@pytest.mark.parametrize("sampler,step_impl", CASES)
+def test_cache_interleave_lsh_matches_scan(sampler, step_impl):
+    """A scan-index hit and an LSH-index hit on the same trace fork
+    bitwise-identical branch phases: the index only changes HOW the
+    cached trunk is found, never what is computed from it."""
+    _skip_unavailable(step_impl)
+    ss, ds = _run_cache_interleave(sampler, step_impl, "scan")
+    sl, dl = _run_cache_interleave(sampler, step_impl, "lsh")
+    assert [c.prompt for c in dl] == [c.prompt for c in ds]
+    for a, b in zip(dl, ds):
+        assert a.image.dtype == b.image.dtype
+        np.testing.assert_array_equal(a.image, b.image)
+        assert a.group_id == b.group_id and a.nfe_share == b.nfe_share
+    assert sl.stats["nfe"] == ss.stats["nfe"]
+    assert sl.stats["nfe_saved_cache"] == ss.stats["nfe_saved_cache"]
+
+
+@pytest.mark.parametrize("sampler,step_impl", CASES)
+def test_cache_interleave_lsh_golden(sampler, step_impl):
+    """The LSH-hit output is additionally pinned against the committed
+    oracle, so a future index or tiering refactor that perturbs the
+    forked branch phase diffs against a stable fingerprint."""
+    _skip_unavailable(step_impl)
+    if jax.default_backend() != "cpu":
+        pytest.skip("goldens were generated on the CPU backend")
+    _, done = _run_cache_interleave(sampler, step_impl, "lsh")
+    _check_golden(f"cache_interleave_lsh-{sampler}-{step_impl}",
+                  _fingerprint(done))

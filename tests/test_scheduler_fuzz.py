@@ -309,3 +309,102 @@ def test_fuzz_overload_degrade_mode_serves_everything():
     # draft NFE: degraded groups run at the max share bucket
     assert (np.mean([c.nfe_share for c in degraded])
             < np.mean([c.nfe_share for c in clean]))
+
+
+# ---------------------------------------------------------------------------
+# cache-heavy traces: tier-ledger balance + LSH-vs-scan NFE parity
+# ---------------------------------------------------------------------------
+
+def _run_cached(trace, cache, ledger_probe=None):
+    """Drive a trace through a cached scheduler; returns (sched, done)."""
+    sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                      tau_min=0.2)
+    sched = RequestScheduler(
+        CFG, sage, PARAMS, TEXT_PARAMS, TC, group_size=3, slice_steps=2,
+        max_wait_ticks=1, packed=True, trunk_cache=cache)
+    done, t = [], 0.0
+    for wave in trace:
+        t += 1.0
+        if wave:
+            sched.submit(wave, now=t)
+        done.extend(sched.tick(now=t))
+        if ledger_probe is not None:
+            ledger_probe(cache)
+    done.extend(sched.drain(now=t))
+    if ledger_probe is not None:
+        ledger_probe(cache)
+    return sched, done
+
+
+def _assert_tier_ledger(cache):
+    """The tiered bytes ledger must balance at every boundary: the
+    incremental counters equal a full recount, per tier and in total."""
+    assert cache.bytes == cache.ledger_bytes()
+    assert cache.tier_bytes == cache.tier_ledger()
+    assert (cache.tier_bytes["hbm"] + cache.tier_bytes["host"]
+            == cache.bytes)
+    assert cache.tier_bytes["hbm"] >= 0 and cache.tier_bytes["host"] >= 0
+
+
+@pytest.mark.parametrize("seed,index", [(9, "lsh"), (10, "scan")])
+def test_fuzz_cache_tiers_ledger_balances(seed, index):
+    """High-repetition themes against a deliberately tiny HBM budget:
+    every completed trunk overflows the working set and spills to the
+    host tier, and the per-tier bytes ledger must balance after every
+    tick — through spills, promotions, overwrites and hits alike.
+    Conservation and the NFE ledger hold exactly as in the uncached
+    fuzz."""
+    # tau=0.99 is tight enough that distinct themes stay distinct
+    # entries (a loose tau lets one trunk absorb the whole trace and
+    # nothing ever spills), loose enough that repeats still hit
+    cache = TrunkCache(tau_trunk=0.99, index=index, max_bytes=1,
+                       host_bytes=1 << 20)
+    trace = _trace(seed, ticks=8, rate=2.5)
+    sched, done = _run_cached(trace, cache,
+                              ledger_probe=_assert_tier_ledger)
+    submitted = [p for wave in trace for p in wave]
+    assert sorted(c.prompt for c in done) == sorted(submitted)
+    assert sched.pending == 0
+    assert np.isclose(sum(c.nfe_share for c in done), sched.stats["nfe"])
+    assert (sched.stats["nfe"] + sched.stats["nfe_saved_cache"]
+            <= sched.stats["nfe_independent"] + 1e-6)
+    # the tiny HBM budget forced real spill traffic (a 1-byte working
+    # set holds at most the newest trunk), and repeated themes hit
+    assert cache.stats["spills"] > 0
+    assert cache.stats["hits"] > 0
+    assert len(cache) <= 1 + cache.stats["spills"]
+    s = sched.summary()
+    assert s["cache_spills"] == cache.stats["spills"]
+    assert s["cache_hbm_bytes"] + s["cache_host_bytes"] == cache.bytes
+    assert s["cache_index"] == index
+
+
+@pytest.mark.parametrize("seed", [11, 12])
+def test_fuzz_lsh_vs_scan_nfe_parity(seed):
+    """The same trace served through an LSH-indexed cache and the scan
+    oracle: when LSH recall is 1.0 (these seeds — repeated themes make
+    hits mostly exact-key, and the default LSH parameters recall the
+    rest), hit counts match and the completion NFE is identical, request
+    by request.  A recall shortfall could only *lose* hits (never invent
+    them) — asserting hit-count equality first makes the parity claim
+    meaningful rather than vacuous."""
+    trace = _trace(seed, ticks=8, rate=2.5)
+
+    def run(index):
+        cache = TrunkCache(tau_trunk=0.9, index=index)
+        sched, done = _run_cached(trace, cache)
+        assert sched.pending == 0
+        return sched, cache, done
+
+    s_scan, c_scan, d_scan = run("scan")
+    s_lsh, c_lsh, d_lsh = run("lsh")
+    assert c_scan.stats["hits"] > 0          # the trace exercises reuse
+    # recall 1.0 on this trace: every hit the oracle found, LSH found
+    assert c_lsh.stats["hits"] == c_scan.stats["hits"]
+    assert c_lsh.stats["exact_hits"] == c_scan.stats["exact_hits"]
+    # ... and then completion NFE must be identical, per request
+    assert (sorted((c.prompt, c.nfe_share) for c in d_lsh)
+            == sorted((c.prompt, c.nfe_share) for c in d_scan))
+    assert s_lsh.stats["nfe"] == s_scan.stats["nfe"]
+    assert (s_lsh.stats["nfe_saved_cache"]
+            == s_scan.stats["nfe_saved_cache"])

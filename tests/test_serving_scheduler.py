@@ -340,6 +340,92 @@ def test_trunk_cache_exact_key_still_enforces_tau():
     assert c.lookup([0.9, 0.436], 0.3, ("k",), (1, 4, 4, 3)) is not None
 
 
+@pytest.mark.parametrize("index", ["scan", "lsh"])
+def test_trunk_cache_collision_falls_through_to_similarity(index):
+    """Directed regression: a quantized-key collision whose resident
+    entry fails the cosine re-check must fall through to the similarity
+    search, not return a miss — the colliding entry cannot be allowed to
+    mask a compatible near-duplicate stored under a different key."""
+    shape = (1, 4, 4, 3)
+    c = TrunkCache(tau_trunk=0.95, quant_decimals=0, index=index)
+    # stored under quant key (1, 0): cos to the query ~ 0.958 >= tau
+    c.insert(_entry([0.970, 0.242], fill=1.0), shape=shape)
+    # stored under quant key (1, 1): cos to the query ~ 0.88 < tau
+    c.insert(_entry([0.515, 0.857], fill=2.0), shape=shape)
+    assert len(c) == 2
+    # query quantizes to (1, 1) -> exact-key path finds the *far* entry,
+    # fails the re-check, and must still locate the near one by search
+    hit = c.lookup([0.86, 0.51], 0.3, ("k",), shape)
+    assert hit is not None, "collision masked a compatible near-duplicate"
+    assert float(np.asarray(hit.z).ravel()[0]) == 1.0
+    assert c.stats["hits"] == 1 and c.stats["exact_hits"] == 0
+
+
+def test_trunk_cache_payload_namespaces():
+    """ar_prefix and diffusion-trunk payloads share the cache but can
+    never satisfy each other's lookups, even with identical centroids."""
+    shape = (1, 4, 4, 3)
+    c = TrunkCache(tau_trunk=0.9)
+    e = _entry([1.0, 0.0])
+    e.payload = "ar_prefix"
+    c.insert(e, shape=shape)
+    assert c.lookup([1.0, 0.0], 0.3, ("k",), shape,
+                    payload="trunk") is None
+    assert c.lookup([1.0, 0.0], 0.3, ("k",), shape,
+                    payload="ar_prefix") is not None
+
+
+def test_trunk_cache_tier_spill_and_promote():
+    """HBM overflow spills LRU entries to the host tier (bytes conserved
+    across the move), and a host hit promotes back to HBM — with the
+    per-tier ledgers balancing throughout."""
+    shape = (1, 4, 4, 3)
+    per = 2 * int(np.prod(shape)) * 4            # z + eps_prev
+    dirs = np.eye(4, dtype=np.float32)
+    c = TrunkCache(tau_trunk=0.9, max_bytes=2 * per,
+                   host_bytes=10 * per)
+    for i in range(4):
+        c.insert(_entry(dirs[i], fill=float(i)), shape=shape)
+    # 4 inserts into a 2-entry HBM budget: two spills, nothing evicted
+    assert len(c) == 4 and c.stats["spills"] == 2
+    assert c.stats["evictions"] == 0
+    assert c.tier_bytes == {"hbm": 2 * per, "host": 2 * per}
+    assert c.tier_bytes == c.tier_ledger()
+    assert c.bytes == c.ledger_bytes() == 4 * per
+    # entry 0 spilled first (LRU); a hit on it promotes it back,
+    # displacing the coldest HBM resident
+    hit = c.lookup(dirs[0], 0.3, ("k",), shape)
+    assert hit is not None and hit.tier == "hbm"
+    assert c.stats["promotions"] == 1 and c.stats["spills"] == 3
+    assert c.tier_bytes == c.tier_ledger()
+    assert c.bytes == c.ledger_bytes() == 4 * per
+    # promoted payloads come back as device arrays
+    import jax
+    assert isinstance(hit.z, jax.Array)
+
+
+def test_trunk_cache_host_budget_evicts_for_real():
+    """Host-tier overflow is terminal: the spill tier's own budget
+    evicts, and with host_bytes=0 HBM overflow evicts directly (the
+    pre-tier behavior)."""
+    shape = (1, 4, 4, 3)
+    per = 2 * int(np.prod(shape)) * 4
+    dirs = np.eye(6, dtype=np.float32)
+    c = TrunkCache(tau_trunk=0.9, max_bytes=2 * per, host_bytes=1 * per)
+    for i in range(6):
+        c.insert(_entry(dirs[i], fill=float(i)), shape=shape)
+    assert len(c) == 3                           # 2 hbm + 1 host
+    assert c.stats["spills"] == 4 and c.stats["evictions"] == 3
+    assert c.tier_bytes == c.tier_ledger() == {"hbm": 2 * per,
+                                               "host": 1 * per}
+    flat = TrunkCache(tau_trunk=0.9, max_bytes=2 * per)   # host disabled
+    for i in range(6):
+        flat.insert(_entry(dirs[i], fill=float(i)), shape=shape)
+    assert len(flat) == 2 and flat.stats["spills"] == 0
+    assert flat.stats["evictions"] == 4
+    assert flat.tier_bytes == {"hbm": 2 * per, "host": 0}
+
+
 def test_trunk_cache_store_history_flag_halves_bytes():
     shape = (1, 4, 4, 3)
     z_bytes = int(np.prod(shape)) * 4
