@@ -77,6 +77,8 @@ from repro.data.synthetic import ShapesDataset
 from repro.models import dit
 from repro.models import text_encoder as te
 from repro.serving.engine import SageServingEngine
+from repro.serving.reports import attributed_columns
+from repro.serving.telemetry import safe_ratio
 from repro.serving.trunk_cache import TrunkCache, TrunkEntry
 
 THEMES = 3
@@ -172,9 +174,9 @@ def _run_burst(packed):
     ticks = sched.ticks - ticks0
     stats = {k: v - before.get(k, 0) for k, v in sched.stats.items()}
     s = dict(sched.summary(), ticks=ticks,
-             launches_per_tick=stats["launches"] / ticks,
-             pad_waste=(stats["pack_pad_rows"] / stats["pack_rows"]
-                        if stats["pack_rows"] else 0.0))
+             launches_per_tick=safe_ratio(stats["launches"], ticks),
+             pad_waste=safe_ratio(stats["pack_pad_rows"],
+                                  stats["pack_rows"]))
     return us, len(done), stats, s
 
 
@@ -214,9 +216,9 @@ def _run_stagger(policy):
     ticks = sched.ticks - ticks0
     stats = {k: v - before.get(k, 0) for k, v in sched.stats.items()}
     s = dict(sched.summary(), ticks=ticks,
-             launches_per_tick=stats["launches"] / ticks,
-             pad_waste=(stats["pack_pad_rows"] / stats["pack_rows"]
-                        if stats["pack_rows"] else 0.0))
+             launches_per_tick=safe_ratio(stats["launches"], ticks),
+             pad_waste=safe_ratio(stats["pack_pad_rows"],
+                                  stats["pack_rows"]))
     return us, len(done), stats, s
 
 
@@ -411,11 +413,15 @@ def main(rows=None):
                  f"nfe={stats['nfe']:.0f} "
                  f"saving={1 - stats['nfe'] / stats['nfe_independent']:.3f}"))
 
+    # telemetry-attributed columns (reports.attributed_columns): extra
+    # k=v tokens only — run.py --check pins row names and nfe=, so the
+    # attribution never perturbs the regression gate
     us, n, stats, s = _run_stream(waves, cache=None)
     rows.append((f"serving/stream/{trace}", us / n,
                  f"nfe={stats['nfe']:.0f} "
                  f"p50={s['latency_p50']:.1f} p95={s['latency_p95']:.1f} "
-                 f"occ={s['occupancy_mean']:.2f}"))
+                 f"occ={s['occupancy_mean']:.2f} "
+                 + attributed_columns(s)))
 
     us, n, stats, s = _run_stream(waves, cache=TrunkCache(tau_trunk=0.9))
     assert n == n_req and stats["nfe"] < nfe_sync, (
@@ -425,7 +431,8 @@ def main(rows=None):
                  f"nfe_saved={stats['nfe_saved_cache']:.0f} "
                  f"vs_sync={1 - stats['nfe'] / nfe_sync:.3f} "
                  f"hits={s['cache_hits']:.0f} "
-                 f"p50={s['latency_p50']:.1f} p95={s['latency_p95']:.1f}"))
+                 f"p50={s['latency_p50']:.1f} p95={s['latency_p95']:.1f} "
+                 + attributed_columns(s)))
 
     # packed vs per-group dispatch economics on a concurrent burst
     btrace = f"burst{BURST}x{THEMES}T{STEPS}"

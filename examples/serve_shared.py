@@ -24,6 +24,18 @@ injects seeded faults (``launch=P,miss=P,corrupt=P,stall=P,seed=N``):
         --streaming --arrival-rate 4.0 --themes 3 --qos-mix 0.25 \\
         --overload shed --max-groups-per-tick 2 \\
         --fault-plan launch=0.1,stall=0.05,seed=7
+
+Telemetry (streaming mode): ``--trace out.json`` records the full
+request/group/exec lifecycle as Chrome trace-event JSON (load in
+Perfetto or chrome://tracing — deterministic under the virtual clock),
+``--metrics out.prom`` writes the Prometheus exposition of every
+counter/gauge/histogram plus the live kernel-dispatch fallback matrix,
+and ``--report`` prints the joined SLO + capacity (dryrun cost model) +
+dispatch report:
+
+    PYTHONPATH=src python examples/serve_shared.py --requests 48 \\
+        --streaming --trunk-cache --themes 4 \\
+        --trace trace.json --metrics metrics.prom --report
 """
 import argparse
 import time
@@ -33,12 +45,15 @@ import numpy as np
 
 from repro.config import SageConfig, get_config
 from repro.data.synthetic import ShapesDataset
+from repro.kernels.dispatch import DISPATCH_LOG
 from repro.models import dit
 from repro.models import text_encoder as te
+from repro.serving import reports
 from repro.serving.engine import SageServingEngine
 from repro.serving.faults import FaultPlan
 from repro.serving.policies import (PadAwarePolicy, SaturationAdmission,
                                     make_cache_admission)
+from repro.serving.telemetry import MetricsRegistry, Tracer
 from repro.serving.trunk_cache import TrunkCache
 
 
@@ -103,11 +118,18 @@ def run_streaming(engine, prompts, args):
                                         mode=args.overload)
     faults = (FaultPlan.parse(args.fault_plan)
               if args.fault_plan else None)
+    telemetry_on = bool(args.trace or args.metrics or args.report)
+    tracer = Tracer() if telemetry_on else None
+    metrics = MetricsRegistry() if telemetry_on else None
+    if telemetry_on:
+        DISPATCH_LOG.enabled = True
+        metrics.collector(DISPATCH_LOG.prometheus_samples)
     sched = engine.streaming_scheduler(
         slice_steps=args.slice_steps, max_wait_ticks=args.max_wait_ticks,
         trunk_cache=cache, packed=not args.per_group, policy=policy,
         max_groups_per_tick=args.max_groups_per_tick,
-        admission=admission, faults=faults)
+        admission=admission, faults=faults, tracer=tracer,
+        metrics=metrics)
 
     # qos assignment: a seeded coin per request tags it interactive
     # (deadline-carrying) with probability --qos-mix, else batch
@@ -185,6 +207,27 @@ def run_streaming(engine, prompts, args):
               f"host {s['cache_host_bytes']:.0f} B, "
               f"{s['cache_spills']:.0f} spills, "
               f"{s['cache_promotions']:.0f} promotions")
+
+    if tracer is not None and args.trace:
+        n = tracer.export(args.trace)
+        print(f"trace              = {args.trace} ({n} events, "
+              f"{tracer.dropped} dropped)")
+    if metrics is not None and args.metrics:
+        n = metrics.export(args.metrics)
+        print(f"metrics            = {args.metrics} ({n} lines)")
+    if args.report:
+        slo = reports.slo_report(s, counts=tracer.counts(),
+                                 pending=sched.pending)
+        cap = reports.capacity_report(
+            s, total_steps=engine.sage.total_steps,
+            share_ratio=engine.sage.share_ratio,
+            group_size=engine.group_size,
+            slice_steps=args.slice_steps,
+            max_groups_per_tick=args.max_groups_per_tick,
+            n_params=engine.cfg.n_params(),
+            n_tokens=(engine.cfg.latent_size // engine.cfg.patch) ** 2)
+        print(reports.format_report(slo, cap,
+                                    reports.dispatch_report()))
 
 
 def main():
@@ -277,6 +320,17 @@ def main():
                     help="draw prompts from this many repeated themes "
                          "(0 = all distinct) — repeated themes are what "
                          "the trunk cache exploits")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(request/group/exec lifecycle lanes; open in "
+                         "Perfetto; streaming mode)")
+    ap.add_argument("--metrics", default="",
+                    help="write the Prometheus text exposition of all "
+                         "serving metrics + kernel dispatch routes "
+                         "(streaming mode)")
+    ap.add_argument("--report", action="store_true",
+                    help="print the joined SLO/capacity/dispatch report "
+                         "(streaming mode)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -19,12 +19,21 @@ sampling loop between backends:
 Fallbacks are explicit and conservative: the only shapes the flash kernel
 does not cover — ``head_dim > 256`` and non-causal sliding windows — drop
 to the chunked path rather than silently computing the wrong mask.
+
+Dispatch attribution (PR 8): every route decision can be recorded in the
+module-level :data:`DISPATCH_LOG` — (op, impl requested, impl chosen,
+fallback reason, shape bucket) → decision count — turning the README's
+static fallback matrix into live telemetry.  Off by default (a plain
+boolean test per dispatch); ``serve_shared.py --metrics`` and the
+telemetry tests flip it on.  Under ``jax.jit`` a dispatch records once
+per *trace* (compilation), not per device launch — the log counts route
+decisions, which is exactly what the fallback matrix needs.
 """
 from __future__ import annotations
 
 import math
 import os
-from typing import Optional, Union
+from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 import jax
 
@@ -32,6 +41,62 @@ ATTN_IMPLS = ("naive", "chunked", "pallas")
 STEP_IMPLS = ("reference", "fused")
 
 InterpretLike = Union[None, bool, str]
+
+
+class DispatchLog:
+    """Route-decision counter for kernel dispatch attribution.
+
+    Keyed by ``(op, requested, chosen, reason, shape)``; ``reason`` is
+    ``"requested"`` when the chosen impl is what the caller asked for,
+    else the concrete fallback cause (``"head_dim>256"``,
+    ``"noncausal_window"``).  Disabled by default so the hot path pays
+    one ``if`` per dispatch."""
+
+    __slots__ = ("enabled", "routes")
+
+    def __init__(self) -> None:
+        self.enabled = False
+        self.routes: Dict[Tuple[str, str, str, str, str], int] = {}
+
+    def record(self, op: str, requested: str, chosen: str, reason: str,
+               shape: str) -> None:
+        key = (op, requested, chosen, reason, shape)
+        self.routes[key] = self.routes.get(key, 0) + 1
+
+    def reset(self) -> None:
+        self.routes.clear()
+
+    def snapshot(self) -> List[Dict[str, object]]:
+        """Rows sorted for stable output: one dict per distinct route."""
+        return [
+            {"op": op, "requested": req, "chosen": chosen,
+             "reason": reason, "shape": shape, "count": n}
+            for (op, req, chosen, reason, shape), n
+            in sorted(self.routes.items())]
+
+    def fallbacks(self) -> List[Dict[str, object]]:
+        """Only the routes where chosen != requested — the live version
+        of the README fallback matrix."""
+        return [r for r in self.snapshot() if r["reason"] != "requested"]
+
+    def prometheus_samples(self) -> Iterable[
+            Tuple[str, Dict[str, str], float, str]]:
+        """(name, labels, value, kind) tuples for
+        ``MetricsRegistry.collector``."""
+        for (op, req, chosen, reason, shape), n in sorted(
+                self.routes.items()):
+            yield ("kernel_dispatch",
+                   {"op": op, "requested": req, "chosen": chosen,
+                    "reason": reason, "shape": shape}, float(n), "counter")
+
+
+#: process-wide log; enable with ``DISPATCH_LOG.enabled = True``
+DISPATCH_LOG = DispatchLog()
+
+
+def _attn_shape_bucket(q: jax.Array, k: jax.Array) -> str:
+    B, Sq, H, hd = q.shape
+    return f"b{B}s{Sq}x{k.shape[1]}h{H}d{hd}"
 
 
 def resolve_interpret(setting: InterpretLike = "auto") -> bool:
@@ -77,16 +142,30 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         raise ValueError(f"unknown attn impl {impl!r}; one of {ATTN_IMPLS}")
     if scale is None:
         scale = 1.0 / math.sqrt(q.shape[-1])
+    log = DISPATCH_LOG
     if (impl == "pallas" and q.shape[-1] <= 256
             and (window == 0 or causal)):
+        if log.enabled:
+            log.record("attention", impl, "pallas", "requested",
+                       _attn_shape_bucket(q, k))
         from repro.kernels.flash_attention.ops import flash_attention
         return flash_attention(q, k, v, causal=causal, window=window,
                                scale=scale,
                                interpret=resolve_interpret(interpret))
     if impl in ("chunked", "pallas"):
         # pallas lands here only for head_dim > 256 / non-causal window
+        if log.enabled:
+            reason = "requested"
+            if impl == "pallas":
+                reason = ("head_dim>256" if q.shape[-1] > 256
+                          else "noncausal_window")
+            log.record("attention", impl, "chunked", reason,
+                       _attn_shape_bucket(q, k))
         return attend_chunked(q, k, v, causal=causal, window=window,
                               scale=scale, block=block)
+    if log.enabled:
+        log.record("attention", impl, "naive", "requested",
+                   _attn_shape_bucket(q, k))
     if causal:
         mask = causal_mask(q.shape[1], k.shape[1], window=window)
     elif window:
@@ -109,6 +188,9 @@ def cfg_ddim_step(z: jax.Array, eps_u: jax.Array, eps_c: jax.Array, *,
     reference jnp math otherwise.  Scalars may be traced (per scan step)."""
     if impl not in STEP_IMPLS:
         raise ValueError(f"unknown step impl {impl!r}; one of {STEP_IMPLS}")
+    if DISPATCH_LOG.enabled:
+        DISPATCH_LOG.record("cfg_ddim_step", impl, impl, "requested",
+                            "x".join(str(d) for d in z.shape))
     if impl == "fused":
         from repro.kernels.ddim_step.ops import fused_cfg_ddim_step
         return fused_cfg_ddim_step(z, eps_u, eps_c, guidance, a_t, s_t,
@@ -134,6 +216,9 @@ def cfg_dpmpp_step(z: jax.Array, eps_u: jax.Array, eps_c: jax.Array,
     exactly zero."""
     if impl not in STEP_IMPLS:
         raise ValueError(f"unknown step impl {impl!r}; one of {STEP_IMPLS}")
+    if DISPATCH_LOG.enabled:
+        DISPATCH_LOG.record("cfg_dpmpp_step", impl, impl, "requested",
+                            "x".join(str(d) for d in z.shape))
     if impl == "fused":
         from repro.kernels.dpmpp_step.ops import fused_cfg_dpmpp_step
         return fused_cfg_dpmpp_step(z, eps_u, eps_c, eps_prev, guidance,
@@ -151,6 +236,10 @@ def group_mean(x: jax.Array, mask: jax.Array, *, impl: str = "reference",
     """Masked mean over the member axis.  x (K,N,...), mask (K,N)."""
     if impl not in ("reference", "pallas", "fused"):
         raise ValueError(f"unknown group_mean impl {impl!r}")
+    if DISPATCH_LOG.enabled:
+        chosen = "pallas" if impl in ("pallas", "fused") else "reference"
+        DISPATCH_LOG.record("group_mean", impl, chosen, "requested",
+                            "x".join(str(d) for d in x.shape))
     if impl in ("pallas", "fused"):
         from repro.kernels.group_mean.ops import masked_group_mean
         return masked_group_mean(x, mask,

@@ -1,0 +1,96 @@
+"""Import-safe roofline cost model (TPU v5e hardware constants).
+
+``launch/dryrun.py`` owns the *measured* roofline (lower + compile every
+(arch x shape) on the production mesh and read XLA's cost analysis), but
+importing it has a deliberate side effect: it forces
+``--xla_force_host_platform_device_count=512`` into ``XLA_FLAGS`` before
+JAX initialises, which is exactly wrong for anything that is not a
+dry-run.  This module holds the shared hardware constants and the small
+closed-form predictors that the serving telemetry reports
+(``serving/reports.py``) need, with no JAX import and no environment
+mutation; ``dryrun.py`` imports the constants back from here so there is
+a single source of truth.
+
+The predictors are deliberately first-order: they model the scheduler's
+*tick economics* (segments per phase, rows per launch, NFE ledger), not
+XLA's fusion choices.  Their job in a capacity report is to make the gap
+between "what the tick loop should have cost" and "what the telemetry
+says it cost" visible — pad waste, cache savings, retry waste, and
+stalls are exactly that gap.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------------------
+# TPU v5e hardware model (roofline constants; chips = mesh size)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (counted once per op byte)
+
+
+def denoiser_flops_per_eval(n_params: float, n_tokens: int) -> float:
+    """FLOPs of ONE denoiser evaluation of one latent row.
+
+    2 FLOPs per param per token (matmul fwd), doubled for CFG's
+    unconditional+conditional pair — the same convention as dryrun's
+    ``sage_serve`` model-flops term.
+    """
+    return 2.0 * n_params * 2 * n_tokens
+
+
+def roofline_seconds(flops: float, bytes_acc: float = 0.0,
+                     coll_bytes: float = 0.0, chips: int = 1) -> float:
+    """Lower-bound wall seconds: the max of the three roofline terms."""
+    c = max(chips, 1)
+    return max(flops / c / PEAK_FLOPS, bytes_acc / c / HBM_BW,
+               coll_bytes / ICI_BW)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b) if b else 0
+
+
+@dataclass(frozen=True)
+class DrainPrediction:
+    """Closed-form tick economics of draining a request set."""
+    groups: int
+    shared_segments: int      # per group
+    branch_segments: int      # per group
+    ticks: int                # predicted ticks-to-drain
+    nfe: int                  # predicted NFE (no cache, no faults)
+    nfe_independent: int      # per-request baseline the saving is vs.
+
+
+def predict_drain(requests: int, group_size: int, total_steps: int,
+                  n_shared: int, slice_steps: int,
+                  max_groups_per_tick: int | None = None,
+                  ) -> DrainPrediction:
+    """Predict ticks-to-drain and NFE for ``requests`` similar requests.
+
+    Assumes full groups of ``group_size`` (the grouping optimum), no
+    trunk-cache hits, no faults: one segment per selected group per
+    tick, shared phase charging 1 NFE-row per step per group and branch
+    charging ``group_size`` rows per step.  Under a
+    ``max_groups_per_tick`` cap the in-flight set advances in waves of
+    ``cap`` groups.  Observed ticks above this are queueing + holds +
+    retries; observed NFE below it is cache savings — the capacity
+    report prints both gaps.
+    """
+    if requests <= 0 or total_steps <= 0:
+        return DrainPrediction(0, 0, 0, 0, 0, 0)
+    group_size = max(group_size, 1)
+    slice_steps = max(slice_steps, 1)
+    n_shared = min(max(n_shared, 0), total_steps)
+    groups = _ceil_div(requests, group_size)
+    shared_segs = _ceil_div(n_shared, slice_steps)
+    branch_segs = _ceil_div(total_steps - n_shared, slice_steps)
+    per_group_ticks = shared_segs + branch_segs
+    if max_groups_per_tick is None or groups <= max_groups_per_tick:
+        ticks = per_group_ticks
+    else:
+        ticks = per_group_ticks * _ceil_div(groups, max_groups_per_tick)
+    nfe = groups * n_shared + requests * (total_steps - n_shared)
+    return DrainPrediction(groups, shared_segs, branch_segs, ticks, nfe,
+                           requests * total_steps)

@@ -24,12 +24,9 @@ from repro.config import SHAPES, get_config, list_archs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_case
 
-# ---------------------------------------------------------------------------
-# TPU v5e hardware model (roofline constants; chips = mesh size)
-# ---------------------------------------------------------------------------
-PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
-HBM_BW = 819e9               # B/s per chip
-ICI_BW = 50e9                # B/s per link (counted once per op byte)
+# TPU v5e roofline constants live in the import-safe repro.launch.costs
+# (importing *this* module mutates XLA_FLAGS; reports must not pay that)
+from repro.launch.costs import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,

@@ -16,4 +16,6 @@ from repro.serving.scheduler import RequestScheduler
 from repro.serving.shared_prefill import (cached_prefix_prefill,
                                           group_requests,
                                           shared_prefix_prefill)
+from repro.serving.telemetry import (Histogram, MetricsRegistry, Tracer,
+                                     safe_ratio)
 from repro.serving.trunk_cache import TrunkCache, TrunkEntry

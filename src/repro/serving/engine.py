@@ -31,6 +31,7 @@ from repro.config import ModelConfig, SageConfig
 from repro.config import replace as config_replace
 from repro.core.schedule import Schedule, make_schedule
 from repro.serving.scheduler import Completed, RequestScheduler
+from repro.serving.telemetry import MetricsRegistry, Tracer
 from repro.serving.trunk_cache import TrunkCache
 
 __all__ = ["Completed", "SageServingEngine"]
@@ -44,14 +45,19 @@ class SageServingEngine:
                  seed: int = 0, attn_impl: Optional[str] = None,
                  step_impl: Optional[str] = None,
                  kernel_interpret: Optional[str] = None,
-                 policy: str = "eager"):
+                 policy: str = "eager", tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         """attn_impl / step_impl / kernel_interpret override the kernel
         backend knobs of model_cfg / sage (see repro.kernels.dispatch):
         attn_impl="pallas" + step_impl="fused" runs the whole sampling hot
         path on the Pallas kernels.  ``policy`` is the launch policy
         (``serving.policies``) inherited by :meth:`streaming_scheduler`;
         the synchronous :meth:`step` path has no arrivals to hold for, so
-        the policy only matters for streaming."""
+        the policy only matters for streaming.  ``tracer``/``metrics``
+        (``serving.telemetry``) are forwarded to the internal scheduler;
+        a streaming scheduler wants its own (registry prefixes are
+        claimed per scheduler) — pass them via
+        :meth:`streaming_scheduler` kwargs instead."""
         if attn_impl is not None:
             model_cfg = config_replace(model_cfg, attn_impl=attn_impl)
         if kernel_interpret is not None:
@@ -75,7 +81,8 @@ class SageServingEngine:
         self.scheduler = RequestScheduler(
             model_cfg, sage, dit_params, text_params, text_cfg,
             vae_params=vae_params, sched=self.sched, group_size=group_size,
-            branch_buckets=branch_buckets, policy=policy, seed=seed)
+            branch_buckets=branch_buckets, policy=policy, seed=seed,
+            tracer=tracer, metrics=metrics)
 
     # ------------------------------------------------------------------
     def submit(self, prompts: Sequence[str]) -> None:

@@ -82,6 +82,19 @@ Time is injectable: every ``submit``/``tick`` takes ``now`` (any
 monotonically non-decreasing float — wall seconds, or virtual tick counts
 for arrival-trace simulation as in ``examples/serve_shared.py
 --streaming``); it defaults to ``time.monotonic()``.
+
+Observability (``serving.telemetry``): the stats dicts are
+:class:`~repro.serving.telemetry.StatGroup` members of a
+:class:`~repro.serving.telemetry.MetricsRegistry` (``summary()`` is a
+view over registry-owned state; pass ``metrics=`` to share a registry
+with the export path), and an optional
+:class:`~repro.serving.telemetry.Tracer` receives lifecycle spans for
+every request/group transition plus per-tick phase spans.  Emission is
+clocked by the same injectable ``now``, so virtual-time traces are
+deterministic; with ``tracer=None`` (default) every emit site is a
+single ``is not None`` branch and runs are bitwise-identical to the
+pre-telemetry scheduler — tracing never touches RNG or sampler inputs,
+so even an *enabled* tracer is output-invisible.
 """
 from __future__ import annotations
 
@@ -110,6 +123,10 @@ from repro.serving.policies import (DEGRADE, DEFAULT_QOS, QOS_RANK, SHED,
                                     LaunchContext, LaunchPolicy,
                                     make_admission_policy, make_launch_order,
                                     make_launch_policy)
+from repro.serving.telemetry import (LATENCY_BUCKETS, OCCUPANCY_BUCKETS,
+                                     PID_GROUPS, PID_REQUESTS,
+                                     QUEUE_DEPTH_BUCKETS, MetricsRegistry,
+                                     Tracer, safe_ratio)
 from repro.serving.trunk_cache import TrunkCache, TrunkEntry
 
 
@@ -147,6 +164,7 @@ class _Group:
     beta: float = 0.0             # share-ratio bucket
     n_shared: int = 0
     steps_done: int = 0
+    t_open: float = 0.0           # clock value when the group was seeded
     carry: Optional[SampleCarry] = None
     cbar: Any = None              # (1, Lc, dc)
     cond_flat: Any = None         # (N, Lc, dc)
@@ -195,6 +213,8 @@ class RequestScheduler:
                  admission: Union[str, AdmissionPolicy, None] = None,
                  faults: Optional[FaultPlan] = None,
                  max_retries: int = 3,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None,
                  seed: int = 0):
         """``group_size`` is the packed width N (static sampler shape);
         ``group_max`` caps clique size during batch grouping and defaults
@@ -222,7 +242,13 @@ class RequestScheduler:
         :class:`~repro.serving.policies.AdmissionPolicy`); ``faults`` is
         a :class:`~repro.serving.faults.FaultPlan` for chaos testing and
         ``max_retries`` bounds per-group launch retries before the
-        shed escape hatch."""
+        shed escape hatch.
+
+        Observability: ``tracer`` receives lifecycle/phase spans
+        (``None`` disables tracing at zero cost); ``metrics`` is the
+        :class:`~repro.serving.telemetry.MetricsRegistry` the stats
+        groups register into (one scheduler per registry; defaults to a
+        private registry, so existing call sites see no change)."""
         if group_size < 1:
             raise ValueError(f"group_size must be >= 1, got {group_size}")
         if slice_steps < 1:
@@ -276,7 +302,16 @@ class RequestScheduler:
         self._next_gid = 0
         self._runners: Dict[Tuple, Any] = {}
 
-        self.stats: Dict[str, float] = {
+        # telemetry: the stats dicts live inside a MetricsRegistry as
+        # StatGroup members (plain-dict semantics, so the += hot paths
+        # and every stats-reading test are untouched); the registry is
+        # the single export surface for scheduler + cache + fault
+        # counters, gauges and histograms.  The tracer is optional and
+        # fully inert when None.
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else \
+            MetricsRegistry()
+        self.stats: Dict[str, float] = self.metrics.group("scheduler", {
             "nfe": 0.0, "nfe_independent": 0.0, "requests": 0,
             "completed": 0, "nfe_saved_cache": 0.0,
             # packed-execution accounting: segment launches, latent rows
@@ -289,15 +324,51 @@ class RequestScheduler:
             "shed": 0, "degraded": 0, "rejected_expired": 0,
             "preemptions": 0, "resumes": 0, "retries": 0,
             "launch_faults": 0, "shed_faulted": 0, "stalled_ticks": 0,
-            "deadline_met": 0, "deadline_missed": 0, "nfe_wasted": 0.0}
+            "deadline_met": 0, "deadline_missed": 0, "nfe_wasted": 0.0})
         # per-class mirrors of the request-outcome counters + latencies
         self.class_stats: Dict[str, Dict[str, float]] = {}
         self.class_latencies: Dict[str, "deque[float]"] = {}
+        self.metrics.attach_nested("scheduler_class", self.class_stats,
+                                   "qos")
+        self.metrics.gauge("scheduler_ticks", lambda: self.ticks)
+        self.metrics.gauge("scheduler_pending", lambda: self.pending)
+        self.metrics.gauge("scheduler_arrival_rate",
+                           lambda: self._arrival_rate)
+        self.metrics.gauge("scheduler_inflight_groups",
+                           lambda: len(self.inflight))
+        if faults is not None:
+            self.metrics.attach_family("faults_injected",
+                                       faults.injected, "kind")
+            self.metrics.attach_family("faults_queries",
+                                       faults.queries, "kind")
+        if trunk_cache is not None:
+            self.metrics.attach_group("cache", trunk_cache.stats)
+            self.metrics.gauge("cache_bytes", lambda: trunk_cache.bytes)
+            self.metrics.gauge("cache_entries",
+                               lambda: len(trunk_cache))
+            self.metrics.gauge("cache_hbm_bytes",
+                               lambda: trunk_cache.tier_bytes["hbm"])
+            self.metrics.gauge("cache_host_bytes",
+                               lambda: trunk_cache.tier_bytes["host"])
+        # fixed-bucket histograms next to the exact-percentile deques:
+        # the deques keep summary()'s percentiles exact over the trailing
+        # window, the histograms give the exporter cumulative
+        # distributions that never reset
+        self._h_latency = self.metrics.histogram(
+            "scheduler_latency_ticks", LATENCY_BUCKETS)
+        self._h_queue = self.metrics.histogram(
+            "scheduler_queue_depth", QUEUE_DEPTH_BUCKETS)
+        self._h_occupancy = self.metrics.histogram(
+            "scheduler_pack_occupancy", OCCUPANCY_BUCKETS)
         # arrival-process estimate: EWMA of submitted requests per tick
         # (feeds AdmissionContext.backlog decisions and the adaptive
         # pad-aware hold budget via LaunchContext.arrival_rate)
         self._arrival_rate = 0.0
         self._arrivals_since_tick = 0
+        # clock value of the tick being executed — the timestamp source
+        # for trace events emitted below tick()/run_batch() in the call
+        # tree (e.g. fork/store marks inside _after_segment)
+        self._tick_now = 0.0
         # deficit-round-robin credit per class (persists across ticks so
         # fractional weight ratios average out over time)
         self._wfq_credit: Dict[str, float] = {}
@@ -391,11 +462,15 @@ class RequestScheduler:
                                  f"have {sorted(QOS_RANK)}")
         conds, pooled = self._embed(prompts)
         rids = []
+        tr = self.tracer
         for p, c, e, q in zip(prompts, conds, pooled, qs):
             r = Request(self._next_rid, p, now, deadline, c, e, qos=q)
             self._next_rid += 1
             self.arrivals.append(r)
             rids.append(r.rid)
+            if tr is not None:
+                tr.instant("request.submit", now, pid=PID_REQUESTS,
+                           tid=r.rid, qos=q, deadline=deadline)
         self.stats["requests"] += len(prompts)
         self._arrivals_since_tick += len(prompts)
         return rids
@@ -408,13 +483,17 @@ class RequestScheduler:
                   "deadline_met": 0, "deadline_missed": 0})
         d[key] = d.get(key, 0) + inc
 
-    def _refuse(self, r: Request, status: str) -> Completed:
+    def _refuse(self, r: Request, status: str,
+                now: float = 0.0) -> Completed:
         """An accounted non-service outcome (shed / rejected_expired):
         the request leaves the system as a Completed record with no
         image — conservation still sees it exactly once."""
         self.stats[status] += 1
         self._cstat(r.qos, "requests")
         self._cstat(r.qos, status)
+        if self.tracer is not None:
+            self.tracer.instant(f"request.{status}", now,
+                                pid=PID_REQUESTS, tid=r.rid, qos=r.qos)
         return Completed(prompt=r.prompt, image=None, group_id=-1,
                          nfe_share=0.0, latency=0.0, qos=r.qos,
                          status=status)
@@ -461,24 +540,28 @@ class RequestScheduler:
         # groups costs O(A + G) stacks, not O(A * G)
         open_embeds = [np.stack([m.pooled for m in g.members])
                        for g in self.open_groups]
+        tr = self.tracer
         for r in arrivals:
             # bugfix (was: churn through the normal launch path): a
             # deadline already expired — or expiring within one segment,
             # so even an immediate solo launch cannot finish in time —
             # is refused up front with its own status
             if r.deadline is not None and r.deadline <= now + 1.0:
-                notices.append(self._refuse(r, "rejected_expired"))
+                notices.append(self._refuse(r, "rejected_expired", now))
                 continue
             verdict = self.admission.decide(AdmissionContext(
                 now=now, qos=r.qos, deadline=r.deadline,
                 backlog_ticks=backlog, ticks_to_finish=ttf,
                 arrival_rate=self._arrival_rate))
             if verdict == SHED:
-                notices.append(self._refuse(r, "shed"))
+                notices.append(self._refuse(r, "shed", now))
                 continue
             if verdict == DEGRADE:
                 r.degraded = True
             self._cstat(r.qos, "requests")
+            if tr is not None:
+                tr.instant("request.admit", now, pid=PID_REQUESTS,
+                           tid=r.rid, qos=r.qos, degraded=r.degraded)
             cand = [i for i, g in enumerate(self.open_groups)
                     if g.qos == r.qos and g.degraded == r.degraded]
             gi = grouping.incremental_assign(
@@ -489,14 +572,19 @@ class RequestScheduler:
                 self.open_groups[i].members.append(r)
                 open_embeds[i] = np.concatenate(
                     [open_embeds[i], r.pooled[None]], 0)
+                gid, seeded = self.open_groups[i].gid, False
             else:
                 self.open_groups.append(
                     _Group(self._next_gid, [r], created_tick=self.ticks,
-                           qos=r.qos, degraded=r.degraded))
+                           t_open=now, qos=r.qos, degraded=r.degraded))
                 self._next_gid += 1
                 open_embeds.append(np.asarray(r.pooled)[None])
                 backlog += per_group     # each seeded group deepens the
                 #                          queue the next verdict sees
+                gid, seeded = self.open_groups[-1].gid, True
+            if tr is not None:
+                tr.instant("request.group", now, pid=PID_REQUESTS,
+                           tid=r.rid, gid=gid, seeded=seeded)
         return notices
 
     # -- launch ----------------------------------------------------------
@@ -550,13 +638,37 @@ class RequestScheduler:
         g.centroid = np.mean(np.stack([m.pooled for m in g.members]), 0)
         g.t_launch = now
         self.occupancy.append(N / self.group_size)
+        self._h_occupancy.observe(N / self.group_size)
         self.stats["nfe_independent"] += 2.0 * N * T
+        tr = self.tracer
+        if tr is not None:
+            # hold span: the open-group dwell from seed to launch (what
+            # a launch policy trades against pad waste)
+            tr.span("group.hold", g.t_open, now - g.t_open,
+                    pid=PID_GROUPS, tid=g.gid, qos=g.qos,
+                    waited_ticks=self.ticks - g.created_tick)
 
         entry = None
         if self.trunk_cache is not None and g.n_shared > 0:
+            cs = self.trunk_cache.stats
+            pre = (cs["exact_hits"], cs["hits_host"])
             entry = self.trunk_cache.lookup(
                 g.centroid, g.beta, self._cfg_key(), self._latent_shape,
                 payload="trunk")
+            if tr is not None:
+                # classify the lookup from the cache's own counters
+                # (exact-key vs ANN/similarity vs miss, and which tier
+                # served it) — the cache API stays untouched
+                if entry is None:
+                    tr.instant("cache.miss", now, pid=PID_GROUPS,
+                               tid=g.gid)
+                else:
+                    kind = ("cache.exact" if cs["exact_hits"] > pre[0]
+                            else "cache.ann")
+                    tier = ("host" if cs["hits_host"] > pre[1]
+                            else "hbm")
+                    tr.instant(kind, now, pid=PID_GROUPS, tid=g.gid,
+                               tier=tier)
         if entry is not None:
             # cross-batch trunk hit: skip the shared phase entirely, fork
             # straight into branching from the cached branch-point latent.
@@ -576,6 +688,10 @@ class RequestScheduler:
                 g.state = "branch"
             else:
                 g.state = "shared"
+        if tr is not None:
+            tr.instant("group.launch", now, pid=PID_GROUPS, tid=g.gid,
+                       n=N, beta=g.beta, n_shared=g.n_shared, qos=g.qos,
+                       cache_hit=g.cache_hit, state=g.state)
         self.open_groups.remove(g)
         self.inflight.append(g)
 
@@ -583,16 +699,30 @@ class RequestScheduler:
     def _store_trunk(self, g: _Group) -> None:
         if self.trunk_cache is None:
             return
-        self.trunk_cache.insert(TrunkEntry(
+        stored = self.trunk_cache.insert(TrunkEntry(
             z=g.carry.z, eps_prev=g.carry.eps_prev, step_idx=g.n_shared,
             beta_bucket=g.beta, rng_fold=g.gid, centroid=g.centroid,
             cfg_key=self._cfg_key(), payload="trunk"),
             shape=self._latent_shape)
+        if self.tracer is not None:
+            self.tracer.instant("cache.store", self._tick_now,
+                                pid=PID_GROUPS, tid=g.gid,
+                                stored=bool(stored))
 
-    def _count_launch(self, rows: int, pad_rows: int) -> None:
+    def _count_launch(self, rows: int, pad_rows: int,
+                      phase: str = "", n_steps: int = 0,
+                      groups: int = 1) -> None:
+        """THE segment-launch choke point: every denoiser dispatch —
+        packed bucket or per-group — lands here exactly once, so the
+        stats ledger and the trace's ``phase.*`` launch spans can never
+        disagree (the reconciliation test pins spans == launches)."""
         self.stats["launches"] += 1
         self.stats["pack_rows"] += rows
         self.stats["pack_pad_rows"] += pad_rows
+        if self.tracer is not None and phase:
+            self.tracer.launch_span(f"phase.{phase}", rows=rows,
+                                    pad_rows=pad_rows, n_steps=n_steps,
+                                    groups=groups)
 
     def _after_segment(self, g: _Group, s: int) -> None:
         """Post-advance accounting + phase transitions, shared by the
@@ -606,6 +736,10 @@ class RequestScheduler:
                 self._store_trunk(g)
                 g.carry = fork_carry(g.carry, len(g.members))
                 g.state = "branch"
+                if self.tracer is not None:
+                    self.tracer.instant("group.fork", self._tick_now,
+                                        pid=PID_GROUPS, tid=g.gid,
+                                        step_idx=g.n_shared)
         else:
             g.nfe += float(branch_phase_nfe(g.mask, s,
                                             self.sage.shared_uncond_cfg))
@@ -624,12 +758,13 @@ class RequestScheduler:
         if g.state == "shared":
             s = min(self.slice_steps, g.n_shared - g.steps_done)
             g.carry = self._shared_runner(s)(g.carry, g.cbar, null)
-            self._count_launch(1, 0)
+            self._count_launch(1, 0, phase="shared", n_steps=s)
         else:
             s = min(self.slice_steps, self.sage.total_steps - g.steps_done)
             g.carry = self._branch_runner(s)(
                 g.carry, g.cond_flat, g.mask, null, jnp.int32(g.n_shared))
-            self._count_launch(len(g.members), 0)
+            self._count_launch(len(g.members), 0, phase="branch",
+                               n_steps=s)
         self._after_segment(g, s)
         g.retries = 0
         return True
@@ -667,20 +802,26 @@ class RequestScheduler:
             s = key.n_steps
             if self.faults is not None and self.faults.launch_fails():
                 self.stats["launch_faults"] += 1
+                if self.tracer is not None:
+                    self.tracer.exec_mark(
+                        "launch.fault", phase=key.phase,
+                        groups=len(groups))
                 failed.extend(groups)
                 continue
             if key.phase == "shared":
                 carry, cbar = packing.pack_shared(groups)
                 out = self._shared_runner(s)(carry, cbar, null)
                 packing.unpack_shared(out, groups)
-                self._count_launch(len(groups), 0)
+                self._count_launch(len(groups), 0, phase="shared",
+                                   n_steps=s, groups=len(groups))
             else:
                 carry, cond, mask, fork = packing.pack_branch(
                     groups, self.group_size)
                 out = self._branch_runner(s)(carry, cond, mask, null, fork)
                 packing.unpack_branch(out, groups, self.group_size)
-                self._count_launch(*packing.pad_stats(groups,
-                                                      self.group_size))
+                rows, pads = packing.pad_stats(groups, self.group_size)
+                self._count_launch(rows, pads, phase="branch",
+                                   n_steps=s, groups=len(groups))
             for g in groups:
                 seg_len[g.gid] = s
         for g in todo:
@@ -698,17 +839,26 @@ class RequestScheduler:
         complete with ``status='shed'`` and the NFE already spent moves
         to the ``nfe_wasted`` ledger (never a silent drop)."""
         out: List[Completed] = []
+        tr = self.tracer
         for g in failed:
             g.retries += 1
             if g.retries <= self.max_retries:
                 self.stats["retries"] += 1
                 g.next_try_tick = self.ticks + min(2 ** (g.retries - 1), 8)
+                if tr is not None:
+                    tr.instant("group.retry", now, pid=PID_GROUPS,
+                               tid=g.gid, attempt=g.retries,
+                               next_try_tick=g.next_try_tick)
                 continue
             self.inflight.remove(g)
             self.stats["shed_faulted"] += len(g.members)
             self.stats["nfe_wasted"] += g.nfe
             for r in g.members:
                 self._cstat(r.qos, "shed")
+                if tr is not None:
+                    tr.instant("request.shed_faulted", now,
+                               pid=PID_REQUESTS, tid=r.rid, gid=g.gid,
+                               qos=r.qos)
                 out.append(Completed(
                     prompt=r.prompt, image=None, group_id=g.gid,
                     nfe_share=0.0, latency=now - r.t_arrival, qos=r.qos,
@@ -727,10 +877,17 @@ class RequestScheduler:
         self.stats["nfe"] += g.nfe
         self.stats["completed"] += len(g.members)
         status = "degraded" if g.degraded else "ok"
+        tr = self.tracer
         done = []
         for i, r in enumerate(g.members):
             lat = now - r.t_arrival if record_latency else 0.0
+            if tr is not None:
+                tr.span("request.complete", r.t_arrival, lat,
+                        pid=PID_REQUESTS, tid=r.rid, gid=g.gid,
+                        qos=r.qos, status=status,
+                        cache_hit=g.cache_hit)
             if record_latency:
+                self._h_latency.observe(lat)
                 # per-class outcome ledger (goodput = deadline-met
                 # completions; deadline-free requests always count as met)
                 self.latencies.append(lat)
@@ -854,6 +1011,10 @@ class RequestScheduler:
                 g.preempted = True
                 self.stats["preemptions"] += 1
                 self._cstat(g.qos, "preemptions")
+                if self.tracer is not None:
+                    self.tracer.instant("group.preempt", now,
+                                        pid=PID_GROUPS, tid=g.gid,
+                                        qos=g.qos)
         return slots
 
     def _select_todo(self, now: float) -> List[_Group]:
@@ -879,6 +1040,10 @@ class RequestScheduler:
                 if g.preempted:
                     g.preempted = False
                     self.stats["resumes"] += 1
+                    if self.tracer is not None:
+                        self.tracer.instant("group.resume", now,
+                                            pid=PID_GROUPS, tid=g.gid,
+                                            qos=g.qos)
                 g.starved_ticks = 0
             else:
                 g.starved_ticks += 1
@@ -895,6 +1060,10 @@ class RequestScheduler:
         adaptive = (self.sage.adaptive_branch if adaptive is None
                     else adaptive)
         self.ticks += 1
+        self._tick_now = now
+        tr = self.tracer
+        if tr is not None:
+            tr.tick_begin(now, self.ticks)
         # arrival-process EWMA (requests per tick) — feeds admission
         # decisions and the adaptive pad-aware hold budget
         self._arrival_rate = (0.5 * self._arrivals_since_tick
@@ -906,15 +1075,25 @@ class RequestScheduler:
             # time on the next live tick — stalled-away slack surfaces
             # as at-risk claims or rejected_expired, never silently
             self.stats["stalled_ticks"] += 1
+            if tr is not None:
+                tr.exec_mark("tick.stall")
+                tr.tick_end(stalled=True)
             return []
+        if tr is not None:
+            tr.phase_begin("admit")
         done: List[Completed] = self._admit(now)
-        self.queue_depth.append(
-            sum(len(g.members) for g in self.open_groups))
+        depth = sum(len(g.members) for g in self.open_groups)
+        self.queue_depth.append(depth)
+        self._h_queue.observe(depth)
 
+        if tr is not None:
+            tr.phase_begin("launch")
         ctx = self._launch_context(now, adaptive)
         for g in self.policy.launches(list(self.open_groups), ctx):
             self._launch(g, now, adaptive)
 
+        if tr is not None:
+            tr.phase_begin("advance")
         todo = self._select_todo(now)
         failed: List[_Group] = []
         if self.packed:
@@ -924,11 +1103,15 @@ class RequestScheduler:
             for g in todo:
                 if not self._advance(g):
                     failed.append(g)
+        if tr is not None:
+            tr.phase_begin("complete")
         done.extend(self._handle_failures(failed, now))
         for g in todo:
             if g.state == "done":
                 done.extend(self._complete(g, now))
                 self.inflight.remove(g)
+        if tr is not None:
+            tr.tick_end(completions=len(done))
         return done
 
     def drain(self, now: Optional[float] = None,
@@ -968,6 +1151,7 @@ class RequestScheduler:
         if not prompts:
             return []
         now = self._now(None)
+        self._tick_now = now
         adaptive = (self.sage.adaptive_branch if adaptive is None
                     else adaptive)
         conds, pooled = self._embed(prompts)
@@ -1029,11 +1213,15 @@ class RequestScheduler:
     # -- reporting -------------------------------------------------------
     @property
     def cost_saving(self) -> float:
-        if not self.stats["nfe_independent"]:
-            return 0.0
-        return 1.0 - self.stats["nfe"] / self.stats["nfe_independent"]
+        return 1.0 - safe_ratio(self.stats["nfe"],
+                                self.stats["nfe_independent"],
+                                default=1.0)
 
     def summary(self) -> Dict[str, float]:
+        """End-of-run rollup.  This is a *view over the registry-homed
+        counters* (``self.stats`` and friends live in
+        ``self.metrics``); zero-denominator ratios uniformly report
+        ``0.0`` via :func:`telemetry.safe_ratio`."""
         lat = np.asarray(self.latencies, np.float64)
         out = {
             "requests": self.stats["requests"],
@@ -1041,8 +1229,8 @@ class RequestScheduler:
             "nfe": self.stats["nfe"],
             "nfe_independent": self.stats["nfe_independent"],
             "nfe_saved_cache": self.stats["nfe_saved_cache"],
-            "nfe_per_request": (self.stats["nfe"] / self.stats["completed"]
-                                if self.stats["completed"] else 0.0),
+            "nfe_per_request": safe_ratio(self.stats["nfe"],
+                                          self.stats["completed"]),
             "cost_saving": self.cost_saving,
             "latency_p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
             "latency_p95": float(np.percentile(lat, 95)) if lat.size else 0.0,
@@ -1056,11 +1244,10 @@ class RequestScheduler:
             # what it pays (fraction of launched latent rows that were
             # mask-0 padding)
             "launches": self.stats["launches"],
-            "launches_per_tick": (self.stats["launches"] / self.ticks
-                                  if self.ticks else 0.0),
-            "pad_waste": (self.stats["pack_pad_rows"]
-                          / self.stats["pack_rows"]
-                          if self.stats["pack_rows"] else 0.0),
+            "launches_per_tick": safe_ratio(self.stats["launches"],
+                                            self.ticks),
+            "pad_waste": safe_ratio(self.stats["pack_pad_rows"],
+                                    self.stats["pack_rows"]),
         }
         # overload / robustness ledger + goodput (deadline-met
         # completions — the number a QoS policy is supposed to maximise
@@ -1071,8 +1258,8 @@ class RequestScheduler:
                   "nfe_wasted"):
             out[k] = self.stats[k]
         out["goodput"] = self.stats["deadline_met"]
-        out["goodput_per_tick"] = (self.stats["deadline_met"] / self.ticks
-                                   if self.ticks else 0.0)
+        out["goodput_per_tick"] = safe_ratio(self.stats["deadline_met"],
+                                             self.ticks)
         out["arrival_rate"] = self._arrival_rate
         out["backlog_ticks"] = self._backlog_ticks()
         for q, cs in sorted(self.class_stats.items()):
@@ -1091,6 +1278,8 @@ class RequestScheduler:
             # instead of as a silent hit-rate collapse
             out["cache_hits"] = self.trunk_cache.stats["hits"]
             out["cache_exact_hits"] = self.trunk_cache.stats["exact_hits"]
+            out["cache_hits_hbm"] = self.trunk_cache.stats["hits_hbm"]
+            out["cache_hits_host"] = self.trunk_cache.stats["hits_host"]
             out["cache_admission_rejects"] = \
                 self.trunk_cache.stats["admission_rejects"]
             out["cache_hit_rate"] = self.trunk_cache.hit_rate

@@ -77,6 +77,7 @@ from repro.serving.ann_index import CentroidIndex, make_index
 from repro.serving.faults import FaultPlan, array_crc, corrupt_array
 from repro.serving.kvcache import cache_bytes
 from repro.serving.policies import CacheAdmission, make_cache_admission
+from repro.serving.telemetry import safe_ratio
 
 HBM, HOST = "hbm", "host"
 
@@ -188,6 +189,7 @@ class TrunkCache:
         self.bytes = 0
         self.tier_bytes = {HBM: 0, HOST: 0}
         self.stats = {"hits": 0, "exact_hits": 0, "misses": 0,
+                      "hits_hbm": 0, "hits_host": 0,
                       "inserts": 0, "evictions": 0, "overwrites": 0,
                       "admission_rejects": 0, "fault_forced_misses": 0,
                       "integrity_drops": 0, "spills": 0, "promotions": 0}
@@ -316,6 +318,9 @@ class TrunkCache:
             self.stats["integrity_drops"] += 1
             self.stats["misses"] += 1
             return None
+        # per-tier hit attribution records the tier the entry was FOUND
+        # in (pre-promotion) — the number capacity planning cares about
+        self.stats["hits_" + entry.tier] += 1
         self._entries.move_to_end(hit_key)
         if entry.tier == HOST:
             # promote-on-hit: the caller is about to fork from this trunk,
@@ -377,5 +382,5 @@ class TrunkCache:
 
     @property
     def hit_rate(self) -> float:
-        n = self.stats["hits"] + self.stats["misses"]
-        return self.stats["hits"] / n if n else 0.0
+        return safe_ratio(self.stats["hits"],
+                          self.stats["hits"] + self.stats["misses"])
