@@ -22,6 +22,20 @@ width).  Launch counts are backend-independent; off-TPU the us-per-tick
 gap underestimates the compiled gap, since interpret mode inflates
 per-call compute cost relative to launch overhead.
 
+The hetero_split-vs-hetero_packed pair runs a mixed-GEOMETRY burst:
+three request classes with distinct themes and distinct hetero axes — a
+thumbnail burst (quarter-res latents at the draft tier's step budget),
+an image-set batch (full-res, standard tier, ddim) and hi-res dpmpp
+singles.  The split baseline is the pre-hetero deployment shape: one
+scheduler per class, every class its own launch every tick.  The merged
+scheduler serves all three through heterogeneous packs — shape buckets
+side by side in one tick, per-row tier step grids and row-level solver
+dispatch collapsing the full-res ddim and dpmpp classes into ONE
+stacked launch.  Distinct themes plus the hetero grouping compartments
+make the groups (hence NFE) identical by construction, asserted exact;
+the bench further asserts hetero-packed launches/tick strictly below
+the split baseline — the hetero win the pack machinery exists for.
+
 The eager-vs-pad_aware pair runs a STAGGERED trace (half-group-size
 waves with an idle tick between them, so groups sit sub-full exactly
 when the wait deadline fires): under the eager launch policy every group
@@ -61,6 +75,7 @@ rows (the CI smoke).
 
 Rows: serving/{sync,stream,stream_cache}/<trace>,
       serving/{pergroup,packed}/<burst trace>,
+      serving/{hetero_split,hetero_packed}/<mixed-geometry trace>,
       serving/{eager,pad_aware}/<staggered trace>,
       serving/{fifo,qos_shed}/<overload trace>,
       serving/{cache_scan,cache_lsh}/n<N>d<D>.
@@ -96,6 +111,9 @@ OVL_INT_EVERY = 6    # interactive burst of 2 every OVL_INT_EVERY ticks
 OVL_INT_DL = 6.0     # interactive deadline (ticks after arrival)
 OVL_BAT_DL = 12.0    # batch deadline (generous; FIFO still blows it)
 OVL_CAP = 2          # max_groups_per_tick: the contended resource
+HET_THUMBS = 4       # hetero mix: thumbnail burst (draft tier, quarter-res)
+HET_SET = 4          # ... image-set batch (standard tier, full-res, ddim)
+HET_HIRES = 2        # ... hi-res singles (standard tier, full-res, dpmpp)
 CACHE_NS = (64, 512)     # resident entries when the lookups are timed
 CACHE_DIMS = (32, 128)   # embedding dims (cond_dim-scale, CLIP-scale)
 CACHE_QUERIES = 64       # near-dup queries per config (+ as many randoms)
@@ -219,6 +237,69 @@ def _run_stagger(policy):
              launches_per_tick=safe_ratio(stats["launches"], ticks),
              pad_waste=safe_ratio(stats["pack_pad_rows"],
                                   stats["pack_rows"]))
+    return us, len(done), stats, s
+
+
+def _hetero_classes(cfg):
+    """Three request classes with distinct themes (so grouping is
+    identical whether they share a scheduler or not) and distinct hetero
+    axes: a thumbnail burst at quarter-res draft NFE, an image-set batch
+    at full-res standard ddim, and hi-res dpmpp singles."""
+    _, base = ShapesDataset(res=16).batch(0, 3)
+    h, c = cfg.latent_size, cfg.latent_channels
+    return [
+        ("thumb", [base[0]] * HET_THUMBS,
+         dict(shape=(h // 2, h // 2, c), tier="draft", sampler="ddim")),
+        ("set", [base[1]] * HET_SET,
+         dict(shape=(h, h, c), tier="standard", sampler="ddim")),
+        ("hires", [base[2]] * HET_HIRES,
+         dict(shape=(h, h, c), tier="standard", sampler="dpmpp")),
+    ]
+
+
+def _run_hetero(merged):
+    """Hetero-mix burst: the three classes arrive together and drain.
+    ``merged`` serves them through ONE scheduler with mixed-sampler
+    packs (shape buckets side by side, per-row tier grids, row-level
+    solver dispatch); the split baseline gives each class its own
+    scheduler — one bucket per class per tick, the pre-hetero deployment
+    shape.  Distinct themes + hetero compartments make the groups (and
+    so NFE) identical by construction; the rows isolate launches/tick.
+    Same-instance warm pass as :func:`_run_burst`."""
+    eng = _engine()
+    classes = _hetero_classes(eng.cfg)
+    kw = dict(slice_steps=SLICE, max_wait_ticks=0, packed=True)
+    if merged:
+        scheds = [eng.streaming_scheduler(mix_samplers=True, **kw)]
+        feeds = [(scheds[0], cls) for cls in classes]
+    else:
+        scheds = [eng.streaming_scheduler(**kw) for _ in classes]
+        feeds = list(zip(scheds, classes))
+
+    def drive(now):
+        for s, (_, prompts, axes) in feeds:
+            s.submit(prompts, now=now, **axes)
+        done, ticks = [], 0
+        while any(s.pending for s in scheds):
+            now += 1.0
+            ticks += 1
+            for s in scheds:
+                done.extend(s.tick(now=now))
+        return done, ticks
+
+    drive(0.0)                            # warm pass
+    before = [dict(s.stats) for s in scheds]
+    t0 = time.time()
+    done, ticks = drive(100.0)
+    us = (time.time() - t0) * 1e6
+    stats = {}
+    for s, b in zip(scheds, before):
+        for k, v in s.stats.items():
+            stats[k] = stats.get(k, 0) + v - b.get(k, 0)
+    s = {"ticks": ticks,
+         "launches_per_tick": safe_ratio(stats["launches"], ticks),
+         "pad_waste": safe_ratio(stats["pack_pad_rows"],
+                                 stats["pack_rows"])}
     return us, len(done), stats, s
 
 
@@ -455,6 +536,30 @@ def main(rows=None):
                  f"{stats_p['launches'] / stats_g['launches']:.2f}x "
                  f"nfe={stats_p['nfe']:.0f}"))
 
+    # hetero mix: one mixed-geometry scheduler vs per-class split
+    htrace = (f"mix{HET_THUMBS}t{HET_SET}s{HET_HIRES}hT{STEPS}")
+    us_s, n_s, stats_s, s_s = _run_hetero(merged=False)
+    rows.append((f"serving/hetero_split/{htrace}", us_s / s_s["ticks"],
+                 f"launches_per_tick={s_s['launches_per_tick']:.2f} "
+                 f"launches={stats_s['launches']:.0f} "
+                 f"pad_waste={s_s['pad_waste']:.3f} "
+                 f"nfe={stats_s['nfe']:.0f}"))
+    us_h, n_h, stats_h, s_h = _run_hetero(merged=True)
+    assert n_h == n_s == HET_THUMBS + HET_SET + HET_HIRES
+    assert stats_h["nfe"] == stats_s["nfe"], (
+        f"hetero packing must not change NFE: {stats_h['nfe']} vs "
+        f"{stats_s['nfe']}")
+    assert s_h["launches_per_tick"] < s_s["launches_per_tick"], (
+        f"hetero-packed must reduce launches/tick vs per-class split: "
+        f"{s_h['launches_per_tick']} vs {s_s['launches_per_tick']}")
+    rows.append((f"serving/hetero_packed/{htrace}", us_h / s_h["ticks"],
+                 f"launches_per_tick={s_h['launches_per_tick']:.2f} "
+                 f"launches={stats_h['launches']:.0f} "
+                 f"pad_waste={s_h['pad_waste']:.3f} "
+                 f"vs_split_launches="
+                 f"{stats_h['launches'] / stats_s['launches']:.2f}x "
+                 f"nfe={stats_h['nfe']:.0f}"))
+
     # eager vs pad-aware launch policy on a staggered-arrival trace
     strace = f"stag{STAG_WAVES}w2g{STAG_GAP}T{STEPS}"
     us_e, n_e, stats_e, s_e = _run_stagger("eager")
@@ -513,7 +618,7 @@ def main(rows=None):
     n_before = len(rows)
     _run_cache_scaling(rows)
 
-    for r in rows[-(9 + len(rows) - n_before):]:
+    for r in rows[-(11 + len(rows) - n_before):]:
         print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
     return rows
 

@@ -129,12 +129,29 @@ def run_streaming(engine, prompts, args):
         trunk_cache=cache, packed=not args.per_group, policy=policy,
         max_groups_per_tick=args.max_groups_per_tick,
         admission=admission, faults=faults, tracer=tracer,
-        metrics=metrics)
+        metrics=metrics, mix_samplers=args.sampler_mix > 0)
 
     # qos assignment: a seeded coin per request tags it interactive
     # (deadline-carrying) with probability --qos-mix, else batch
     qrng = np.random.RandomState(args.seed + 2)
     interactive = qrng.rand(len(prompts)) < args.qos_mix
+
+    # hetero geometry: per-request shape / quality tier / solver draws.
+    # Shapes derive from the model's square latent: full, half-res and
+    # half-width (portrait) variants — all patch-aligned.
+    hrng = np.random.RandomState(args.seed + 3)
+    h, c = engine.cfg.latent_size, engine.cfg.latent_channels
+    alt_shapes = [(h // 2, h // 2, c), (h // 2, h, c)]
+    other = {"ddim": "dpmpp", "dpmpp": "ddim"}[engine.sage.sampler]
+
+    def draw_axes(batch):
+        shp = [alt_shapes[hrng.randint(2)] if hrng.rand() < args.shape_mix
+               else (h, h, c) for _ in batch]
+        tr = [("draft", "premium")[hrng.randint(2)]
+              if hrng.rand() < args.tier_mix else "standard" for _ in batch]
+        smp = [other if hrng.rand() < args.sampler_mix
+               else engine.sage.sampler for _ in batch]
+        return {"shape": shp, "tier": tr, "sampler": smp}
 
     t0 = time.time()
     done, now, i = [], 0.0, 0
@@ -147,9 +164,10 @@ def run_streaming(engine, prompts, args):
         if int_batch:
             sched.submit(int_batch, now=now,
                          deadline=now + args.int_deadline,
-                         qos="interactive")
+                         qos="interactive", **draw_axes(int_batch))
         if bat_batch:
-            sched.submit(bat_batch, now=now, qos="batch")
+            sched.submit(bat_batch, now=now, qos="batch",
+                         **draw_axes(bat_batch))
         done.extend(sched.tick(now=now))
     dt = time.time() - t0
 
@@ -168,6 +186,14 @@ def run_streaming(engine, prompts, args):
     print(f"launches per tick  = {s['launches_per_tick']:.2f} "
           f"({'per-group' if args.per_group else 'packed'}, "
           f"policy {args.policy}, pad waste {s['pad_waste']:.1%})")
+    if args.shape_mix > 0 or args.tier_mix > 0 or args.sampler_mix > 0:
+        for tier, ts in sorted(sched.tier_stats.items()):
+            print(f"  tier {tier:<9} = {ts['completed']:.0f} done, "
+                  f"NFE {ts['nfe']:.0f} "
+                  f"({sched.tiers[tier]} steps/request)")
+        for key, b in sorted(sched.shape_stats.items()):
+            print(f"  shape {key:<8} = {b['launches']:.0f} launches, "
+                  f"{b['rows']:.0f} rows ({b['pad_rows']:.0f} pad)")
     if args.qos_mix > 0 or args.overload != "off" or faults is not None:
         print(f"goodput            = {s['goodput']:.0f} deadline-met "
               f"({s['goodput_per_tick']:.2f}/tick), "
@@ -288,6 +314,20 @@ def main():
                     help="cap on groups advanced per tick (the launch-"
                          "slot budget preemption arbitrates; default "
                          "unlimited)")
+    ap.add_argument("--shape-mix", type=float, default=0.0,
+                    help="fraction of arrivals requesting an alternate "
+                         "latent shape (half-res or portrait variant of "
+                         "the model's square latent); shape buckets pack "
+                         "side by side in one tick (streaming mode)")
+    ap.add_argument("--tier-mix", type=float, default=0.0,
+                    help="fraction of arrivals at a non-standard quality "
+                         "tier (draft or premium, 50/50): per-row step "
+                         "budgets inside shared packs (streaming mode)")
+    ap.add_argument("--sampler-mix", type=float, default=0.0,
+                    help="fraction of arrivals using the non-default "
+                         "solver; >0 enables mixed-sampler packs "
+                         "(per-row ddim/dpmpp dispatch in one launch; "
+                         "streaming mode)")
     ap.add_argument("--fault-plan", default="",
                     help="seeded fault injection spec, e.g. "
                          "'launch=0.1,miss=0.05,corrupt=0.02,stall=0.05,"

@@ -35,6 +35,19 @@ then returns per-row values which broadcast along the batch axis; the
 per-element arithmetic is unchanged, so packed rows reproduce the
 per-group results exactly.
 
+Heterogeneous stacks (hetero packed serving support): both phases accept
+an explicit ``grid`` — 1-D to override the default
+``ddim_timesteps(sched.T, sage.total_steps)`` (quality tiers: groups run
+at their OWN total_steps), or 2-D (B, L) so every packed row gathers from
+its own group's grid (rows with *different* step budgets in one launch;
+``repro.serving.packing.pack_grid`` builds these).  ``row_samplers`` — a
+static per-row tuple of sampler names — additionally lets rows of
+different solvers share the stack: row-independent math means each
+sub-batch reproduces its per-group result bitwise (reference path:
+compute both updates, select per row; fused path: dispatch each solver's
+kernel over its row subset and scatter — the per-row scalar-block
+kernels already pin sub-batch == solo bitwise).
+
 Kernel routing: ``sage.step_impl == "fused"`` sends the per-step CFG+solver
 update — DDIM *and* DPM-Solver++(2M) — plus the shared-uncond group mean
 through the Pallas kernels via ``repro.kernels.dispatch``: one HBM pass
@@ -45,7 +58,9 @@ denoiser's attention backend is chosen separately by
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, NamedTuple, Optional, Tuple, Union
+from dataclasses import replace as _dc_replace
+from typing import (Callable, Dict, NamedTuple, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +90,37 @@ def _fused_step(sage: SageConfig) -> bool:
     return sage.step_impl == "fused"
 
 
+def _grid_gather(grid: jnp.ndarray, i) -> jnp.ndarray:
+    """Gather timestep values for (possibly per-row) grid positions.
+
+    1-D grid: every row shares one DDIM grid — plain ``grid[i]`` (``i``
+    scalar or per-row), the homogeneous fast path, graph-identical to the
+    pre-hetero code.  2-D grid (B, L): each row carries its OWN grid
+    (groups with different ``total_steps`` stacked into one launch) — row
+    j reads ``grid[j, i_j]``.  Rows shorter than L are zero-padded by
+    ``packing.pack_grid``; a row's scan never indexes past its own
+    ``total_steps``, so pads are never read.
+    """
+    if grid.ndim == 1:
+        return grid[i]
+    i = jnp.broadcast_to(jnp.asarray(i, jnp.int32), (grid.shape[0],))
+    return jnp.take_along_axis(grid, i[:, None], axis=1)[:, 0]
+
+
+def _norm_row_samplers(sage: SageConfig,
+                       row_samplers: Optional[Sequence[str]]
+                       ) -> Tuple[SageConfig, Optional[Tuple[str, ...]]]:
+    """Collapse a uniform per-row sampler assignment back onto the scalar
+    ``sage.sampler`` path (bitwise-identical and cheaper); keep the tuple
+    only when rows genuinely mix solvers."""
+    if row_samplers is None:
+        return sage, None
+    row_samplers = tuple(row_samplers)
+    if len(set(row_samplers)) == 1:
+        return _dc_replace(sage, sampler=row_samplers[0]), None
+    return sage, row_samplers
+
+
 def _eps_pair(eps_fn: EpsFn, z, t, cond, null_cond):
     """One batched denoiser call for the CFG pair -> (eps_u, eps_c)."""
     B = z.shape[0]
@@ -98,8 +144,82 @@ def _sampler_update(sched: Schedule, sage: SageConfig, z, t, t_next, eps,
                               clip_x0=sage.clip_x0)
 
 
+def _mixed_step_reference(sched: Schedule, sage: SageConfig, z, t, t_next,
+                          eps_u, eps_c, eps_prev, t_prev, is_first,
+                          row_samplers: Tuple[str, ...]):
+    """Mixed-sampler reference update: gather each solver's (static) row
+    subset, apply that solver's solo update, scatter back.  Computing
+    BOTH solvers on the full stack and where-selecting per row would be
+    value-equal but not bitwise-safe — XLA fuses the combined graph
+    differently from the solo graphs (CSE/fma reassociation at the last
+    bit).  The subset form keeps each row's elementwise expression tree
+    literally the solo one; both solo reference paths return the combined
+    eps as the history carry, so one full-stack eps serves every row."""
+    eps = cfg_combine(eps_u, eps_c, sage.guidance_scale)
+    B = z.shape[0]
+    tb = jnp.broadcast_to(t, (B,))
+    tnb = jnp.broadcast_to(t_next, (B,))
+    tpb = jnp.broadcast_to(t_prev, (B,))
+    fb = jnp.broadcast_to(is_first, (B,))
+    z_next = jnp.zeros_like(z)
+    for name in ("ddim", "dpmpp"):
+        idx = tuple(j for j, s in enumerate(row_samplers) if s == name)
+        if not idx:
+            continue
+        ix = jnp.asarray(idx)
+        sub = _sampler_update(sched, _dc_replace(sage, sampler=name),
+                              z[ix], tb[ix], tnb[ix], eps[ix],
+                              eps_prev[ix], tpb[ix], fb[ix])
+        z_next = z_next.at[ix].set(sub)
+    return z_next, eps
+
+
+def _mixed_step_fused(sched: Schedule, sage: SageConfig, z, t, t_next,
+                      eps_u, eps_c, eps_prev, t_prev, is_first,
+                      row_samplers: Tuple[str, ...]):
+    """Mixed-sampler fused update: row-level dispatch fallback for kernels
+    that can't mix solvers in one launch.  Each solver's kernel runs over
+    its (static) row subset and the results scatter back — the per-row
+    scalar-block machinery already pins sub-batch launches bitwise-equal
+    to solo launches (``tests/test_packing.py`` rows-vs-single contracts),
+    so the split is invisible.  History per row matches the solo fused
+    paths exactly: DDIM rows carry ``eps_c``, 2M rows carry the kernel's
+    combined eps."""
+    B = z.shape[0]
+    tb = jnp.broadcast_to(t, (B,))
+    tnb = jnp.broadcast_to(t_next, (B,))
+    tpb = jnp.broadcast_to(t_prev, (B,))
+    fb = jnp.broadcast_to(is_first, (B,))
+    z_next, eps_hist = jnp.zeros_like(z), jnp.zeros_like(z)
+    idx_dd = tuple(j for j, s in enumerate(row_samplers) if s != "dpmpp")
+    idx_dp = tuple(j for j, s in enumerate(row_samplers) if s == "dpmpp")
+    if idx_dd:
+        ix = jnp.asarray(idx_dd)
+        a_t, s_t, a_n, s_n = samplers.ddim_scalars(sched, tb[ix], tnb[ix])
+        zd = dispatch.cfg_ddim_step(
+            z[ix], eps_u[ix], eps_c[ix], guidance=sage.guidance_scale,
+            a_t=a_t, s_t=s_t, a_n=a_n, s_n=s_n, clip_x0=sage.clip_x0,
+            impl="fused", interpret=sage.kernel_interpret)
+        z_next = z_next.at[ix].set(zd)
+        eps_hist = eps_hist.at[ix].set(eps_c[ix])
+    if idx_dp:
+        ix = jnp.asarray(idx_dp)
+        a_t, s_t, a_n, s_n, lam, lam_p, lam_n = samplers.dpmpp_scalars(
+            sched, tb[ix], tnb[ix], tpb[ix])
+        zd, ed = dispatch.cfg_dpmpp_step(
+            z[ix], eps_u[ix], eps_c[ix], eps_prev[ix],
+            guidance=sage.guidance_scale, a_t=a_t, s_t=s_t, a_n=a_n,
+            s_n=s_n, lam=lam, lam_p=lam_p, lam_n=lam_n, is_first=fb[ix],
+            clip_x0=sage.clip_x0, impl="fused",
+            interpret=sage.kernel_interpret)
+        z_next = z_next.at[ix].set(zd)
+        eps_hist = eps_hist.at[ix].set(ed)
+    return z_next, eps_hist
+
+
 def _step_update(sched: Schedule, sage: SageConfig, z, t, t_next,
-                 eps_u, eps_c, eps_prev, t_prev, is_first):
+                 eps_u, eps_c, eps_prev, t_prev, is_first,
+                 row_samplers: Optional[Tuple[str, ...]] = None):
     """Apply one sampler update to the CFG pair; returns (z_next, eps).
 
     ``sage.step_impl == "fused"`` routes through the single-pass Pallas
@@ -107,7 +227,14 @@ def _step_update(sched: Schedule, sage: SageConfig, z, t, t_next,
     4 reads / 2 writes (the kernel also emits the combined eps for the 2M
     history carry) — no intermediate combined-eps / x0 HBM round trips
     either way.  The returned eps feeds dpmpp's history carry and is never
-    read on the DDIM path."""
+    read on the DDIM path.  A non-None ``row_samplers`` tuple routes to
+    the mixed-sampler per-row dispatch instead (rows of different solvers
+    in one stack)."""
+    if row_samplers is not None:
+        mixed = _mixed_step_fused if _fused_step(sage) \
+            else _mixed_step_reference
+        return mixed(sched, sage, z, t, t_next, eps_u, eps_c, eps_prev,
+                     t_prev, is_first, row_samplers)
     if _fused_step(sage) and sage.sampler == "dpmpp":
         a_t, s_t, a_n, s_n, lam, lam_p, lam_n = samplers.dpmpp_scalars(
             sched, t, t_next, t_prev)
@@ -172,7 +299,10 @@ def fork_carry(carry: SampleCarry, n_members: int) -> SampleCarry:
 
 def shared_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
                  carry: SampleCarry, cbar: jnp.ndarray,
-                 null_cond: jnp.ndarray, n_steps: int) -> SampleCarry:
+                 null_cond: jnp.ndarray, n_steps: int,
+                 grid: Optional[jnp.ndarray] = None,
+                 row_samplers: Optional[Sequence[str]] = None
+                 ) -> SampleCarry:
     """Advance the group-trunk phase ``n_steps`` sampler steps.
 
     carry.z (K, H, W, C); cbar (K, Lc, dc) group-mean text features.
@@ -180,21 +310,30 @@ def shared_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
     position rides in ``carry.step_idx`` — a scalar, or a per-row (K,)
     vector when the rows are a packed stack of groups at different grid
     positions.  History warm-up fires at global step 0 only, so resuming
-    mid-phase is exact.
+    mid-phase is exact.  ``grid`` overrides the default DDIM grid — 1-D
+    (shared by all rows, e.g. a tier's own total_steps) or 2-D (K, L)
+    per-row grids for stacks mixing step budgets; ``row_samplers``
+    (static tuple) lets rows mix solvers (see :func:`_step_update`).
     """
     if n_steps <= 0:
         return carry
     carry = carry._replace(step_idx=jnp.asarray(carry.step_idx, jnp.int32))
     K = carry.z.shape[0]
-    grid = jnp.asarray(ddim_timesteps(sched.T, sage.total_steps))
+    if grid is None:
+        grid = jnp.asarray(ddim_timesteps(sched.T, sage.total_steps))
+    else:
+        grid = jnp.asarray(grid)
+    sage, row_samplers = _norm_row_samplers(sage, row_samplers)
 
     def body(c: SampleCarry, _):
         z, eps_prev, i = c
-        t, t_next = grid[i], grid[i + 1]
+        t, t_next = _grid_gather(grid, i), _grid_gather(grid, i + 1)
         tb = jnp.broadcast_to(t, (K,))
         eps_u, eps_c = _eps_pair(eps_fn, z, tb, cbar, null_cond)
         z, eps = _step_update(sched, sage, z, t, t_next, eps_u, eps_c,
-                              eps_prev, grid[jnp.maximum(i - 1, 0)], i == 0)
+                              eps_prev,
+                              _grid_gather(grid, jnp.maximum(i - 1, 0)),
+                              i == 0, row_samplers=row_samplers)
         return SampleCarry(z, eps, i + 1), None
 
     carry, _ = jax.lax.scan(body, carry, None, length=n_steps)
@@ -204,7 +343,10 @@ def shared_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
 def branch_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
                  carry: SampleCarry, cond_flat: jnp.ndarray,
                  mask: jnp.ndarray, null_cond: jnp.ndarray, n_steps: int,
-                 fork_idx: Union[int, jnp.ndarray]) -> SampleCarry:
+                 fork_idx: Union[int, jnp.ndarray],
+                 grid: Optional[jnp.ndarray] = None,
+                 row_samplers: Optional[Sequence[str]] = None
+                 ) -> SampleCarry:
     """Advance the per-member phase ``n_steps`` steps after a fork.
 
     carry.z (K*N, H, W, C) from :func:`fork_carry`; cond_flat
@@ -214,18 +356,24 @@ def branch_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
     branch points share one compilation per segment length).  For a
     packed stack of groups, ``carry.step_idx`` and ``fork_idx`` are
     per-row (K*N,) vectors — one super-batch can mix a group at its fork
-    (warming up) with groups mid-branch.
+    (warming up) with groups mid-branch.  ``grid``/``row_samplers`` as in
+    :func:`shared_phase` (2-D grids are (K*N, L) here — width-repeated
+    per member row by ``packing.pack_grid``).
     """
     if n_steps <= 0:
         return carry
     carry = carry._replace(step_idx=jnp.asarray(carry.step_idx, jnp.int32))
     K, N = mask.shape
-    grid = jnp.asarray(ddim_timesteps(sched.T, sage.total_steps))
+    if grid is None:
+        grid = jnp.asarray(ddim_timesteps(sched.T, sage.total_steps))
+    else:
+        grid = jnp.asarray(grid)
+    sage, row_samplers = _norm_row_samplers(sage, row_samplers)
     fork_idx = jnp.asarray(fork_idx, jnp.int32)
 
     def body(c: SampleCarry, _):
         z, eps_prev, i = c
-        t, t_next = grid[i], grid[i + 1]
+        t, t_next = _grid_gather(grid, i), _grid_gather(grid, i + 1)
         if sage.shared_uncond_cfg:
             # uncond eval once per group on the group-mean trajectory proxy:
             # members share z only at the branch point, so per-member uncond
@@ -257,8 +405,10 @@ def branch_phase(eps_fn: EpsFn, sched: Schedule, sage: SageConfig,
             tb = jnp.broadcast_to(t, (K * N,))
             eps_u, eps_c = _eps_pair(eps_fn, z, tb, cond_flat, null_cond)
         z, eps = _step_update(sched, sage, z, t, t_next, eps_u, eps_c,
-                              eps_prev, grid[jnp.maximum(i - 1, 0)],
-                              i == fork_idx)  # history restarts at the fork
+                              eps_prev,
+                              _grid_gather(grid, jnp.maximum(i - 1, 0)),
+                              i == fork_idx,  # history restarts at the fork
+                              row_samplers=row_samplers)
         return SampleCarry(z, eps, i + 1), None
 
     carry, _ = jax.lax.scan(body, carry, None, length=n_steps)

@@ -3,7 +3,16 @@
 Scalars with a batch axis ((B,) vectors, as produced by gathering the
 schedule at a per-row timestep) select the per-row kernel launch; plain
 scalars keep the original broadcast launch.  Both run the same kernel
-body, so the two paths cannot drift numerically."""
+body, so the two paths cannot drift numerically.
+
+Mixed-sampler packs (rows alternating ddim/dpmpp in one stacked launch)
+call this wrapper on a static *gathered sub-batch* of the ddim rows and
+scatter the result back — never on the full stack with a select.
+Computing both solvers' updates over all rows and ``jnp.where``-choosing
+is value-equal but not bitwise-safe: XLA fuses the combined expression
+graph differently (CSE / fma reassociation) than the solo graph, so the
+last bit drifts from the per-group oracle.  Gather/scatter keeps each
+row's expression tree literally the solo one."""
 from __future__ import annotations
 
 from repro.kernels._tiles import (per_row_scalars, row_block, scalar_block,

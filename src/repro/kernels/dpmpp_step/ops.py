@@ -1,7 +1,10 @@
 """Public wrapper: arbitrary latent shapes -> padded tiles -> kernel.
 
 Scalars with a batch axis ((B,) vectors) select the per-row kernel launch
-— same body, per-row scalar block; see ddim_step/ops.py."""
+— same body, per-row scalar block; see ddim_step/ops.py.  Mixed-sampler
+packs invoke this on the statically-gathered dpmpp rows only (scattered
+back afterwards); a full-stack compute + select would not be bitwise-safe
+against the per-group oracle — see the note in ddim_step/ops.py."""
 from __future__ import annotations
 
 from repro.kernels._tiles import (per_row_scalars, row_block, scalar_block,

@@ -83,20 +83,41 @@ def patchify(cfg: ModelConfig, z: jax.Array) -> jax.Array:
     return z.reshape(B, (H // p) * (W // p), p * p * C)
 
 
-def unpatchify(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+def unpatchify(cfg: ModelConfig, x: jax.Array, hw=None) -> jax.Array:
     B, n, _ = x.shape
     p, C = cfg.patch, cfg.latent_channels
-    hw = int(math.isqrt(n))
-    x = x.reshape(B, hw, hw, p, p, C).transpose(0, 1, 3, 2, 4, 5)
-    return x.reshape(B, hw * p, hw * p, C)
+    hp, wp = (int(math.isqrt(n)),) * 2 if hw is None else hw
+    x = x.reshape(B, hp, wp, p, p, C).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, hp * p, wp * p, C)
+
+
+def pos_embed(pos: jax.Array, cfg: ModelConfig, hp: int, wp: int
+              ) -> jax.Array:
+    """Positional table for an (hp, wp) patch grid.  The table is trained
+    at the full square grid ``latent_size // patch``; smaller latents
+    (multi-resolution / aspect-bucket serving) take the top-left window of
+    the 2-D table, SDXL-crop style — the full-size path returns the table
+    untouched, so square full-resolution latents are bit-for-bit the
+    pre-hetero graph."""
+    hw = cfg.latent_size // cfg.patch
+    if (hp, wp) == (hw, hw):
+        return pos
+    if hp > hw or wp > hw:
+        raise ValueError(f"patch grid ({hp},{wp}) exceeds pos table {hw}")
+    return pos.reshape(hw, hw, -1)[:hp, :wp].reshape(hp * wp, -1)
 
 
 def forward(params: Params, cfg: ModelConfig, z: jax.Array, t: jax.Array,
             cond: jax.Array, remat: bool = False) -> jax.Array:
-    """z (B,H,W,C) latents at time t; t (B,); cond (B,Lc,cond_dim) -> eps."""
+    """z (B,H,W,C) latents at time t; t (B,); cond (B,Lc,cond_dim) -> eps.
+
+    H and W need not equal ``cfg.latent_size`` (nor each other): any
+    patch-divisible latent up to the trained grid runs through the same
+    weights with a windowed positional table (:func:`pos_embed`)."""
     dtype = jnp.dtype(cfg.dtype)
+    hp, wp = z.shape[1] // cfg.patch, z.shape[2] // cfg.patch
     x = dot(patchify(cfg, z).astype(dtype), params["patch_in"])
-    x = x + params["pos"].astype(dtype)[None]
+    x = x + pos_embed(params["pos"], cfg, hp, wp).astype(dtype)[None]
     temb = timestep_embedding(t)
     temb = dot(jax.nn.silu(dot(temb, params["t_w1"])), params["t_w2"])  # (B,d)
     c = dot(cond.astype(dtype), params["cond_proj"])                    # (B,Lc,d)
@@ -125,4 +146,4 @@ def forward(params: Params, cfg: ModelConfig, z: jax.Array, t: jax.Array,
     shf, scf = jnp.split(fmod, 2, axis=-1)
     x = _mod(_ln(x), shf.astype(dtype), scf.astype(dtype))
     out = dot(x, params["out"])
-    return unpatchify(cfg, out).astype(jnp.float32)
+    return unpatchify(cfg, out, (hp, wp)).astype(jnp.float32)

@@ -103,7 +103,11 @@ class SageServingEngine:
                             **kw) -> RequestScheduler:
         """A fresh continuous-batching scheduler over this engine's model
         (arrival-driven ticks + optional cross-batch trunk cache); the
-        engine's own synchronous scheduler and stats are untouched."""
+        engine's own synchronous scheduler and stats are untouched.
+        Heterogeneous-serving knobs (``tiers``, ``mix_samplers``,
+        ``degrade_tier``, qos/admission, telemetry) forward through
+        ``**kw`` — per-request shape/tier/sampler are then chosen at
+        ``submit()`` time on the returned scheduler."""
         kw.setdefault("seed", self.seed)
         kw.setdefault("policy", self.policy)
         return RequestScheduler(

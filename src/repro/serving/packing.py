@@ -15,9 +15,15 @@ phase call:
 
 * ``phase``   — ``shared`` rows advance under the group-mean conditioning,
   ``branch`` rows under per-member conditioning (different call graphs);
-* ``sampler`` — constant per scheduler, kept in the key as documentation
-  (a multi-config front-end would shard on it);
-* ``shape``   — the latent shape (constant per scheduler, as above);
+* ``sampler`` — the group's OWN solver (requests pick ddim/dpmpp at
+  submit); with ``mix_samplers=True`` the component collapses to ``"*"``
+  and rows of different solvers share the launch via the per-row
+  dispatch in ``shared_sampling`` (``row_samplers`` — see
+  :func:`pack_samplers`);
+* ``shape``   — the group's OWN latent (H, W, C): requests pick their
+  resolution/aspect at submit and groups never mix shapes, so a hetero
+  tick launches one stacked call per shape bucket with per-bucket pads
+  (SDXL-style multi-resolution serving);
 * ``n_steps`` — the segment length every row advances this tick,
   ``min(slice_steps, steps remaining in the phase)``, so no group is
   dragged past its phase boundary by a pack-mate.
@@ -27,7 +33,13 @@ it only determines a group's branch point, which already rides in the
 per-row ``step_idx``/``fork_idx`` vectors — groups from different beta
 buckets whose segments line up share one launch (this is what lets
 ``RequestScheduler.run_batch`` issue ONE stacked launch per phase per
-tick across its beta buckets instead of one per bucket).
+tick across its beta buckets instead of one per bucket).  A group's
+**total step budget** (quality tier: draft/standard/premium NFE) is not
+a signature axis either: each row gathers timesteps from its own
+group's DDIM grid (:func:`pack_grid` stacks the per-row grids), so
+groups running different ``total_steps`` co-pack whenever their segment
+lengths line up — this is what lets a degraded (draft-tier) group share
+a launch with standard-tier traffic.
 
 ``build_packs(..., align_phases=True)`` additionally aligns the segment
 length *within each phase* to the minimum steps remaining among that
@@ -58,6 +70,7 @@ broadcast-scalar launches.
 
 Groups are duck-typed: anything with ``carry`` / ``cbar`` / ``cond_flat``
 / ``members`` / ``steps_done`` / ``n_shared`` / ``beta`` / ``state``
+plus the hetero axes ``shape`` / ``sampler`` / ``total_steps``
 (see ``scheduler._Group``) packs.
 """
 from __future__ import annotations
@@ -67,25 +80,28 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.schedule import ddim_timesteps
 from repro.core.shared_sampling import SampleCarry
+
+MIXED = "*"    # PackKey.sampler wildcard under mix_samplers
 
 
 class PackKey(NamedTuple):
     """Pack-compatibility signature (see module docstring for the rules)."""
     phase: str                  # "shared" | "branch"
-    sampler: str
-    shape: Tuple[int, ...]      # latent (H, W, C)
+    sampler: str                # solver name, or "*" under mix_samplers
+    shape: Tuple[int, ...]      # the bucket's latent (H, W, C)
     n_steps: int                # segment length this tick
 
 
-def phase_remaining(g, total_steps: int) -> int:
-    """Steps left in group ``g``'s current phase."""
-    limit = g.n_shared if g.state == "shared" else total_steps
+def phase_remaining(g) -> int:
+    """Steps left in group ``g``'s current phase (``g.total_steps`` is the
+    group's own tier budget, not a deployment constant)."""
+    limit = g.n_shared if g.state == "shared" else g.total_steps
     return limit - g.steps_done
 
 
-def pack_signature(g, slice_steps: int, total_steps: int, sampler: str,
-                   shape: Tuple[int, ...],
+def pack_signature(g, slice_steps: int, mix_samplers: bool = False,
                    n_steps: Optional[int] = None) -> PackKey:
     """The signature under which group ``g`` may share a launch this tick.
 
@@ -93,12 +109,13 @@ def pack_signature(g, slice_steps: int, total_steps: int, sampler: str,
     segment rule — :func:`build_packs` passes the phase-aligned length
     under ``align_phases``."""
     if n_steps is None:
-        n_steps = min(slice_steps, phase_remaining(g, total_steps))
-    return PackKey(g.state, sampler, tuple(shape), n_steps)
+        n_steps = min(slice_steps, phase_remaining(g))
+    return PackKey(g.state, MIXED if mix_samplers else g.sampler,
+                   tuple(g.shape), n_steps)
 
 
-def build_packs(groups: Sequence, slice_steps: int, total_steps: int,
-                sampler: str, shape: Tuple[int, ...],
+def build_packs(groups: Sequence, slice_steps: int,
+                mix_samplers: bool = False,
                 align_phases: bool = False,
                 order_key=None) -> List[Tuple[PackKey, List]]:
     """Bucket in-flight groups by pack signature (insertion-ordered, so
@@ -122,12 +139,12 @@ def build_packs(groups: Sequence, slice_steps: int, total_steps: int,
     phase_steps: Dict[str, int] = {}
     if align_phases:
         for g in groups:
-            r = min(slice_steps, phase_remaining(g, total_steps))
+            r = min(slice_steps, phase_remaining(g))
             phase_steps[g.state] = min(phase_steps.get(g.state, r), r)
     packs: Dict[PackKey, List] = {}
     for g in groups:
         packs.setdefault(
-            pack_signature(g, slice_steps, total_steps, sampler, shape,
+            pack_signature(g, slice_steps, mix_samplers,
                            n_steps=phase_steps.get(g.state)),
             []).append(g)
     if order_key is not None:
@@ -200,6 +217,50 @@ def unpack_branch(carry: SampleCarry, groups: Sequence, width: int) -> None:
         g.carry = SampleCarry(carry.z[lo:lo + n],
                               carry.eps_prev[lo:lo + n],
                               carry.step_idx[lo])
+
+
+# -- hetero row data ---------------------------------------------------------
+
+def pack_grid(groups: Sequence, sched_T: int,
+              width: Optional[int] = None) -> jnp.ndarray:
+    """The DDIM grid(s) a pack bucket's rows gather timesteps from.
+
+    Uniform step budget -> the plain 1-D grid (every row shares it; this
+    is the homogeneous fast path — bit-for-bit the graph the pre-hetero
+    scheduler baked into its runners).  Mixed budgets -> a 2-D (rows, L)
+    stack where row j is its group's own ``ddim_timesteps`` grid,
+    zero-padded to ``L = max(total_steps) + 1`` — a row's scan never
+    indexes past its own ``total_steps``, so pads are never read.
+    ``width`` repeats each group's grid row per member row (branch
+    packs); shared packs pass ``width=None`` (one row per group).
+    """
+    ts = [g.total_steps for g in groups]
+    if len(set(ts)) == 1:
+        return jnp.asarray(ddim_timesteps(sched_T, ts[0]))
+    rows = np.zeros((len(groups), max(ts) + 1), np.int64)
+    for j, g in enumerate(groups):
+        rows[j, :g.total_steps + 1] = ddim_timesteps(sched_T, g.total_steps)
+    if width is not None:
+        rows = np.repeat(rows, width, axis=0)
+    return jnp.asarray(rows)
+
+
+def pack_samplers(groups: Sequence, width: Optional[int] = None
+                  ) -> Optional[Tuple[str, ...]]:
+    """Per-row sampler assignment for a (possibly mixed-solver) bucket.
+
+    Returns ``None`` when every group runs the same solver — the caller
+    keeps the scalar-sampler path, which is both cheaper and the exact
+    pre-hetero graph.  Mixed buckets get the static per-row tuple
+    ``shared_phase``/``branch_phase`` dispatch on (``width`` repeats per
+    member row, branch packs).
+    """
+    names = [g.sampler for g in groups]
+    if len(set(names)) == 1:
+        return None
+    if width is not None:
+        names = [s for s in names for _ in range(width)]
+    return tuple(names)
 
 
 def pad_stats(groups: Sequence, width: int) -> Tuple[int, int]:

@@ -69,6 +69,15 @@ from repro.serving.packing import PackKey
 QOS_RANK: Dict[str, int] = {"interactive": 0, "batch": 1}
 DEFAULT_QOS = "interactive"
 
+# Quality tiers are the *step-budget* axis, orthogonal to QoS (urgency):
+# a request's tier names the NFE budget its group runs at
+# (``RequestScheduler(tiers=...)`` maps names to total step counts —
+# draft/standard/premium by default).  Tiers are a grouping compartment
+# like QoS but NOT a pack-compatibility axis: per-row DDIM grids let a
+# draft group share a launch with premium traffic whenever their segment
+# lengths line up (see ``serving.packing.pack_grid``).
+DEFAULT_TIER = "standard"
+
 
 def qos_rank(g) -> int:
     """Launch-order rank of a group/request's QoS class (duck-typed on
@@ -81,12 +90,17 @@ class LaunchContext(NamedTuple):
 
     ``signature_of`` maps an *open* group to the :class:`PackKey` it would
     occupy if launched this tick (the scheduler computes it from the
-    group's would-be beta bucket); ``inflight_signatures`` are the buckets
+    group's would-be beta bucket AND its own shape/sampler — under a
+    hetero mix the pad-aware bucket-fill release therefore reasons
+    per-bucket: a thumbnail group only rides an in-flight thumbnail
+    launch, never a hi-res one); ``inflight_signatures`` are the buckets
     the already-in-flight groups occupy this tick — a launch whose
     signature is in that set rides an existing launch for free.
     ``ticks_to_finish`` is the conservative number of ticks a freshly
     launched group needs to complete (``ceil(T / slice_steps) + 1``, the
-    fork boundary can cost one extra segment).
+    fork boundary can cost one extra segment; under mixed tiers the
+    scheduler reports the max over the step budgets present, so a hold is
+    deadline-safe for every tier).
     """
     now: float
     tick: int
@@ -336,8 +350,11 @@ class AdmissionPolicy(Protocol):
     """Per-request admission verdict: ``"admit"`` (serve normally),
     ``"shed"`` (reject now, accounted — a ``Completed`` record with
     ``status="shed"``), or ``"degrade"`` (admit at draft quality: the
-    group is forced to the maximum share bucket, trading per-member
-    refinement steps for NFE — completions carry ``status="degraded"``).
+    request is downgraded to the scheduler's ``degrade_tier`` step
+    budget — fewer total sampler steps, and the degraded group still
+    CO-PACKS with full-quality launches via per-row grids instead of
+    being forced into its own beta compartment — completions carry
+    ``status="degraded"``).
     """
 
     name: str
@@ -368,8 +385,9 @@ class SaturationAdmission:
 
     ``mode`` picks the refusal: ``"shed"`` rejects outright (cheapest,
     an accounted ``status="shed"`` completion), ``"degrade"`` admits at
-    draft NFE (the group launches at the maximum share bucket — more
-    trunk, fewer per-member branch evals, ``status="degraded"``).
+    draft NFE (a tier downgrade to the scheduler's ``degrade_tier``
+    step budget; the degraded group co-packs with standard launches,
+    ``status="degraded"``).
     """
 
     name = "saturation"

@@ -72,6 +72,35 @@ With faults off, preemption off (or no capacity cap) and a single QoS
 class, all of this reduces to the PR-5 tick loop exactly — the
 conformance goldens are byte-stable against it.
 
+Heterogeneous workloads (multi-resolution / quality tiers / mixed
+samplers) ride the same tick loop — each axis is per-REQUEST at
+``submit()`` and per-GROUP everywhere downstream:
+
+* **shape** — ``submit(shape=(H, W, C))`` picks any patch-divisible
+  latent geometry up to the trained grid (aspect buckets included);
+  groups never mix shapes, so a hetero tick launches one stacked call
+  per shape bucket with per-bucket pads, and the trunk cache/telemetry
+  key on the group's own shape (``summary()`` reports per-shape launch
+  and pad ledgers);
+* **tier** — ``submit(tier=...)`` maps to a total step budget via the
+  ``tiers`` table (draft/standard/premium by default).  The budget is
+  per-row DATA, not a pack axis: rows gather timesteps from their own
+  group's DDIM grid (``packing.pack_grid``), so draft and premium
+  groups co-pack whenever segment lengths line up.  Overload
+  ``degrade`` admission is a tier downgrade onto this mechanism
+  (``degrade_tier``), NOT a forced beta compartment — degraded groups
+  share launches with clean traffic;
+* **sampler** — ``submit(sampler=...)`` picks ddim/dpmpp per request;
+  groups never mix solvers, and with ``mix_samplers=True`` packs do:
+  rows dispatch per-solver inside one stacked launch
+  (``shared_sampling`` row dispatch; the PackKey sampler axis collapses
+  to ``"*"``).
+
+All of it stays bitwise-invisible: the ``packed=False`` per-group loop
+remains the oracle for ANY hetero mix, and a homogeneous workload runs
+the exact pre-hetero graph (1-D grid, scalar sampler, full-square
+positional table).
+
 The synchronous engine is literally a special case: :meth:`run_batch`
 drains one prompt list through greedy-clique grouping and phase-aligned
 packed segments (ONE stacked launch per phase per tick across all beta
@@ -101,6 +130,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass
+from dataclasses import replace as dc_replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -118,7 +148,8 @@ from repro.models import dit, vae as vae_lib
 from repro.models import text_encoder as te
 from repro.serving import packing
 from repro.serving.faults import FaultPlan
-from repro.serving.policies import (DEGRADE, DEFAULT_QOS, QOS_RANK, SHED,
+from repro.serving.policies import (DEGRADE, DEFAULT_QOS, DEFAULT_TIER,
+                                    QOS_RANK, SHED,
                                     AdmissionContext, AdmissionPolicy,
                                     LaunchContext, LaunchPolicy,
                                     make_admission_policy, make_launch_order,
@@ -139,6 +170,7 @@ class Completed:
     latency: float = 0.0          # completion time - arrival time
     cache_hit: bool = False       # trunk came from the cross-batch cache
     qos: str = DEFAULT_QOS
+    tier: str = DEFAULT_TIER      # quality tier the request ran at
     status: str = "ok"            # ok | degraded | shed | rejected_expired
 
 
@@ -152,6 +184,9 @@ class Request:
     pooled: np.ndarray            # (d,) pooled embedding (similarity space)
     qos: str = DEFAULT_QOS
     degraded: bool = False        # admitted at draft quality (overload)
+    shape: Tuple[int, ...] = ()   # requested latent (H, W, C)
+    tier: str = DEFAULT_TIER      # quality tier (total-step budget name)
+    sampler: str = ""             # requested solver (ddim | dpmpp)
 
 
 @dataclass
@@ -174,7 +209,11 @@ class _Group:
     nfe: float = 0.0
     t_launch: float = 0.0
     qos: str = DEFAULT_QOS        # members never mix classes
-    degraded: bool = False        # draft-NFE admission (max share bucket)
+    degraded: bool = False        # any member admitted via tier downgrade
+    shape: Tuple[int, ...] = ()   # latent (H, W, C) — members never mix
+    tier: str = DEFAULT_TIER      # quality tier — members never mix
+    sampler: str = "ddim"         # solver — members never mix
+    total_steps: int = 0          # the tier's step budget (own DDIM grid)
     retries: int = 0              # consecutive failed segment launches
     next_try_tick: int = 0        # backoff gate: skip advance before this
     starved_ticks: int = 0        # consecutive ticks skipped by selection
@@ -215,6 +254,9 @@ class RequestScheduler:
                  max_retries: int = 3,
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None,
+                 tiers: Optional[Dict[str, int]] = None,
+                 degrade_tier: str = "draft",
+                 mix_samplers: bool = False,
                  seed: int = 0):
         """``group_size`` is the packed width N (static sampler shape);
         ``group_max`` caps clique size during batch grouping and defaults
@@ -243,6 +285,16 @@ class RequestScheduler:
         a :class:`~repro.serving.faults.FaultPlan` for chaos testing and
         ``max_retries`` bounds per-group launch retries before the
         shed escape hatch.
+
+        Hetero knobs: ``tiers`` maps quality-tier names to total step
+        budgets (default ``draft`` = T//2, ``standard`` = T,
+        ``premium`` = T + T//2, with T = ``sage.total_steps``; a
+        ``"standard"`` entry is always present — it is the ``submit``
+        default and the ``run_batch`` tier); ``degrade_tier`` is the
+        tier overload ``degrade`` admission downgrades requests to;
+        ``mix_samplers=True`` lets packs mix ddim/dpmpp rows in one
+        launch (default off: one launch per solver per tick).  Latent
+        shape and sampler are per-request ``submit`` arguments.
 
         Observability: ``tracer`` receives lifecycle/phase spans
         (``None`` disables tracing at zero cost); ``metrics`` is the
@@ -283,6 +335,22 @@ class RequestScheduler:
                 f"starvation_ticks must be >= 1, got {starvation_ticks}")
         self.starvation_ticks = starvation_ticks
         self.admission = make_admission_policy(admission)
+        T = sage.total_steps
+        self.tiers: Dict[str, int] = (dict(tiers) if tiers is not None
+                                      else {"draft": max(1, T // 2),
+                                            "standard": T,
+                                            "premium": T + max(1, T // 2)})
+        self.tiers.setdefault("standard", T)
+        for name, steps in self.tiers.items():
+            if int(steps) < 1:
+                raise ValueError(
+                    f"tiers[{name!r}] must be >= 1 steps, got {steps}")
+            self.tiers[name] = int(steps)
+        if degrade_tier not in self.tiers:
+            raise ValueError(f"degrade_tier {degrade_tier!r} not in tiers "
+                             f"{sorted(self.tiers)}")
+        self.degrade_tier = degrade_tier
+        self.mix_samplers = bool(mix_samplers)
         self.faults = faults
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
@@ -330,6 +398,15 @@ class RequestScheduler:
         self.class_latencies: Dict[str, "deque[float]"] = {}
         self.metrics.attach_nested("scheduler_class", self.class_stats,
                                    "qos")
+        # per-tier NFE/outcome ledger and per-shape-bucket launch ledger
+        # (the hetero observability: which step budget burned the NFE,
+        # which geometry bucket owned the launches and the pad rows)
+        self.tier_stats: Dict[str, Dict[str, float]] = {}
+        self.metrics.attach_nested("scheduler_tier", self.tier_stats,
+                                   "tier")
+        self.shape_stats: Dict[str, Dict[str, float]] = {}
+        self.metrics.attach_nested("scheduler_shape", self.shape_stats,
+                                   "shape")
         self.metrics.gauge("scheduler_ticks", lambda: self.ticks)
         self.metrics.gauge("scheduler_pending", lambda: self.pending)
         self.metrics.gauge("scheduler_arrival_rate",
@@ -393,18 +470,25 @@ class RequestScheduler:
 
     @property
     def _latent_shape(self) -> Tuple[int, int, int]:
+        """The DEFAULT latent geometry (full square trained grid) — the
+        shape a request gets when ``submit`` is not given one.  Every
+        execution site keys on the GROUP's own ``g.shape``; this property
+        only seeds defaults."""
         H = self.cfg.latent_size
         return (H, H, self.cfg.latent_channels)
 
     def _null_cond(self):
         return jnp.zeros((self.cfg.cond_len, self.cfg.cond_dim))
 
-    def _cfg_key(self):
+    def _cfg_key(self, g: "_Group"):
         """Everything (besides the centroid/beta/shape) that must match for
-        a cached trunk to be reusable.  Params are not hashed: the cache
-        lives inside one scheduler, whose params are fixed."""
+        a cached trunk to be reusable — per GROUP now: the group's own
+        sampler and step budget ride the key, so a draft-tier or dpmpp
+        trunk can never serve a premium/ddim group.  Params are not
+        hashed: the cache lives inside one scheduler, whose params are
+        fixed."""
         s, c = self.sage, self.cfg
-        return (c.name, c.attn_impl, s.sampler, s.step_impl, s.total_steps,
+        return (c.name, c.attn_impl, g.sampler, s.step_impl, g.total_steps,
                 round(s.guidance_scale, 6), round(s.clip_x0, 6),
                 s.shared_uncond_cfg, self.sched.T)
 
@@ -413,27 +497,38 @@ class RequestScheduler:
         params, cfg = self.dit_params, self.cfg
         return lambda z, t, c: dit.forward(params, cfg, z, t, c)
 
-    def _shared_runner(self, n_steps: int):
-        key = ("shared", n_steps)
+    def _runner_cfg(self, samplers):
+        """Resolve a runner's sampler spec: a solver NAME (uniform pack —
+        the scalar path, graph-identical to pre-hetero) or a per-row
+        tuple (mixed pack — ``row_samplers`` dispatch)."""
+        if isinstance(samplers, str):
+            return dc_replace(self.sage, sampler=samplers), None
+        return self.sage, tuple(samplers)
+
+    def _shared_runner(self, n_steps: int, samplers):
+        key = ("shared", n_steps, samplers)
         if key not in self._runners:
-            eps_fn, sched, sage = self._eps_fn(), self.sched, self.sage
+            eps_fn, sched = self._eps_fn(), self.sched
+            sage, rs = self._runner_cfg(samplers)
 
             @jax.jit
-            def run(carry, cbar, null):
+            def run(carry, cbar, null, grid):
                 return shared_phase(eps_fn, sched, sage, carry, cbar, null,
-                                    n_steps)
+                                    n_steps, grid=grid, row_samplers=rs)
             self._runners[key] = run
         return self._runners[key]
 
-    def _branch_runner(self, n_steps: int):
-        key = ("branch", n_steps)
+    def _branch_runner(self, n_steps: int, samplers):
+        key = ("branch", n_steps, samplers)
         if key not in self._runners:
-            eps_fn, sched, sage = self._eps_fn(), self.sched, self.sage
+            eps_fn, sched = self._eps_fn(), self.sched
+            sage, rs = self._runner_cfg(samplers)
 
             @jax.jit
-            def run(carry, cond_flat, mask, null, fork_idx):
+            def run(carry, cond_flat, mask, null, fork_idx, grid):
                 return branch_phase(eps_fn, sched, sage, carry, cond_flat,
-                                    mask, null, n_steps, fork_idx)
+                                    mask, null, n_steps, fork_idx,
+                                    grid=grid, row_samplers=rs)
             self._runners[key] = run
         return self._runners[key]
 
@@ -442,35 +537,96 @@ class RequestScheduler:
     def _now(now: Optional[float]) -> float:
         return time.monotonic() if now is None else float(now)
 
+    def _check_shape(self, shape) -> Tuple[int, int, int]:
+        """Validate a requested latent geometry: 3-tuple, the model's
+        channel count, patch-divisible spatial dims within the trained
+        positional grid (the DiT windows its pos table down — it cannot
+        extrapolate up)."""
+        shp = tuple(int(x) for x in shape)
+        if len(shp) != 3:
+            raise ValueError(f"shape must be (H, W, C), got {shape!r}")
+        H, W, C = shp
+        if C != self.cfg.latent_channels:
+            raise ValueError(f"shape channels {C} != model latent_channels "
+                             f"{self.cfg.latent_channels}")
+        p, top = self.cfg.patch, self.cfg.latent_size
+        if H < 1 or W < 1 or H % p or W % p:
+            raise ValueError(f"shape ({H},{W}) must be positive multiples "
+                             f"of patch {p}")
+        if H > top or W > top:
+            raise ValueError(f"shape ({H},{W}) exceeds the trained grid "
+                             f"{top}x{top}")
+        return shp
+
+    @staticmethod
+    def _per_request(val, default, n: int, name: str) -> List:
+        """Broadcast a scalar-for-batch submit argument or validate a
+        per-prompt sequence of length n."""
+        if val is None:
+            return [default] * n
+        if isinstance(val, str) or (isinstance(val, tuple)
+                                    and val and not isinstance(val[0],
+                                                               (tuple, list))):
+            return [val] * n
+        vals = list(val)
+        if len(vals) != n:
+            raise ValueError(f"{name} sequence length {len(vals)} != "
+                             f"{n} prompts")
+        return vals
+
     def submit(self, prompts: Sequence[str], now: Optional[float] = None,
                deadline: Optional[float] = None,
-               qos: Union[str, Sequence[str]] = DEFAULT_QOS) -> List[int]:
+               qos: Union[str, Sequence[str]] = DEFAULT_QOS,
+               shape=None, tier=None, sampler=None) -> List[int]:
         """Queue prompts (one text-tower call per submit batch); they are
         grouped at the next tick.  ``qos`` is one class for the whole
         batch or a per-prompt sequence (``"interactive"`` | ``"batch"``).
+        ``shape`` / ``tier`` / ``sampler`` are the hetero axes — each one
+        value for the whole batch or a per-prompt sequence: ``shape`` a
+        patch-divisible (H, W, C) up to the trained grid (default the
+        full square), ``tier`` a ``tiers`` name mapping to the total step
+        budget (default ``"standard"``), ``sampler`` ``"ddim"`` |
+        ``"dpmpp"`` (default ``sage.sampler``).  Requests only group with
+        compartment-mates (same qos AND shape AND tier AND sampler).
         Returns request ids."""
         if not prompts:
             return []
         now = self._now(now)
-        qs = [qos] * len(prompts) if isinstance(qos, str) else list(qos)
-        if len(qs) != len(prompts):
-            raise ValueError(f"qos sequence length {len(qs)} != "
-                             f"{len(prompts)} prompts")
+        n = len(prompts)
+        qs = self._per_request(qos, DEFAULT_QOS, n, "qos")
         for q in qs:
             if q not in QOS_RANK:
                 raise ValueError(f"unknown qos class {q!r}; "
                                  f"have {sorted(QOS_RANK)}")
+        shapes = [self._check_shape(s) for s in self._per_request(
+            tuple(shape) if isinstance(shape, (tuple, list)) else shape,
+            self._latent_shape, n, "shape")]
+        tiers = self._per_request(tier, DEFAULT_TIER, n, "tier")
+        for t in tiers:
+            if t not in self.tiers:
+                raise ValueError(f"unknown tier {t!r}; "
+                                 f"have {sorted(self.tiers)}")
+        samplers = self._per_request(sampler, self.sage.sampler, n,
+                                     "sampler")
+        for s in samplers:
+            if s not in ("ddim", "dpmpp"):
+                raise ValueError(f"unknown sampler {s!r}; "
+                                 f"have ['ddim', 'dpmpp']")
         conds, pooled = self._embed(prompts)
         rids = []
         tr = self.tracer
-        for p, c, e, q in zip(prompts, conds, pooled, qs):
-            r = Request(self._next_rid, p, now, deadline, c, e, qos=q)
+        for p, c, e, q, shp, t, smp in zip(prompts, conds, pooled, qs,
+                                           shapes, tiers, samplers):
+            r = Request(self._next_rid, p, now, deadline, c, e, qos=q,
+                        shape=shp, tier=t, sampler=smp)
             self._next_rid += 1
             self.arrivals.append(r)
             rids.append(r.rid)
             if tr is not None:
                 tr.instant("request.submit", now, pid=PID_REQUESTS,
-                           tid=r.rid, qos=q, deadline=deadline)
+                           tid=r.rid, qos=q, deadline=deadline,
+                           shape="x".join(map(str, shp)), tier=t,
+                           sampler=smp)
         self.stats["requests"] += len(prompts)
         self._arrivals_since_tick += len(prompts)
         return rids
@@ -483,6 +639,11 @@ class RequestScheduler:
                   "deadline_met": 0, "deadline_missed": 0})
         d[key] = d.get(key, 0) + inc
 
+    def _tstat(self, tier: str, key: str, inc: float = 1) -> None:
+        d = self.tier_stats.setdefault(
+            tier, {"requests": 0, "completed": 0, "nfe": 0.0})
+        d[key] = d.get(key, 0) + inc
+
     def _refuse(self, r: Request, status: str,
                 now: float = 0.0) -> Completed:
         """An accounted non-service outcome (shed / rejected_expired):
@@ -491,17 +652,19 @@ class RequestScheduler:
         self.stats[status] += 1
         self._cstat(r.qos, "requests")
         self._cstat(r.qos, status)
+        self._tstat(r.tier, "requests")
         if self.tracer is not None:
             self.tracer.instant(f"request.{status}", now,
                                 pid=PID_REQUESTS, tid=r.rid, qos=r.qos)
         return Completed(prompt=r.prompt, image=None, group_id=-1,
                          nfe_share=0.0, latency=0.0, qos=r.qos,
-                         status=status)
+                         tier=r.tier, status=status)
 
     def _remaining_ticks(self, g: _Group) -> int:
         """Conservative advance-ticks left for an in-flight group: one
-        segment per tick plus one for the shared->branch boundary."""
-        rem = self.sage.total_steps - g.steps_done
+        segment per tick plus one for the shared->branch boundary (the
+        group's own tier budget, not the deployment default)."""
+        rem = g.total_steps - g.steps_done
         return -(-rem // self.slice_steps) + (1 if g.state == "shared"
                                               else 0)
 
@@ -513,7 +676,8 @@ class RequestScheduler:
         the longest remaining group."""
         ttf = self._ticks_to_finish()
         loads = [self._remaining_ticks(g) for g in self.inflight]
-        loads += [ttf] * len(self.open_groups)
+        loads += [self._ticks_to_finish(g.total_steps)
+                  for g in self.open_groups]
         if not loads:
             return 0.0
         if self.max_groups_per_tick is None:
@@ -523,9 +687,12 @@ class RequestScheduler:
     def _admit(self, now: float) -> List[Completed]:
         """Admission: expired-deadline rejection and the overload policy
         first, then class-compartmented incremental grouping (a request
-        only joins an open group of its own (qos, degraded) compartment —
-        mixing would let a batch member drag an interactive group or an
-        admitted-at-draft member degrade full-quality neighbours).
+        only joins an open group of its own (qos, tier, shape, sampler)
+        compartment — mixing qos would let a batch member drag an
+        interactive group; mixing tiers/shapes/samplers inside a *group*
+        is impossible because members share one trunk).  A DEGRADE
+        verdict is a tier downgrade (to ``degrade_tier``): the request
+        then groups — and packs — with native requests of that tier.
         Returns the refusal records for this tick."""
         notices: List[Completed] = []
         if not self.arrivals:
@@ -558,25 +725,33 @@ class RequestScheduler:
                 continue
             if verdict == DEGRADE:
                 r.degraded = True
+                r.tier = self.degrade_tier
             self._cstat(r.qos, "requests")
+            self._tstat(r.tier, "requests")
             if tr is not None:
                 tr.instant("request.admit", now, pid=PID_REQUESTS,
-                           tid=r.rid, qos=r.qos, degraded=r.degraded)
+                           tid=r.rid, qos=r.qos, degraded=r.degraded,
+                           tier=r.tier)
             cand = [i for i, g in enumerate(self.open_groups)
-                    if g.qos == r.qos and g.degraded == r.degraded]
+                    if g.qos == r.qos and g.tier == r.tier
+                    and g.shape == r.shape and g.sampler == r.sampler]
             gi = grouping.incremental_assign(
                 r.pooled, [open_embeds[i] for i in cand],
                 self.sage.tau_min, group_max=self.group_size)
             if gi >= 0:
                 i = cand[gi]
                 self.open_groups[i].members.append(r)
+                self.open_groups[i].degraded = (
+                    self.open_groups[i].degraded or r.degraded)
                 open_embeds[i] = np.concatenate(
                     [open_embeds[i], r.pooled[None]], 0)
                 gid, seeded = self.open_groups[i].gid, False
             else:
                 self.open_groups.append(
                     _Group(self._next_gid, [r], created_tick=self.ticks,
-                           t_open=now, qos=r.qos, degraded=r.degraded))
+                           t_open=now, qos=r.qos, degraded=r.degraded,
+                           shape=r.shape, tier=r.tier, sampler=r.sampler,
+                           total_steps=self.tiers[r.tier]))
                 self._next_gid += 1
                 open_embeds.append(np.asarray(r.pooled)[None])
                 backlog += per_group     # each seeded group deepens the
@@ -617,16 +792,17 @@ class RequestScheduler:
             self._min_sim(grouping.similarity_matrix(e)), adaptive)
 
     def _effective_beta(self, g: _Group, adaptive: bool) -> float:
-        """The bucket a group actually runs at: degraded admission forces
-        the maximum share bucket (draft NFE — longest shared trunk,
-        fewest per-member branch evals), otherwise the similarity rule."""
-        if g.degraded:
-            return max(self.branch_buckets)
+        """The bucket a group actually runs at — the similarity rule,
+        nothing else.  Degraded admission used to force the maximum
+        share bucket here, which pushed degraded groups into their own
+        pack compartment (distinct phase boundaries) even though beta is
+        not a pack axis; the NFE saving now comes from the *tier* step
+        budget instead, so degraded groups co-pack with native ones."""
         return self._group_beta(g.members, adaptive)
 
     def _launch(self, g: _Group, now: float, adaptive: bool,
                 beta: Optional[float] = None) -> None:
-        T = self.sage.total_steps
+        T = g.total_steps
         g.beta = self._effective_beta(g, adaptive) if beta is None \
             else beta
         g.n_shared, _ = phase_split(T, g.beta)
@@ -653,7 +829,7 @@ class RequestScheduler:
             cs = self.trunk_cache.stats
             pre = (cs["exact_hits"], cs["hits_host"])
             entry = self.trunk_cache.lookup(
-                g.centroid, g.beta, self._cfg_key(), self._latent_shape,
+                g.centroid, g.beta, self._cfg_key(g), g.shape,
                 payload="trunk")
             if tr is not None:
                 # classify the lookup from the cache's own counters
@@ -682,7 +858,7 @@ class RequestScheduler:
             self.stats["nfe_saved_cache"] += shared_phase_nfe(1, g.n_shared)
         else:
             rng = jax.random.fold_in(self._launch_key, g.gid)
-            g.carry = init_carry(rng, 1, self._latent_shape)
+            g.carry = init_carry(rng, 1, g.shape)
             if g.n_shared == 0:
                 g.carry = fork_carry(g.carry, N)
                 g.state = "branch"
@@ -702,8 +878,8 @@ class RequestScheduler:
         stored = self.trunk_cache.insert(TrunkEntry(
             z=g.carry.z, eps_prev=g.carry.eps_prev, step_idx=g.n_shared,
             beta_bucket=g.beta, rng_fold=g.gid, centroid=g.centroid,
-            cfg_key=self._cfg_key(), payload="trunk"),
-            shape=self._latent_shape)
+            cfg_key=self._cfg_key(g), payload="trunk"),
+            shape=g.shape)
         if self.tracer is not None:
             self.tracer.instant("cache.store", self._tick_now,
                                 pid=PID_GROUPS, tid=g.gid,
@@ -711,7 +887,7 @@ class RequestScheduler:
 
     def _count_launch(self, rows: int, pad_rows: int,
                       phase: str = "", n_steps: int = 0,
-                      groups: int = 1) -> None:
+                      groups: int = 1, shape=None) -> None:
         """THE segment-launch choke point: every denoiser dispatch —
         packed bucket or per-group — lands here exactly once, so the
         stats ledger and the trace's ``phase.*`` launch spans can never
@@ -719,10 +895,18 @@ class RequestScheduler:
         self.stats["launches"] += 1
         self.stats["pack_rows"] += rows
         self.stats["pack_pad_rows"] += pad_rows
+        skey = "x".join(map(str, shape)) if shape else None
+        if skey is not None:
+            d = self.shape_stats.setdefault(
+                skey, {"launches": 0, "rows": 0, "pad_rows": 0})
+            d["launches"] += 1
+            d["rows"] += rows
+            d["pad_rows"] += pad_rows
         if self.tracer is not None and phase:
+            kw = {"shape": skey} if skey is not None else {}
             self.tracer.launch_span(f"phase.{phase}", rows=rows,
                                     pad_rows=pad_rows, n_steps=n_steps,
-                                    groups=groups)
+                                    groups=groups, **kw)
 
     def _after_segment(self, g: _Group, s: int) -> None:
         """Post-advance accounting + phase transitions, shared by the
@@ -743,7 +927,7 @@ class RequestScheduler:
         else:
             g.nfe += float(branch_phase_nfe(g.mask, s,
                                             self.sage.shared_uncond_cfg))
-            if g.steps_done == self.sage.total_steps:
+            if g.steps_done == g.total_steps:
                 g.state = "done"
 
     def _advance(self, g: _Group) -> bool:
@@ -755,16 +939,20 @@ class RequestScheduler:
             self.stats["launch_faults"] += 1
             return False
         null = self._null_cond()
+        grid = packing.pack_grid([g], self.sched.T)
         if g.state == "shared":
             s = min(self.slice_steps, g.n_shared - g.steps_done)
-            g.carry = self._shared_runner(s)(g.carry, g.cbar, null)
-            self._count_launch(1, 0, phase="shared", n_steps=s)
+            g.carry = self._shared_runner(s, g.sampler)(
+                g.carry, g.cbar, null, grid)
+            self._count_launch(1, 0, phase="shared", n_steps=s,
+                               shape=g.shape)
         else:
-            s = min(self.slice_steps, self.sage.total_steps - g.steps_done)
-            g.carry = self._branch_runner(s)(
-                g.carry, g.cond_flat, g.mask, null, jnp.int32(g.n_shared))
+            s = min(self.slice_steps, g.total_steps - g.steps_done)
+            g.carry = self._branch_runner(s, g.sampler)(
+                g.carry, g.cond_flat, g.mask, null, jnp.int32(g.n_shared),
+                grid)
             self._count_launch(len(g.members), 0, phase="branch",
-                               n_steps=s)
+                               n_steps=s, shape=g.shape)
         self._after_segment(g, s)
         g.retries = 0
         return True
@@ -796,8 +984,7 @@ class RequestScheduler:
         failed: List[_Group] = []
         for key, groups in packing.build_packs(
                 todo, self.slice_steps if slice_steps is None else
-                slice_steps, self.sage.total_steps,
-                self.sage.sampler, self._latent_shape,
+                slice_steps, mix_samplers=self.mix_samplers,
                 align_phases=align_phases, order_key=self.launch_order):
             s = key.n_steps
             if self.faults is not None and self.faults.launch_fails():
@@ -810,18 +997,29 @@ class RequestScheduler:
                 continue
             if key.phase == "shared":
                 carry, cbar = packing.pack_shared(groups)
-                out = self._shared_runner(s)(carry, cbar, null)
+                rs = packing.pack_samplers(groups)
+                samplers = rs if rs is not None else groups[0].sampler
+                grid = packing.pack_grid(groups, self.sched.T)
+                out = self._shared_runner(s, samplers)(carry, cbar, null,
+                                                       grid)
                 packing.unpack_shared(out, groups)
                 self._count_launch(len(groups), 0, phase="shared",
-                                   n_steps=s, groups=len(groups))
+                                   n_steps=s, groups=len(groups),
+                                   shape=key.shape)
             else:
                 carry, cond, mask, fork = packing.pack_branch(
                     groups, self.group_size)
-                out = self._branch_runner(s)(carry, cond, mask, null, fork)
+                rs = packing.pack_samplers(groups, self.group_size)
+                samplers = rs if rs is not None else groups[0].sampler
+                grid = packing.pack_grid(groups, self.sched.T,
+                                         self.group_size)
+                out = self._branch_runner(s, samplers)(carry, cond, mask,
+                                                       null, fork, grid)
                 packing.unpack_branch(out, groups, self.group_size)
                 rows, pads = packing.pad_stats(groups, self.group_size)
                 self._count_launch(rows, pads, phase="branch",
-                                   n_steps=s, groups=len(groups))
+                                   n_steps=s, groups=len(groups),
+                                   shape=key.shape)
             for g in groups:
                 seg_len[g.gid] = s
         for g in todo:
@@ -862,7 +1060,7 @@ class RequestScheduler:
                 out.append(Completed(
                     prompt=r.prompt, image=None, group_id=g.gid,
                     nfe_share=0.0, latency=now - r.t_arrival, qos=r.qos,
-                    status="shed"))
+                    tier=r.tier, status="shed"))
         return out
 
     def _decode(self, latents: jnp.ndarray) -> np.ndarray:
@@ -876,15 +1074,19 @@ class RequestScheduler:
         imgs = self._decode(g.carry.z)
         self.stats["nfe"] += g.nfe
         self.stats["completed"] += len(g.members)
-        status = "degraded" if g.degraded else "ok"
         tr = self.tracer
         done = []
         for i, r in enumerate(g.members):
+            # per-REQUEST status: a degraded (tier-downgraded) request
+            # may co-group with native draft-tier traffic, which stays
+            # plain "ok" — degradation is an admission outcome, not a
+            # property of the group it happened to land in
+            status = "degraded" if r.degraded else "ok"
             lat = now - r.t_arrival if record_latency else 0.0
             if tr is not None:
                 tr.span("request.complete", r.t_arrival, lat,
                         pid=PID_REQUESTS, tid=r.rid, gid=g.gid,
-                        qos=r.qos, status=status,
+                        qos=r.qos, status=status, tier=r.tier,
                         cache_hit=g.cache_hit)
             if record_latency:
                 self._h_latency.observe(lat)
@@ -894,7 +1096,9 @@ class RequestScheduler:
                 self.class_latencies.setdefault(
                     r.qos, deque(maxlen=self._stat_window)).append(lat)
                 self._cstat(r.qos, "completed")
-                if g.degraded:
+                self._tstat(r.tier, "completed")
+                self._tstat(r.tier, "nfe", g.nfe / len(g.members))
+                if r.degraded:
                     self.stats["degraded"] += 1
                     self._cstat(r.qos, "degraded")
                 met = r.deadline is None or now <= r.deadline
@@ -904,35 +1108,42 @@ class RequestScheduler:
             done.append(Completed(
                 prompt=r.prompt, image=imgs[i], group_id=g.gid,
                 nfe_share=g.nfe / len(g.members), latency=lat,
-                cache_hit=g.cache_hit, qos=r.qos, status=status))
+                cache_hit=g.cache_hit, qos=r.qos, tier=r.tier,
+                status=status))
         return done
 
     # -- launch-policy context -------------------------------------------
-    def _ticks_to_finish(self) -> int:
+    def _ticks_to_finish(self, total_steps: Optional[int] = None) -> int:
         """Conservative ticks a freshly launched group needs to complete:
-        one segment per tick, plus one for the shared->branch boundary."""
-        return -(-self.sage.total_steps // self.slice_steps) + 1
+        one segment per tick, plus one for the shared->branch boundary.
+        ``total_steps`` defaults to the deployment (standard-tier) budget;
+        pass a group's own tier budget for per-group estimates."""
+        t = self.sage.total_steps if total_steps is None else total_steps
+        return -(-t // self.slice_steps) + 1
 
     def _open_signature(self, g: _Group, adaptive: bool) -> packing.PackKey:
         """The pack bucket an OPEN group would occupy if launched this
         tick (``policies.LaunchContext.signature_of``)."""
-        n_shared, _ = phase_split(self.sage.total_steps,
+        n_shared, _ = phase_split(g.total_steps,
                                   self._effective_beta(g, adaptive))
-        limit = n_shared if n_shared > 0 else self.sage.total_steps
+        limit = n_shared if n_shared > 0 else g.total_steps
         return packing.PackKey(
-            "shared" if n_shared > 0 else "branch", self.sage.sampler,
-            tuple(self._latent_shape), min(self.slice_steps, limit))
+            "shared" if n_shared > 0 else "branch",
+            packing.MIXED if self.mix_samplers else g.sampler,
+            tuple(g.shape), min(self.slice_steps, limit))
 
     def _launch_context(self, now: float, adaptive: bool) -> LaunchContext:
+        ttf = max([self._ticks_to_finish()]
+                  + [self._ticks_to_finish(g.total_steps)
+                     for g in self.open_groups])
         return LaunchContext(
             now=now, tick=self.ticks, group_size=self.group_size,
             max_wait_ticks=self.max_wait_ticks,
             deadline_slack=self.deadline_slack,
-            ticks_to_finish=self._ticks_to_finish(),
+            ticks_to_finish=ttf,
             inflight_signatures=frozenset(
-                packing.pack_signature(
-                    g, self.slice_steps, self.sage.total_steps,
-                    self.sage.sampler, self._latent_shape)
+                packing.pack_signature(g, self.slice_steps,
+                                       self.mix_samplers)
                 for g in self.inflight),
             signature_of=lambda g: self._open_signature(g, adaptive),
             arrival_rate=self._arrival_rate)
@@ -1178,12 +1389,17 @@ class RequestScheduler:
                                                    self.group_size):
                     members = []
                     for m in row:
-                        members.append(Request(self._next_rid, prompts[m],
-                                               now, None, conds[m],
-                                               pooled[m]))
+                        members.append(Request(
+                            self._next_rid, prompts[m], now, None,
+                            conds[m], pooled[m],
+                            shape=tuple(self._latent_shape),
+                            tier="standard", sampler=self.sage.sampler))
                         self._next_rid += 1
                     g = _Group(self._next_gid, members,
-                               created_tick=self.ticks)
+                               created_tick=self.ticks,
+                               shape=tuple(self._latent_shape),
+                               tier="standard", sampler=self.sage.sampler,
+                               total_steps=self.tiers["standard"])
                     self._next_gid += 1
                     self.open_groups.append(g)
                     self._launch(g, now, adaptive, beta=beta)
@@ -1271,6 +1487,14 @@ class RequestScheduler:
                                        if a.size else 0.0)
             out[f"{q}_latency_p95"] = (float(np.percentile(a, 95))
                                        if a.size else 0.0)
+        # hetero rollups (additive keys — homogeneous runs emit exactly
+        # one tier and one shape bucket)
+        for t, ts in sorted(self.tier_stats.items()):
+            for k, v in sorted(ts.items()):
+                out[f"tier_{t}_{k}"] = v
+        for s, ss in sorted(self.shape_stats.items()):
+            for k, v in sorted(ss.items()):
+                out[f"shape_{s}_{k}"] = v
         if self.trunk_cache is not None:
             # hit accounting is policy-visible: exact-key hits and
             # admission rejections surface next to the hit rate so a

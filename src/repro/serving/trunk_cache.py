@@ -17,7 +17,12 @@ kind of approximation as the paper's within-group sharing, governed by the
 same similarity-threshold logic, so ``tau_trunk`` should sit well above
 ``tau_min``.  Hits additionally require an exact match of everything else
 that shapes the trunk: sampler config, schedule bucket (beta), latent
-shape and *payload type* are all part of the compatibility key.  (The RNG
+shape and *payload type* are all part of the compatibility key.  Under
+heterogeneous serving these are *per-group* attributes, not engine
+globals — the scheduler's cfg_key bakes each group's own sampler and
+tier step budget, and the shape key is the group's own latent shape, so
+a draft-tier dpmpp thumbnail can never satisfy a premium ddim hi-res
+lookup however close their centroids sit.  (The RNG
 fold that drew the trunk's init noise is stored as provenance metadata
 only — reusing a trunk deliberately replaces the hitting group's own
 noise stream.)

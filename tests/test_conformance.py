@@ -169,7 +169,9 @@ def _check_golden(case, fp):
     golden = json.loads(GOLDEN_PATH.read_text())
     assert case in golden, f"no golden entry for {case} — regenerate"
     want = golden[case]
-    assert fp["shape"] == want["shape"]
+    # "shape" for stacked homogeneous cases, "shapes" for ragged hetero
+    skey = "shape" if "shape" in fp else "shapes"
+    assert fp[skey] == want[skey]
     assert fp["dtype"] == want["dtype"]
     np.testing.assert_allclose(fp["first_k"], want["first_k"],
                                rtol=0, atol=1e-6)
@@ -235,6 +237,119 @@ def test_cache_interleave_lsh_matches_scan(sampler, step_impl):
         assert a.group_id == b.group_id and a.nfe_share == b.nfe_share
     assert sl.stats["nfe"] == ss.stats["nfe"]
     assert sl.stats["nfe_saved_cache"] == ss.stats["nfe_saved_cache"]
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous packs: shapes / tiers / mixed samplers
+# ---------------------------------------------------------------------------
+
+_C = CFG.latent_channels
+HETERO_SHAPES = [(8, 8, _C), (4, 4, _C), (4, 8, _C)]
+HETERO_TIERS = ["draft", "standard", "premium"]
+
+
+def _run_hetero(kind, sampler, step_impl, packed):
+    """The hetero conformance traces: six themed prompts submitted in one
+    wave with per-prompt hetero axes, drained by the streaming tick loop.
+
+    * ``hetero_shapes``       — requests cycle three latent geometries
+      (square full-res, square quarter, landscape half), one sampler;
+    * ``hetero_tiers``        — full-res requests cycle the three quality
+      tiers (total_steps 2 / 4 / 6 at T=4), one sampler;
+    * ``hetero_mixed_sampler``— full-res standard-tier requests alternate
+      ddim/dpmpp under ``mix_samplers=True``, so packed ticks run both
+      solvers inside single stacked launches (row-level dispatch).
+    """
+    sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                      tau_min=0.2, sampler=sampler, step_impl=step_impl)
+    # max_wait_ticks=0: every group (full or not) launches on its first
+    # tick, so same-bucket groups sit at aligned grid positions and the
+    # packed run demonstrably collapses launches (vs merely matching)
+    sched = RequestScheduler(
+        CFG, sage, PARAMS, TEXT_PARAMS, TC, group_size=3, slice_steps=2,
+        max_wait_ticks=0, packed=packed, seed=0,
+        mix_samplers=(kind == "hetero_mixed_sampler"))
+    # 12 prompts for the shape trace: 4 per shape -> >=2 groups per shape
+    # bucket (group_size=3), so packed ticks genuinely collapse same-shape
+    # launches instead of degenerating to one group per bucket
+    _, prompts = ShapesDataset(res=16).batch(
+        0, 12 if kind == "hetero_shapes" else 6)
+    kw = {}
+    if kind == "hetero_shapes":
+        kw["shape"] = [HETERO_SHAPES[i % 3] for i in range(len(prompts))]
+    elif kind == "hetero_tiers":
+        kw["tier"] = [HETERO_TIERS[i % 3] for i in range(len(prompts))]
+    elif kind == "hetero_mixed_sampler":
+        kw["sampler"] = [("ddim", "dpmpp")[i % 2]
+                         for i in range(len(prompts))]
+    else:
+        raise ValueError(kind)
+    sched.submit(prompts, now=0.0, **kw)
+    done, t = [], 0.0
+    while sched.pending:
+        t += 1.0
+        done.extend(sched.tick(now=t))
+    assert len(done) == len(prompts)
+    return sched, done
+
+
+def _fingerprint_ragged(done):
+    """Fingerprint over per-request images of HETEROGENEOUS shapes (no
+    ``np.stack``): sha over the concatenation of each image's bytes, the
+    per-image shape list, and the first-k values of the first image."""
+    h = hashlib.sha256()
+    for c in done:
+        h.update(np.ascontiguousarray(c.image).tobytes())
+    return {
+        "shapes": [list(c.image.shape) for c in done],
+        "dtype": str(done[0].image.dtype),
+        "sha256": h.hexdigest(),
+        "first_k": [float(v) for v in
+                    np.asarray(done[0].image).reshape(-1)[:FIRST_K]],
+    }
+
+
+HETERO_CASES = ([(k, s, i) for k in ("hetero_shapes", "hetero_tiers")
+                 for s, i in CASES]
+                + [("hetero_mixed_sampler", "ddim", i)
+                   for i in ("reference", "fused")])
+
+
+@pytest.mark.parametrize("kind,sampler,step_impl", HETERO_CASES)
+def test_hetero_packed_matches_per_group_bitwise(kind, sampler, step_impl):
+    """The hetero acceptance bar: multi-shape / multi-tier /
+    mixed-sampler packed ticks == the per-group oracle, exact."""
+    _skip_unavailable(step_impl)
+    sp, dp = _run_hetero(kind, sampler, step_impl, packed=True)
+    sg, dg = _run_hetero(kind, sampler, step_impl, packed=False)
+    assert [c.prompt for c in dp] == [c.prompt for c in dg]
+    for a, b in zip(dp, dg):
+        assert a.image.dtype == b.image.dtype
+        np.testing.assert_array_equal(a.image, b.image)
+        assert a.group_id == b.group_id and a.nfe_share == b.nfe_share
+        assert a.tier == b.tier
+    assert sp.stats["nfe"] == sg.stats["nfe"]
+    # the trace exercised heterogeneity: >1 bucket along the kind's axis
+    if kind == "hetero_shapes":
+        assert len(sp.shape_stats) == 3
+    elif kind == "hetero_tiers":
+        assert len(sp.tier_stats) == 3
+    else:
+        assert sp.mix_samplers
+    # packing still collapses launches under heterogeneity
+    assert sp.stats["launches"] < sg.stats["launches"]
+
+
+@pytest.mark.parametrize("kind,sampler,step_impl", HETERO_CASES)
+def test_hetero_golden_fingerprint(kind, sampler, step_impl):
+    """Hetero end-to-end outputs vs the committed fingerprints (CPU)."""
+    _skip_unavailable(step_impl)
+    if jax.default_backend() != "cpu":
+        pytest.skip("goldens were generated on the CPU backend")
+    _, done = _run_hetero(kind, sampler, step_impl, packed=True)
+    case = (f"{kind}-{step_impl}" if kind == "hetero_mixed_sampler"
+            else f"{kind}-{sampler}-{step_impl}")
+    _check_golden(case, _fingerprint_ragged(done))
 
 
 @pytest.mark.parametrize("sampler,step_impl", CASES)

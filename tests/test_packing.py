@@ -124,14 +124,18 @@ def test_dpmpp_rows_kernel_matches_single_launches():
 
 class _FakeGroup:
     def __init__(self, n_members, steps_done, n_shared, beta, state,
-                 key, width=None):
+                 key, width=None, shape=SHAPE, sampler="ddim",
+                 total_steps=6):
         rows = 1 if state == "shared" else n_members
         self.members = list(range(n_members))
         self.steps_done = steps_done
         self.n_shared = n_shared
         self.beta = beta
         self.state = state
-        z = jax.random.normal(key, (rows,) + SHAPE)
+        self.shape = shape
+        self.sampler = sampler
+        self.total_steps = total_steps
+        z = jax.random.normal(key, (rows,) + shape)
         self.carry = ss.SampleCarry(z, z * 0.5, jnp.int32(steps_done))
         self.cbar = jax.random.normal(key, (1, CFG.cond_len, CFG.cond_dim))
         self.cond_flat = jax.random.normal(
@@ -150,8 +154,7 @@ def test_pack_signature_and_build_packs():
         #   beta is per-row data (step/fork idx), NOT a pack axis, so this
         #   packs with gs[3] — one launch across beta buckets
     ]
-    packs = packing.build_packs(gs, slice_steps=4, total_steps=6,
-                                sampler="ddim", shape=SHAPE)
+    packs = packing.build_packs(gs, slice_steps=4)
     keyed = {key: groups for key, groups in packs}
     assert len(packs) == 3
     assert keyed[packing.PackKey("shared", "ddim", SHAPE, 2)] \
@@ -160,7 +163,7 @@ def test_pack_signature_and_build_packs():
     assert keyed[packing.PackKey("branch", "ddim", SHAPE, 4)] \
         == [gs[3], gs[4]]
     # segment length is clamped by steps remaining in the phase
-    assert packing.pack_signature(gs[1], 4, 6, "ddim", SHAPE).n_steps == 1
+    assert packing.pack_signature(gs[1], 4).n_steps == 1
 
 
 def test_build_packs_align_phases_one_bucket_per_phase():
@@ -174,9 +177,7 @@ def test_build_packs_align_phases_one_bucket_per_phase():
         _FakeGroup(2, 2, 2, 0.3, "branch", k),   # 4 branch steps left
         _FakeGroup(2, 3, 3, 0.4, "branch", k),   # 3 left -> phase min = 3
     ]
-    packs = packing.build_packs(gs, slice_steps=6, total_steps=6,
-                                sampler="ddim", shape=SHAPE,
-                                align_phases=True)
+    packs = packing.build_packs(gs, slice_steps=6, align_phases=True)
     keyed = {key: groups for key, groups in packs}
     assert len(packs) == 2
     assert keyed[packing.PackKey("shared", "ddim", SHAPE, 1)] \
@@ -184,9 +185,7 @@ def test_build_packs_align_phases_one_bucket_per_phase():
     assert keyed[packing.PackKey("branch", "ddim", SHAPE, 3)] \
         == [gs[2], gs[3]]
     # slice_steps still caps the aligned length
-    capped = packing.build_packs(gs, slice_steps=2, total_steps=6,
-                                 sampler="ddim", shape=SHAPE,
-                                 align_phases=True)
+    capped = packing.build_packs(gs, slice_steps=2, align_phases=True)
     assert {key.n_steps for key, _ in capped} == {1, 2}
 
 

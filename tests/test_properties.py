@@ -158,3 +158,200 @@ def test_hypothesis_path_active_when_installed():
     """Documents which mode this environment runs the suite in (and makes
     the optional dependency's state visible in -v output)."""
     assert HAVE_HYPOTHESIS in (True, False)
+
+
+# ---------------------------------------------------------------------------
+# hetero packing invariants (shapes / samplers / per-row step budgets)
+# ---------------------------------------------------------------------------
+
+class _PackGroup:
+    """Duck-typed group for packing invariants (no model, no scheduler)."""
+
+    _gid = 0
+
+    def __init__(self, state, steps_done, n_shared, total_steps, shape,
+                 sampler, n_members, with_carry=False):
+        self.state = state
+        self.steps_done = steps_done
+        self.n_shared = n_shared
+        self.total_steps = total_steps
+        self.shape = tuple(shape)
+        self.sampler = sampler
+        self.members = list(range(n_members))
+        self.beta = 0.25
+        _PackGroup._gid += 1
+        self.gid = _PackGroup._gid
+        if with_carry:
+            import jax.numpy as jnp
+            rng = np.random.RandomState(self.gid)
+            z = jnp.asarray(rng.randn(n_members, *self.shape)
+                            .astype(np.float32))
+            from repro.core.shared_sampling import SampleCarry
+            self.carry = SampleCarry(z, z * 0.5, jnp.int32(steps_done))
+            self.cond_flat = jnp.asarray(
+                rng.randn(n_members, 3, 4).astype(np.float32))
+
+
+def _mk_groups(specs, with_carry=False):
+    """specs: list of (state_bit, steps_done_frac, total_steps, shape_i,
+    sampler_bit, n_members) drawn by hypothesis; derive a consistent
+    group (steps_done inside the right phase range)."""
+    shapes = [(8, 8, 4), (4, 4, 4), (4, 8, 4)]
+    out = []
+    for st_bit, frac, total, shape_i, smp_bit, n in specs:
+        n_shared = max(0, total // 3)
+        state = "shared" if (st_bit and n_shared > 0) else "branch"
+        if state == "shared":
+            done = int(frac * max(0, n_shared - 1))          # < n_shared
+        else:
+            done = n_shared + int(frac * max(0, total - n_shared - 1))
+        out.append(_PackGroup(state, done, n_shared, total,
+                              shapes[shape_i % 3],
+                              ("ddim", "dpmpp")[smp_bit % 2], n,
+                              with_carry=with_carry))
+    return out
+
+
+def check_packs_never_mix(groups, slice_steps, mix_samplers,
+                          align_phases) -> None:
+    from repro.serving import packing
+    packs = packing.build_packs(groups, slice_steps,
+                                mix_samplers=mix_samplers,
+                                align_phases=align_phases)
+    seen = [g for _, gs in packs for g in gs]
+    assert sorted(id(g) for g in seen) == sorted(id(g) for g in groups)
+    for key, gs in packs:
+        # a bucket NEVER mixes shapes, and the key names the bucket shape
+        assert {g.shape for g in gs} == {key.shape}
+        assert {g.state for g in gs} == {key.phase}
+        if mix_samplers:
+            assert key.sampler == packing.MIXED
+        else:
+            # unmixed: one solver per bucket, named by the key
+            assert {g.sampler for g in gs} == {key.sampler}
+        for g in gs:
+            # no group is dragged past its phase boundary or held at 0
+            assert 1 <= key.n_steps <= packing.phase_remaining(g)
+
+
+def check_grid_rows_and_nfe(groups, sched_T, slice_steps) -> None:
+    """pack_grid row fidelity + exact step-budget conservation under a
+    simulated segment drain (the per-row machinery never over- or
+    under-steps a tier budget)."""
+    from repro.core.schedule import ddim_timesteps
+    from repro.serving import packing
+    grid = np.asarray(packing.pack_grid(groups, sched_T))
+    ts = [g.total_steps for g in groups]
+    if len(set(ts)) == 1:
+        np.testing.assert_array_equal(
+            grid, ddim_timesteps(sched_T, ts[0]))
+    else:
+        assert grid.shape == (len(groups), max(ts) + 1)
+        for j, g in enumerate(groups):
+            own = ddim_timesteps(sched_T, g.total_steps)
+            np.testing.assert_array_equal(grid[j, :len(own)], own)
+            np.testing.assert_array_equal(grid[j, len(own):], 0)
+    # simulated drain: advance per-group min(slice, phase_remaining)
+    for g in groups:
+        stepped = 0
+        guard = 0
+        while g.steps_done < g.total_steps:
+            s = min(slice_steps, packing.phase_remaining(g))
+            assert s >= 1
+            g.steps_done += s
+            stepped += s
+            if g.state == "shared" and g.steps_done == g.n_shared:
+                g.state = "branch"
+            guard += 1
+            assert guard <= 2 * g.total_steps
+        assert g.steps_done == g.total_steps      # exact: never overshoots
+
+
+def check_branch_pack_round_trip(groups, width) -> None:
+    from repro.serving import packing
+    before = [np.asarray(g.carry.z) for g in groups]
+    carry, cond, mask, fork = packing.pack_branch(groups, width)
+    assert carry.z.shape[0] == len(groups) * width
+    rows, pads = packing.pad_stats(groups, width)
+    assert rows == len(groups) * width
+    assert pads == sum(width - len(g.members) for g in groups)
+    np.testing.assert_array_equal(
+        np.asarray(mask).sum(axis=1), [len(g.members) for g in groups])
+    for j, g in enumerate(groups):
+        lo = j * width
+        # pad rows replicate member 0 (mask-0, never reduced)
+        for p in range(len(g.members), width):
+            np.testing.assert_array_equal(np.asarray(carry.z[lo + p]),
+                                          before[j][0])
+        np.testing.assert_array_equal(
+            np.asarray(carry.step_idx[lo:lo + width]), g.steps_done)
+        np.testing.assert_array_equal(
+            np.asarray(fork[lo:lo + width]), g.n_shared)
+    packing.unpack_branch(carry, groups, width)
+    for g, b in zip(groups, before):
+        assert g.carry.z.shape[0] == len(g.members)
+        np.testing.assert_array_equal(np.asarray(g.carry.z), b)
+
+
+_SPEC = st.tuples(st.booleans(), st.floats(0.0, 1.0), st.integers(2, 12),
+                  st.integers(0, 2), st.integers(0, 1), st.integers(1, 4))
+
+
+@given(specs=st.lists(_SPEC, min_size=1, max_size=10),
+       slice_steps=st.integers(1, 6), mix=st.booleans(),
+       align=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_build_packs_never_mixes_shapes_property(specs, slice_steps, mix,
+                                                 align):
+    check_packs_never_mix(_mk_groups(specs), slice_steps, mix, align)
+
+
+@given(specs=st.lists(_SPEC, min_size=1, max_size=8),
+       sched_T=st.integers(50, 1000), slice_steps=st.integers(1, 6))
+@settings(max_examples=60, deadline=None)
+def test_pack_grid_and_nfe_conservation_property(specs, sched_T,
+                                                 slice_steps):
+    check_grid_rows_and_nfe(_mk_groups(specs), sched_T, slice_steps)
+
+
+@given(specs=st.lists(_SPEC, min_size=1, max_size=4),
+       extra=st.integers(0, 2))
+@settings(max_examples=20, deadline=None)
+def test_branch_pack_round_trip_property(specs, extra):
+    # one shape per pack (build_packs guarantees it) — pin shape_i
+    specs = [(False, f, t, 1, s, n) for (_, f, t, _, s, n) in specs]
+    groups = _mk_groups(specs, with_carry=True)
+    width = max(len(g.members) for g in groups) + extra
+    check_branch_pack_round_trip(groups, width)
+
+
+def test_build_packs_never_mixes_shapes_deterministic():
+    rng = np.random.RandomState(7)
+    specs = [(bool(rng.randint(2)), float(rng.rand()),
+              int(rng.randint(2, 12)), int(rng.randint(3)),
+              int(rng.randint(2)), int(rng.randint(1, 5)))
+             for _ in range(12)]
+    for mix in (False, True):
+        for align in (False, True):
+            check_packs_never_mix(_mk_groups(specs), 3, mix, align)
+
+
+def test_pack_grid_and_nfe_conservation_deterministic():
+    rng = np.random.RandomState(11)
+    for _ in range(4):
+        specs = [(bool(rng.randint(2)), float(rng.rand()),
+                  int(rng.randint(2, 12)), int(rng.randint(3)),
+                  int(rng.randint(2)), int(rng.randint(1, 5)))
+                 for _ in range(6)]
+        check_grid_rows_and_nfe(_mk_groups(specs), 1000,
+                                int(rng.randint(1, 6)))
+    # uniform budgets -> the 1-D fast-path grid
+    uni = [(False, 0.5, 6, 0, 0, 2), (True, 0.0, 6, 1, 1, 3)]
+    check_grid_rows_and_nfe(_mk_groups(uni), 100, 2)
+
+
+def test_branch_pack_round_trip_deterministic():
+    specs = [(False, 0.3, 8, 1, 0, 1), (False, 0.9, 4, 1, 1, 3),
+             (False, 0.0, 6, 1, 0, 2)]
+    groups = _mk_groups(specs, with_carry=True)
+    check_branch_pack_round_trip(groups, 3)

@@ -172,7 +172,10 @@ def test_degraded_never_groups_with_full_quality():
     assert s.class_stats[DEFAULT_QOS]["degraded"] == 2
 
 
-def test_degraded_runs_at_max_share_bucket():
+def test_degraded_runs_at_draft_tier_budget():
+    """DEGRADE is now a quality-TIER downgrade: the admitted request runs
+    at the ``degrade_tier`` step budget (its own shorter DDIM grid), not
+    at a forced beta bucket — beta stays on the similarity rule."""
     s = _sched(admission="degrade")
     s.admission.horizon_ticks = 0.5
     s.admission.interactive_headroom = 1.0
@@ -182,9 +185,51 @@ def test_degraded_runs_at_max_share_bucket():
     s.tick(now=2.0)
     degraded = [g for g in s.open_groups + s.inflight if g.degraded]
     assert degraded
-    _run(s, start=2.0)
-    # launched beta snapped to the maximum share bucket (draft NFE)
-    assert degraded[0].beta == max(s.branch_buckets)
+    done = _run(s, start=2.0)
+    assert degraded[0].tier == s.degrade_tier == "draft"
+    assert degraded[0].total_steps == s.tiers["draft"] \
+        < s.tiers["standard"]
+    # beta is NOT forced anymore — it follows the similarity rule
+    assert degraded[0].beta in s.branch_buckets \
+        or degraded[0].beta == s.sage.share_ratio
+    deg = [c for c in done if c.status == "degraded"]
+    ok = [c for c in done if c.status == "ok"]
+    assert deg and ok
+    # the NFE saving comes from the tier budget
+    assert max(c.nfe_share for c in deg) < min(c.nfe_share for c in ok)
+    # tier ledger saw both tiers
+    assert s.tier_stats["draft"]["completed"] == len(deg)
+    assert s.tier_stats["standard"]["completed"] == len(ok)
+
+
+def test_degraded_copacks_with_standard_launch():
+    """The degrade-unification regression: a degraded (draft-tier) group
+    and a standard-tier group must share ONE stacked launch whenever
+    their segments line up — the old forced-max-beta design pushed the
+    degraded group to a different phase boundary and broke co-packing.
+    Distinct themes keep them in separate groups; per-row grids let them
+    ride one branch pack."""
+    s = _sched(admission="degrade", slice_steps=1, group_size=2,
+               max_wait_ticks=0, packed=True)
+    s.submit(["a red circle"], now=0.0)
+    s.tick(now=1.0)                       # standard group in flight
+    s.admission.horizon_ticks = 0.01      # saturate: next arrival degrades
+    s.admission.interactive_headroom = 1.0
+    s.submit(["a blue square totally different"], now=1.0)
+    s.tick(now=2.0)
+    assert any(g.degraded for g in s.open_groups + s.inflight)
+    copacked = False
+    t = 2.0
+    while s.pending and t < 40.0:
+        t += 1.0
+        pre = s.stats["launches"]
+        infl = [(g.tier, g.state) for g in s.inflight]   # pre-tick states
+        s.tick(now=t)
+        advanced = s.stats["launches"] - pre
+        tiers_in_branch = {tr for tr, st in infl if st == "branch"}
+        if len(tiers_in_branch) == 2 and advanced == 1:
+            copacked = True               # two tiers, one stacked launch
+    assert copacked, "draft + standard groups never shared a launch"
 
 
 # ---------------------------------------------------------------------------

@@ -306,7 +306,8 @@ def test_fuzz_overload_degrade_mode_serves_everything():
     clean = [c for c in done if c.status == "ok"]
     assert degraded and clean
     assert sched.stats["degraded"] == len(degraded)
-    # draft NFE: degraded groups run at the max share bucket
+    # draft NFE: degraded requests run at the draft-tier step budget
+    assert all(c.tier == sched.degrade_tier for c in degraded)
     assert (np.mean([c.nfe_share for c in degraded])
             < np.mean([c.nfe_share for c in clean]))
 
@@ -408,3 +409,120 @@ def test_fuzz_lsh_vs_scan_nfe_parity(seed):
     assert s_lsh.stats["nfe"] == s_scan.stats["nfe"]
     assert (s_lsh.stats["nfe_saved_cache"]
             == s_scan.stats["nfe_saved_cache"])
+
+
+# ---------------------------------------------------------------------------
+# mixed-geometry traces: shapes x tiers x samplers drawn per request
+# ---------------------------------------------------------------------------
+
+HETERO_SHAPES = [(8, 8, 4), (4, 4, 4), (4, 8, 4)]
+HETERO_TIERS = ["draft", "standard", "premium"]
+
+
+@pytest.mark.parametrize("seed,rate,use_cache,mix_samplers",
+                         [(20, 1.5, False, False),
+                          (21, 2.5, True, True),
+                          (22, 2.0, True, False)])
+def test_fuzz_hetero_invariants(seed, rate, use_cache, mix_samplers):
+    """Every request independently draws its latent shape, quality tier
+    and solver.  Invariants for ANY such trace:
+
+    * conservation — each prompt back exactly once, drain to empty;
+    * hetero compartments — co-grouped completions share one (shape,
+      tier, sampler), and returned image shapes match the request;
+    * per-tier NFE ledger — summing ``nfe_share`` by completion tier
+      reproduces ``tier_stats``, and the tier/shape rollups close
+      against the request counts;
+    * no cross-shape or cross-budget cache hits — every trunk-cache
+      lookup carries the group's own shape and a cfg_key holding its
+      own (sampler, total_steps);
+    * pad accounting exact — the global pad/rows ledger equals the sum
+      over per-shape buckets (every launch attributed to one bucket).
+    """
+    rng = np.random.RandomState(3000 + seed)
+    cache = TrunkCache(tau_trunk=0.9) if use_cache else None
+    sage = SageConfig(total_steps=4, share_ratio=0.25, guidance_scale=2.0,
+                      tau_min=0.2)
+    sched = RequestScheduler(
+        CFG, sage, PARAMS, TEXT_PARAMS, TC, group_size=3, slice_steps=2,
+        max_wait_ticks=2, packed=True, trunk_cache=cache,
+        mix_samplers=mix_samplers)
+
+    lookups = []
+    if cache is not None:
+        orig_lookup = cache.lookup
+
+        def spy(centroid, beta, cfg_key, shape, payload="trunk"):
+            lookups.append((cfg_key, tuple(shape)))
+            return orig_lookup(centroid, beta, cfg_key, shape,
+                               payload=payload)
+        cache.lookup = spy
+
+    trace = _trace(seed, ticks=6, rate=rate)
+    submitted, axes, done, t = [], {}, [], 0.0
+    for wave in trace:
+        t += 1.0
+        if wave:
+            shp = [HETERO_SHAPES[rng.randint(3)] for _ in wave]
+            tr = [HETERO_TIERS[rng.randint(3)] for _ in wave]
+            smp = [("ddim", "dpmpp")[rng.randint(2)] for _ in wave]
+            sched.submit(wave, now=t, shape=shp, tier=tr, sampler=smp)
+            submitted.extend(wave)
+            for p, a in zip(wave, zip(shp, tr, smp)):
+                axes[p] = a
+        done.extend(sched.tick(now=t))
+    done.extend(sched.drain(now=t))
+
+    # conservation
+    assert sched.pending == 0
+    assert not (sched.arrivals or sched.open_groups or sched.inflight)
+    assert sorted(c.prompt for c in done) == sorted(submitted)
+
+    # hetero compartments + returned geometry
+    by_gid = {}
+    for c in done:
+        by_gid.setdefault(c.group_id, []).append(c)
+        shape, tier, _ = axes[c.prompt]
+        assert c.tier == tier
+        assert tuple(c.image.shape) == shape      # no VAE: raw latents
+    for cs in by_gid.values():
+        assert len({axes[c.prompt] for c in cs}) == 1
+
+    # per-tier NFE ledger closes
+    assert np.isclose(sum(c.nfe_share for c in done), sched.stats["nfe"])
+    for tier in HETERO_TIERS:
+        share = sum(c.nfe_share for c in done if c.tier == tier)
+        ts = sched.tier_stats.get(tier, {"nfe": 0.0, "completed": 0,
+                                         "requests": 0})
+        assert np.isclose(share, ts["nfe"]), (tier, share, ts)
+        assert ts["completed"] == sum(1 for c in done if c.tier == tier)
+        assert ts["requests"] == sum(1 for p in submitted
+                                     if axes[p][1] == tier)
+
+    # cache lookups never cross shape or budget compartments
+    if cache is not None:
+        assert lookups, "cached trace never consulted the cache"
+        for cfg_key, shape in lookups:
+            assert shape in {s for s, _, _ in axes.values()}
+            smp, total = cfg_key[2], cfg_key[4]
+            assert smp in ("ddim", "dpmpp")
+            assert total in {sched.tiers[x] for x in HETERO_TIERS}
+
+    # pad ledger: global == sum over shape buckets, exactly
+    ss = sched.shape_stats
+    assert sum(b["launches"] for b in ss.values()) \
+        == sched.stats["launches"]
+    assert sum(b["rows"] for b in ss.values()) == sched.stats["pack_rows"]
+    assert sum(b["pad_rows"] for b in ss.values()) \
+        == sched.stats["pack_pad_rows"]
+    for key, b in ss.items():
+        assert 0 <= b["pad_rows"] <= b["rows"]
+        assert tuple(int(x) for x in key.split("x")) in set(
+            s for s, _, _ in axes.values())
+
+    # summary exposes the hetero rollups consistently
+    s = sched.summary()
+    for tier, ts in sched.tier_stats.items():
+        assert s[f"tier_{tier}_completed"] == ts["completed"]
+    for key, b in ss.items():
+        assert s[f"shape_{key}_launches"] == b["launches"]
